@@ -1,0 +1,87 @@
+//! Cluster simulation sweeps: paper-scale throughput studies (Figures 9 and
+//! 10 style) on configurable virtual clusters — change the interconnect and
+//! watch the crossovers move.
+//!
+//! ```bash
+//! cargo run --release --example cluster_sim                 # paper testbed
+//! cargo run --release --example cluster_sim -- --ib-gbps 50 # faster fabric
+//! cargo run --release --example cluster_sim -- --model gpt-96
+//! ```
+
+use bitpipe::config::{ClusterConfig, ModelConfig, ParallelConfig, BERT_64};
+use bitpipe::schedule::ScheduleKind;
+use bitpipe::sim::{simulate, SimConfig};
+use bitpipe::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut model = BERT_64;
+    let mut ib_gbps = 200.0f64;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--model" => {
+                model = ModelConfig::by_name(&args[i + 1]).expect("unknown model");
+                i += 2;
+            }
+            "--ib-gbps" => {
+                ib_gbps = args[i + 1].parse()?;
+                i += 2;
+            }
+            other => anyhow::bail!("unknown flag {other}"),
+        }
+    }
+    let b = if model.name == "gpt-96" { 1 } else { 4 };
+
+    println!("model = {} (B = {b}), inter-node fabric = {ib_gbps} Gbps\n", model.name);
+
+    // Fig 9 style: pipeline-only on 8 devices, mini-batch scaling.
+    println!("-- pipeline-only, 8 devices (Fig 9 style) --");
+    let mut t = Table::new(vec!["N", "dapple", "1f1b-int", "chimera", "mixpipe", "bitpipe"]);
+    for n in [8usize, 16, 32] {
+        let mut row = vec![n.to_string()];
+        for kind in [
+            ScheduleKind::Dapple,
+            ScheduleKind::Interleaved,
+            ScheduleKind::Chimera,
+            ScheduleKind::MixPipe,
+            ScheduleKind::BitPipe,
+        ] {
+            let mut cluster = ClusterConfig::paper_testbed(8);
+            cluster.ib_bw = ib_gbps * 1e9 / 8.0;
+            let parallel = ParallelConfig::new(kind, 1, 8, b, n);
+            let r = simulate(&SimConfig { model, parallel, cluster })?;
+            row.push(format!("{:.2}", r.throughput));
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+
+    // Fig 10 style: weak scaling with data parallelism.
+    println!("-- with data parallelism, D=8, N=D (Fig 10 style) --");
+    let mut t = Table::new(vec!["GPUs", "W", "dapple", "1f1b-int", "mixpipe", "bitpipe"]);
+    for gpus in [8usize, 16, 32, 64] {
+        let w = gpus / 8;
+        let mut row = vec![gpus.to_string(), w.to_string()];
+        for kind in [
+            ScheduleKind::Dapple,
+            ScheduleKind::Interleaved,
+            ScheduleKind::MixPipe,
+            ScheduleKind::BitPipe,
+        ] {
+            let mut cluster = ClusterConfig::paper_testbed(gpus);
+            cluster.ib_bw = ib_gbps * 1e9 / 8.0;
+            let parallel = ParallelConfig::new(kind, w, 8, b, 8);
+            let r = simulate(&SimConfig { model, parallel, cluster })?;
+            row.push(format!("{:.2}", r.throughput));
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+
+    println!(
+        "Expected shape (paper Figs 9-10): BitPipe leads everywhere; its edge narrows as\n\
+         N grows (more P2P) and as the inter-node share grows (allreduce on slower links)."
+    );
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Schedule explorer: render ASCII timelines and analytic reports for every
+//! schedule family — the paper's Figures 1, 2, 3 and 13 as text.
+//!
+//! ```bash
+//! cargo run --release --example schedule_explorer            # D=4, N=4 and N=8
+//! cargo run --release --example schedule_explorer -- 8 16    # D=8, N=16
+//! ```
+
+use bitpipe::schedule::{
+    self, analysis, timeline, Costs, ScheduleConfig, ScheduleKind,
+};
+use bitpipe::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let d: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let ns: Vec<usize> = if let Some(n) = args.get(1) {
+        vec![n.parse()?]
+    } else {
+        vec![d, 2 * d]
+    };
+    let costs = Costs::default();
+
+    for &n in &ns {
+        println!("================ D={d}, N={n} ================\n");
+        let mut summary = Table::new(vec![
+            "schedule",
+            "makespan",
+            "bubble (measured)",
+            "bubble (formula)",
+            "P2P",
+            "copies",
+            "peak stash /M_a",
+        ]);
+        for kind in ScheduleKind::ALL {
+            let cfg = ScheduleConfig::new(kind, d, n);
+            let s = match schedule::build(&cfg) {
+                Ok(s) => s,
+                Err(e) => {
+                    println!("{kind}: skipped ({e})\n");
+                    continue;
+                }
+            };
+            schedule::validate::validate(&s)?;
+            let opts = timeline::RenderOpts {
+                ticks_per_col: if n > d { 3 } else { 1 },
+                show_stage: false,
+            };
+            println!("--- {kind} ---");
+            println!("{}", timeline::render(&s, &costs, &opts)?);
+            let r = analysis::report(&s, &costs)?;
+            summary.row(vec![
+                kind.name().to_string(),
+                r.makespan.to_string(),
+                format!("{:.3}", r.bubble_ratio_measured),
+                format!("{:.3}", r.bubble_ratio_formula),
+                r.comm_measured.p2p_messages.to_string(),
+                r.comm_measured.local_copies.to_string(),
+                format!("{:.1}", r.act_mem_measured.1),
+            ]);
+        }
+        println!("{}", summary.render());
+    }
+    Ok(())
+}

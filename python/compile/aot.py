@@ -1,0 +1,158 @@
+"""AOT lowering: chunk functions -> HLO text artifacts + manifest + init
+parameter vectors.
+
+Run once at build time (``make artifacts``); the rust coordinator is fully
+self-contained afterwards. Interchange format is HLO **text**, not
+serialized ``HloModuleProto``: jax >= 0.5 emits protos with 64-bit
+instruction ids which the crate's xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs in ``--out`` (default ``artifacts/``):
+
+* ``<name>.hlo.txt``      — one per entry in :data:`model.ARTIFACT_NAMES`;
+* ``init_stage<k>.bin``   — raw little-endian f32 initial parameter vector
+  for pipeline stage ``k`` (deterministic seed per stage);
+* ``manifest.txt``        — key=value contract consumed by
+  ``rust/src/runtime/manifest.rs``: geometry, artifact files, flat param
+  lengths, init files, and a self-check loss for the rust integration test.
+
+Usage::
+
+    python -m compile.aot --model gpt-tiny --out artifacts
+    python -m compile.aot --hidden 256 --seq 128 --batch 4 --vocab 512 \
+        --heads 8 --layers 8 --n-chunks 8 --out artifacts
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+if __package__ in (None, ""):
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from compile import model  # type: ignore
+else:
+    from . import model
+
+# Named presets mirroring rust/src/config/model.rs.
+PRESETS = {
+    # name: (batch, seq, hidden, heads, vocab, layers, n_chunks)
+    "gpt-tiny": (4, 128, 256, 8, 512, 8, 8),
+    "gpt-small": (2, 256, 768, 12, 2048, 12, 4),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def role_of_stage(stage: int, n_chunks: int) -> str:
+    if stage == 0:
+        return "embed"
+    if stage + 1 == n_chunks:
+        return "head"
+    return "mid"
+
+
+def selfcheck_loss(d: model.Dims, n_chunks: int, seed_base: int) -> float:
+    """Composed-model loss on a fixed batch with the init params — the
+    number the rust integration test must reproduce through the artifacts.
+    """
+    rng = np.random.default_rng(12345)
+    tokens = jnp.asarray(rng.integers(0, d.vocab, (d.batch, d.seq)), jnp.int32)
+    targets = jnp.asarray(rng.integers(0, d.vocab, (d.batch, d.seq)), jnp.int32)
+    flats = [
+        jnp.asarray(model.init_chunk(role_of_stage(k, n_chunks), d, seed_base + k))
+        for k in range(n_chunks)
+    ]
+    return float(model.full_model_loss(tokens, targets, flats, d))
+
+
+def build(out_dir: str, d: model.Dims, n_chunks: int, seed_base: int = 1000,
+          model_name: str = "custom") -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    lines = [
+        f"# BitPipe AOT artifacts — model={model_name}",
+        f"model={model_name}",
+        f"hidden={d.hidden}",
+        f"seq={d.seq}",
+        f"batch={d.batch}",
+        f"vocab={d.vocab}",
+        f"heads={d.heads}",
+        f"n_chunks={n_chunks}",
+        f"layers_per_chunk={d.layers_per_chunk}",
+    ]
+
+    for role in ("embed", "mid", "head"):
+        lines.append(f"params.{role}={model.param_len(role, d)}")
+
+    for name in model.ARTIFACT_NAMES:
+        fn = model.jitted(name, d)
+        args = model.example_args(name, d)
+        lowered = fn.lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        lines.append(f"artifact.{name}={fname}")
+        print(f"  lowered {name:10s} -> {fname} ({len(text)/1e6:.1f} MB)")
+
+    for k in range(n_chunks):
+        role = role_of_stage(k, n_chunks)
+        flat = model.init_chunk(role, d, seed_base + k)
+        fname = f"init_stage{k}.bin"
+        flat.astype("<f4").tofile(os.path.join(out_dir, fname))
+        lines.append(f"init.{k}={fname}")
+    print(f"  wrote {n_chunks} init vectors")
+
+    loss = selfcheck_loss(d, n_chunks, seed_base)
+    lines.append(f"selfcheck.loss={loss:.6f}")
+    print(f"  selfcheck loss = {loss:.6f} (~ln V = {np.log(d.vocab):.3f})")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"  manifest.txt written to {out_dir}/")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", choices=sorted(PRESETS), default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--heads", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--n-chunks", type=int, default=8)
+    ap.add_argument("--seed-base", type=int, default=1000)
+    ap.add_argument("--out", default="artifacts")
+    args = ap.parse_args()
+
+    if args.model:
+        (args.batch, args.seq, args.hidden, args.heads, args.vocab,
+         args.layers, args.n_chunks) = PRESETS[args.model]
+    assert args.layers % args.n_chunks == 0, \
+        f"layers={args.layers} must divide into n_chunks={args.n_chunks}"
+    assert args.n_chunks >= 2, "need at least embed + head chunks"
+
+    d = model.Dims(batch=args.batch, seq=args.seq, hidden=args.hidden,
+                   heads=args.heads, vocab=args.vocab,
+                   layers_per_chunk=args.layers // args.n_chunks)
+    name = args.model or "custom"
+    print(f"AOT: model={name} B={d.batch} S={d.seq} H={d.hidden} "
+          f"heads={d.heads} V={d.vocab} layers/chunk={d.layers_per_chunk} "
+          f"chunks={args.n_chunks} -> {args.out}/")
+    build(args.out, d, args.n_chunks, args.seed_base, name)
+
+
+if __name__ == "__main__":
+    main()

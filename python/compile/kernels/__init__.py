@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .attention import flash_attention
+from .fused_ops import layernorm
+
+__all__ = ["flash_attention", "layernorm"]

@@ -1,0 +1,170 @@
+"""Layer-1 Pallas flash-attention kernel (TPU-style, interpret mode on CPU).
+
+The paper (BitPipe) targets A800 GPUs, but its contribution is the
+*schedule*; the per-micro-batch hot spot is transformer-layer compute.
+Following the hardware-adaptation rule, the attention core is written as a
+Pallas kernel re-thought for the TPU memory hierarchy:
+
+* the grid tiles queries into ``block_q`` panels per (batch*head) program —
+  the BlockSpec expresses the HBM->VMEM schedule a CUDA flash-attention
+  does with threadblocks;
+* keys/values stream through VMEM in ``block_k`` panels with online-softmax
+  accumulation (never materializing the S x S score matrix);
+* panel contractions are plain ``jnp.dot`` so they lower onto the MXU
+  systolic array on real hardware.
+
+``interpret=True`` is mandatory here: the kernel lowers to plain HLO that
+the CPU PJRT client (and the rust ``xla`` crate) can execute. Real-TPU
+lowering would emit a Mosaic custom-call instead; VMEM footprint and MXU
+utilization for that target are estimated in DESIGN.md §Perf.
+
+The backward pass recomputes attention from the stashed q/k/v
+(flash-attention-style rematerialization) using the closed-form softmax
+VJP; it is registered through ``jax.custom_vjp`` so the kernel is
+differentiable inside the Layer-2 chunk functions.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default panel sizes. 128 x head_dim f32 panels keep the working set
+# (q panel + k/v panels + accumulators) comfortably under 1 MiB of VMEM
+# (see DESIGN.md §Perf for the footprint math) while feeding the MXU
+# full-width 128-lane contractions. On the CPU validation target the
+# larger panels also halve interpret-mode loop overhead (§Perf: 18.2 ms ->
+# 11.9 ms per attention call at B=4, H=8, S=128, d=32).
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+_NEG_INF = -1e30
+
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float,
+                     causal: bool):
+    """One program: one q panel against all k/v panels (online softmax).
+
+    Ref shapes (leading batch*head dim mapped by the BlockSpec):
+      q_ref: [1, block_q, d]    o_ref: [1, block_q, d]
+      k_ref: [1, S, d]          v_ref: [1, S, d]
+    """
+    q = q_ref[0].astype(jnp.float32) * scale          # [bq, d]
+    block_q, d = q.shape
+    s_len = k_ref.shape[1]
+    qi = pl.program_id(1)
+    n_kb = s_len // block_k
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[0, pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        s = jnp.dot(q, k.T)                            # [bq, bk] -> MXU
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= rows, s, _NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v)     # [bq, d] -> MXU
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    if causal:
+        # Panels strictly above the diagonal contribute nothing; stop the
+        # scan at the last panel intersecting this q panel.
+        upper = (qi + 1) * block_q + block_k - 1
+        n_iter = jnp.minimum(n_kb, upper // block_k)
+    else:
+        n_iter = n_kb
+    m, l, acc = jax.lax.fori_loop(0, n_iter, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _flash_attention_fwd(q, k, v, *, causal: bool, block_q: int, block_k: int):
+    """Pallas forward over merged batch*head leading dim.
+
+    q, k, v: [BH, S, d] -> out [BH, S, d].
+    """
+    bh, s_len, d = q.shape
+    assert s_len % block_q == 0 and s_len % block_k == 0, (
+        f"seq len {s_len} must be a multiple of block sizes "
+        f"({block_q}, {block_k})")
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _attn_fwd_kernel, block_k=block_k, scale=scale, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s_len // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s_len, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s_len, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _attention_bwd_math(q, k, v, do, *, causal: bool):
+    """Closed-form attention VJP (recompute-from-inputs, O(S^2) per head).
+
+    All inputs [BH, S, d]. Returns (dq, dk, dv).
+    """
+    d = q.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    if causal:
+        s_len = q.shape[1]
+        mask = jnp.tril(jnp.ones((s_len, s_len), bool))
+        s = jnp.where(mask[None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    dv = jnp.einsum("bqk,bqd->bkd", p, do)
+    dp = jnp.einsum("bqd,bkd->bqk", do, v)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bqk,bkd->bqd", ds, k) * scale
+    dk = jnp.einsum("bqk,bqd->bkd", ds, q) * scale
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K):
+    """Multi-head attention core.
+
+    q, k, v: [B, H, S, d]; returns [B, H, S, d]. ``causal=True`` applies the
+    autoregressive mask (GPT); ``False`` gives full bidirectional attention
+    (BERT).
+    """
+    b, h, s_len, d = q.shape
+    bq = min(block_q, s_len)
+    bk = min(block_k, s_len)
+    merged = lambda t: t.reshape(b * h, s_len, d)
+    out = _flash_attention_fwd(merged(q), merged(k), merged(v),
+                               causal=causal, block_q=bq, block_k=bk)
+    return out.reshape(b, h, s_len, d)
+
+
+def _fa_fwd(q, k, v, causal, block_q, block_k):
+    out = flash_attention(q, k, v, causal, block_q, block_k)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, block_q, block_k, res, g):
+    q, k, v = res
+    b, h, s_len, d = q.shape
+    merged = lambda t: t.reshape(b * h, s_len, d)
+    dq, dk, dv = _attention_bwd_math(
+        merged(q), merged(k), merged(v), merged(g), causal=causal)
+    unmerge = lambda t: t.reshape(b, h, s_len, d)
+    return unmerge(dq), unmerge(dk), unmerge(dv)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

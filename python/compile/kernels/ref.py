@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels (Layer-1 correctness ground
+truth). Every kernel in this package is checked against these references by
+``python/tests/test_kernel.py`` (hypothesis shape/dtype sweeps) before the
+AOT artifacts are considered valid.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Naive softmax attention. q, k, v: [B, H, S, d]."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (d ** 0.5)
+    if causal:
+        s_len = q.shape[2]
+        mask = jnp.tril(jnp.ones((s_len, s_len), bool))
+        s = jnp.where(mask[None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def layernorm_ref(x, gamma, beta, eps: float = 1e-5):
+    """LayerNorm over the last axis."""
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta

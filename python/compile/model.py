@@ -1,0 +1,260 @@
+"""Layer-2: the chunked GPT transformer (build-time JAX, calls the Layer-1
+Pallas kernels), plus flat parameter packing.
+
+The model is split into ``n_chunks`` pipeline stages:
+
+* stage 0 (role ``embed``): token + position embeddings, then
+  ``layers_per_chunk`` transformer layers;
+* stages 1..n-2 (role ``mid``): ``layers_per_chunk`` transformer layers;
+* stage n-1 (role ``head``): ``layers_per_chunk`` layers, final LayerNorm,
+  LM head projection, mean cross-entropy loss.
+
+Every chunk exposes a *flat f32 vector* parameter interface so the rust
+coordinator never needs to know the pytree structure: the AOT artifacts
+take/return ``f32[P]`` alongside activations. Backward functions recompute
+the chunk forward from the stashed chunk *input* (per-chunk
+rematerialization) — the activation stash the schedules account for is
+exactly one chunk input per in-flight micro-batch, matching the paper's
+`M_a` accounting.
+
+All shapes are static (AOT): ``Dims(batch, seq, hidden, heads, vocab,
+layers_per_chunk)``.
+"""
+
+import dataclasses
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import flash_attention, layernorm
+
+
+@dataclasses.dataclass(frozen=True)
+class Dims:
+    """Static chunk geometry."""
+    batch: int
+    seq: int
+    hidden: int
+    heads: int
+    vocab: int
+    layers_per_chunk: int
+
+    def __post_init__(self):
+        assert self.hidden % self.heads == 0, "hidden must divide by heads"
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+
+# --------------------------------------------------------------------------
+# Parameter specs and flat packing
+# --------------------------------------------------------------------------
+
+def layer_spec(d: Dims) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(name, shape) list for one transformer layer."""
+    h = d.hidden
+    return [
+        ("ln1_g", (h,)), ("ln1_b", (h,)),
+        ("qkv_w", (h, 3 * h)), ("qkv_b", (3 * h,)),
+        ("proj_w", (h, h)), ("proj_b", (h,)),
+        ("ln2_g", (h,)), ("ln2_b", (h,)),
+        ("mlp1_w", (h, 4 * h)), ("mlp1_b", (4 * h,)),
+        ("mlp2_w", (4 * h, h)), ("mlp2_b", (h,)),
+    ]
+
+
+def chunk_spec(role: str, d: Dims) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(name, shape) list for a chunk of the given role."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = []
+    if role == "embed":
+        spec.append(("tok_emb", (d.vocab, d.hidden)))
+        spec.append(("pos_emb", (d.seq, d.hidden)))
+    for i in range(d.layers_per_chunk):
+        spec.extend((f"l{i}.{n}", s) for n, s in layer_spec(d))
+    if role == "head":
+        spec.append(("lnf_g", (d.hidden,)))
+        spec.append(("lnf_b", (d.hidden,)))
+        spec.append(("out_w", (d.hidden, d.vocab)))
+    return spec
+
+
+def param_len(role: str, d: Dims) -> int:
+    """Flat parameter count of a chunk role."""
+    return sum(int(np.prod(s)) for _, s in chunk_spec(role, d))
+
+
+def unpack(flat, role: str, d: Dims) -> dict:
+    """Flat f32[P] -> {name: array} for the chunk."""
+    out = {}
+    off = 0
+    for name, shape in chunk_spec(role, d):
+        n = int(np.prod(shape))
+        out[name] = flat[off:off + n].reshape(shape)
+        off += n
+    assert off == flat.shape[0], f"{role}: flat len {flat.shape[0]} != {off}"
+    return out
+
+
+def pack(params: dict, role: str, d: Dims):
+    """{name: array} -> flat f32[P] (inverse of :func:`unpack`)."""
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in chunk_spec(role, d)])
+
+
+def init_chunk(role: str, d: Dims, seed: int) -> np.ndarray:
+    """Deterministic initialization of one chunk's flat parameter vector.
+
+    Matmul weights ~ N(0, 0.02^2) (GPT-2 style), embedding rows likewise,
+    biases zero, LayerNorm gains one. Returned as numpy so the AOT step can
+    dump it straight to ``init_stage<k>.bin``.
+    """
+    rng = np.random.default_rng(seed)
+    parts = []
+    for name, shape in chunk_spec(role, d):
+        leaf = name.rsplit(".", 1)[-1]
+        if leaf.endswith("_g"):                 # LayerNorm gains
+            parts.append(np.ones(shape, np.float32))
+        elif leaf.endswith("_b"):               # biases / LayerNorm shifts
+            parts.append(np.zeros(shape, np.float32))
+        else:                                   # matmuls and embeddings
+            parts.append(rng.normal(0.0, 0.02, shape).astype(np.float32))
+    flat = np.concatenate([p.reshape(-1) for p in parts])
+    assert flat.shape[0] == param_len(role, d)
+    return flat
+
+
+# --------------------------------------------------------------------------
+# Chunk forward functions
+# --------------------------------------------------------------------------
+
+def _transformer_layer(x, p: dict, prefix: str, d: Dims):
+    """Pre-LN transformer layer: x [B, S, H] -> [B, S, H]."""
+    g = lambda n: p[f"{prefix}.{n}"]
+    h = layernorm(x, g("ln1_g"), g("ln1_b"))
+    qkv = h @ g("qkv_w") + g("qkv_b")                       # [B, S, 3H]
+    b, s, _ = x.shape
+    qkv = qkv.reshape(b, s, 3, d.heads, d.head_dim)
+    q, k, v = (qkv[:, :, i].transpose(0, 2, 1, 3) for i in range(3))
+    att = flash_attention(q, k, v, True)                    # [B, Hh, S, dh]
+    att = att.transpose(0, 2, 1, 3).reshape(b, s, d.hidden)
+    x = x + att @ g("proj_w") + g("proj_b")
+    h = layernorm(x, g("ln2_g"), g("ln2_b"))
+    h = jax.nn.gelu(h @ g("mlp1_w") + g("mlp1_b"))
+    return x + h @ g("mlp2_w") + g("mlp2_b")
+
+
+def _run_layers(x, p: dict, d: Dims):
+    for i in range(d.layers_per_chunk):
+        x = _transformer_layer(x, p, f"l{i}", d)
+    return x
+
+
+def embed_fwd(tokens, flat, d: Dims):
+    """tokens i32[B, S], flat f32[Pe] -> activation f32[B, S, H]."""
+    p = unpack(flat, "embed", d)
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :, :]
+    return _run_layers(x, p, d)
+
+
+def mid_fwd(x, flat, d: Dims):
+    """x f32[B, S, H], flat f32[Pm] -> f32[B, S, H]."""
+    return _run_layers(x, unpack(flat, "mid", d), d)
+
+
+def head_fwd(x, targets, flat, d: Dims):
+    """x f32[B, S, H], targets i32[B, S], flat f32[Ph] -> mean NLL f32[]."""
+    p = unpack(flat, "head", d)
+    x = _run_layers(x, p, d)
+    x = layernorm(x, p["lnf_g"], p["lnf_b"])
+    logits = x @ p["out_w"]                                 # [B, S, V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return nll.mean()
+
+
+# --------------------------------------------------------------------------
+# Chunk backward functions (recompute-from-input)
+# --------------------------------------------------------------------------
+
+def embed_bwd(tokens, g, flat, d: Dims):
+    """VJP of embed_fwd w.r.t. flat params. Returns dflat f32[Pe]."""
+    _, vjp = jax.vjp(lambda f: embed_fwd(tokens, f, d), flat)
+    (dflat,) = vjp(g)
+    return dflat
+
+
+def mid_bwd(x, g, flat, d: Dims):
+    """VJP of mid_fwd. Returns (dx, dflat)."""
+    _, vjp = jax.vjp(lambda xi, f: mid_fwd(xi, f, d), x, flat)
+    return vjp(g)
+
+
+def head_bwd(x, targets, flat, d: Dims):
+    """Loss + VJP of head_fwd (upstream gradient is 1.0).
+
+    Returns (loss f32[], dx f32[B,S,H], dflat f32[Ph]).
+    """
+    loss, vjp = jax.vjp(lambda xi, f: head_fwd(xi, targets, f, d), x, flat)
+    dx, dflat = vjp(jnp.ones_like(loss))
+    return loss, dx, dflat
+
+
+# --------------------------------------------------------------------------
+# Whole-model reference (pytest oracle for the chunked decomposition)
+# --------------------------------------------------------------------------
+
+def full_model_loss(tokens, targets, flats: List, d: Dims):
+    """Compose all chunks sequentially: the unpipelined ground truth."""
+    x = embed_fwd(tokens, flats[0], d)
+    for flat in flats[1:-1]:
+        x = mid_fwd(x, flat, d)
+    return head_fwd(x, targets, flats[-1], d)
+
+
+def full_model_grads(tokens, targets, flats: List, d: Dims):
+    """Loss and per-chunk flat gradients of the composed model."""
+    loss, vjp = jax.vjp(
+        lambda fs: full_model_loss(tokens, targets, fs, d), list(flats))
+    (dflats,) = vjp(jnp.ones_like(loss))
+    return loss, dflats
+
+
+# --------------------------------------------------------------------------
+# Jitted entry points (what aot.py lowers)
+# --------------------------------------------------------------------------
+
+def jitted(role_fn: str, d: Dims):
+    """Return the jitted chunk function named by the artifact key."""
+    fns = {
+        "fwd_embed": lambda t, f: (embed_fwd(t, f, d),),
+        "fwd_mid": lambda x, f: (mid_fwd(x, f, d),),
+        "fwd_head": lambda x, t, f: (head_fwd(x, t, f, d),),
+        "bwd_embed": lambda t, g, f: (embed_bwd(t, g, f, d),),
+        "bwd_mid": lambda x, g, f: mid_bwd(x, g, f, d),
+        "bwd_head": lambda x, t, f: head_bwd(x, t, f, d),
+    }
+    return jax.jit(fns[role_fn])
+
+
+def example_args(role_fn: str, d: Dims):
+    """ShapeDtypeStructs matching :func:`jitted`'s signature."""
+    f32, i32 = jnp.float32, jnp.int32
+    act = jax.ShapeDtypeStruct((d.batch, d.seq, d.hidden), f32)
+    tok = jax.ShapeDtypeStruct((d.batch, d.seq), i32)
+    p = lambda role: jax.ShapeDtypeStruct((param_len(role, d),), f32)
+    return {
+        "fwd_embed": (tok, p("embed")),
+        "fwd_mid": (act, p("mid")),
+        "fwd_head": (act, tok, p("head")),
+        "bwd_embed": (tok, act, p("embed")),
+        "bwd_mid": (act, act, p("mid")),
+        "bwd_head": (act, tok, p("head")),
+    }[role_fn]
+
+
+ARTIFACT_NAMES = ["fwd_embed", "fwd_mid", "fwd_head",
+                  "bwd_embed", "bwd_mid", "bwd_head"]

@@ -1,0 +1,162 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py — the core
+correctness signal gating the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, layernorm
+from compile.kernels.ref import attention_ref, layernorm_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+attn_shapes = st.tuples(
+    st.integers(1, 3),                      # batch
+    st.integers(1, 4),                      # heads
+    st.sampled_from([16, 32, 64, 128]),     # seq
+    st.sampled_from([8, 16, 32, 64]),       # head dim
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=attn_shapes, causal=st.booleans(), seed=st.integers(0, 2**31))
+def test_attention_matches_ref(shape, causal, seed):
+    b, h, s, d = shape
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, (b, h, s, d), jnp.float32) for _ in range(3))
+    out = flash_attention(q, k, v, causal)
+    ref = attention_ref(q, k, v, causal)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31), causal=st.booleans())
+def test_attention_grads_match_ref(seed, causal):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, (2, 2, 32, 16), jnp.float32) for _ in range(3))
+    co = jnp.asarray(rng.normal(size=(2, 2, 32, 16)), jnp.float32)
+
+    def f(q, k, v):
+        return (flash_attention(q, k, v, causal) * co).sum()
+
+    def fr(q, k, v):
+        return (attention_ref(q, k, v, causal) * co).sum()
+
+    got = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for g, w, name in zip(got, want, "qkv"):
+        np.testing.assert_allclose(g, w, atol=5e-5, rtol=5e-5,
+                                   err_msg=f"d{name}")
+
+
+def test_attention_block_sizes_agree():
+    # Different panel tilings must give the same function value.
+    rng = np.random.default_rng(0)
+    q, k, v = (_rand(rng, (1, 2, 128, 32), jnp.float32) for _ in range(3))
+    base = flash_attention(q, k, v, True, 64, 64)
+    for bq, bk in [(32, 32), (128, 64), (64, 128), (128, 128), (32, 64)]:
+        out = flash_attention(q, k, v, True, bq, bk)
+        np.testing.assert_allclose(out, base, atol=2e-5, rtol=2e-5,
+                                   err_msg=f"bq={bq} bk={bk}")
+
+
+def test_attention_causal_ignores_future():
+    # Perturbing position j must not change outputs at positions < j.
+    rng = np.random.default_rng(1)
+    q, k, v = (_rand(rng, (1, 1, 64, 16), jnp.float32) for _ in range(3))
+    out1 = flash_attention(q, k, v, True)
+    k2 = k.at[:, :, 50:, :].add(100.0)
+    v2 = v.at[:, :, 50:, :].add(100.0)
+    out2 = flash_attention(q, k2, v2, True)
+    np.testing.assert_allclose(out1[:, :, :50], out2[:, :, :50],
+                               atol=1e-6, rtol=1e-6)
+    assert not np.allclose(out1[:, :, 50:], out2[:, :, 50:])
+
+
+def test_attention_jit_and_lower():
+    # The kernel must lower inside jit (the AOT requirement).
+    rng = np.random.default_rng(2)
+    q, k, v = (_rand(rng, (1, 2, 32, 16), jnp.float32) for _ in range(3))
+    f = jax.jit(lambda q, k, v: flash_attention(q, k, v, True))
+    np.testing.assert_allclose(f(q, k, v), attention_ref(q, k, v, True),
+                               atol=2e-5, rtol=2e-5)
+    hlo = f.lower(q, k, v).compiler_ir("stablehlo")
+    assert "stablehlo" in str(hlo)
+
+
+# ---------------------------------------------------------------------------
+# fused layernorm
+# ---------------------------------------------------------------------------
+
+ln_shapes = st.tuples(
+    st.integers(1, 4),                      # batch
+    st.sampled_from([1, 7, 16, 64, 128]),   # rows
+    st.sampled_from([8, 32, 64, 256]),      # hidden
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=ln_shapes, seed=st.integers(0, 2**31))
+def test_layernorm_matches_ref(shape, seed):
+    b, s, h = shape
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (b, s, h), jnp.float32)
+    g = _rand(rng, (h,), jnp.float32)
+    be = _rand(rng, (h,), jnp.float32)
+    np.testing.assert_allclose(layernorm(x, g, be), layernorm_ref(x, g, be),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_layernorm_grads_match_ref(seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (2, 16, 32), jnp.float32)
+    g = _rand(rng, (32,), jnp.float32)
+    be = _rand(rng, (32,), jnp.float32)
+    co = _rand(rng, (2, 16, 32), jnp.float32)
+
+    def f(x, g, b):
+        return (layernorm(x, g, b) * co).sum()
+
+    def fr(x, g, b):
+        return (layernorm_ref(x, g, b) * co).sum()
+
+    got = jax.grad(f, argnums=(0, 1, 2))(x, g, be)
+    want = jax.grad(fr, argnums=(0, 1, 2))(x, g, be)
+    for a, b_, name in zip(got, want, ["dx", "dgamma", "dbeta"]):
+        np.testing.assert_allclose(a, b_, atol=2e-4, rtol=2e-4, err_msg=name)
+
+
+def test_layernorm_normalizes():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (4, 64, 32), jnp.float32) * 10 + 5
+    y = layernorm(x, jnp.ones(32), jnp.zeros(32))
+    np.testing.assert_allclose(np.mean(y, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(y, -1), 1.0, atol=1e-3)
+
+
+def test_layernorm_odd_row_counts():
+    # Row counts not divisible by the default block must still work.
+    rng = np.random.default_rng(4)
+    for rows in [1, 3, 13, 63, 65, 127]:
+        x = _rand(rng, (rows, 16), jnp.float32)
+        g, b = jnp.ones(16), jnp.zeros(16)
+        np.testing.assert_allclose(layernorm(x, g, b),
+                                   layernorm_ref(x, g, b),
+                                   atol=1e-5, rtol=1e-5,
+                                   err_msg=f"rows={rows}")

@@ -1,0 +1,182 @@
+"""Layer-2 correctness: chunked GPT decomposition vs composed-model
+autodiff, parameter packing round-trips, and basic trainability.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = model.Dims(batch=2, seq=16, hidden=32, heads=4, vocab=64,
+                  layers_per_chunk=1)
+
+
+def _batch(rng, d):
+    tokens = jnp.asarray(rng.integers(0, d.vocab, (d.batch, d.seq)), jnp.int32)
+    targets = jnp.asarray(rng.integers(0, d.vocab, (d.batch, d.seq)), jnp.int32)
+    return tokens, targets
+
+
+def _flats(d, n_chunks, seed=100):
+    roles = ["embed"] + ["mid"] * (n_chunks - 2) + ["head"]
+    return roles, [jnp.asarray(model.init_chunk(r, d, seed + i))
+                   for i, r in enumerate(roles)]
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("role", ["embed", "mid", "head"])
+def test_pack_unpack_roundtrip(role):
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(rng.normal(size=model.param_len(role, DIMS)),
+                       jnp.float32)
+    tree = model.unpack(flat, role, DIMS)
+    back = model.pack(tree, role, DIMS)
+    np.testing.assert_array_equal(flat, back)
+
+
+@pytest.mark.parametrize("role", ["embed", "mid", "head"])
+def test_param_len_matches_spec(role):
+    spec = model.chunk_spec(role, DIMS)
+    assert model.param_len(role, DIMS) == sum(
+        int(np.prod(s)) for _, s in spec)
+    # distinct names
+    names = [n for n, _ in spec]
+    assert len(names) == len(set(names))
+
+
+def test_init_layernorm_gains_are_one():
+    flat = model.init_chunk("mid", DIMS, 0)
+    tree = model.unpack(jnp.asarray(flat), "mid", DIMS)
+    np.testing.assert_array_equal(tree["l0.ln1_g"], np.ones(DIMS.hidden))
+    np.testing.assert_array_equal(tree["l0.mlp1_b"],
+                                  np.zeros(4 * DIMS.hidden))
+
+
+def test_init_deterministic_per_seed():
+    a = model.init_chunk("mid", DIMS, 5)
+    b = model.init_chunk("mid", DIMS, 5)
+    c = model.init_chunk("mid", DIMS, 6)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+# ---------------------------------------------------------------------------
+# chunk decomposition == composed model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_chunks", [2, 3, 4])
+def test_chunked_forward_matches_composed(n_chunks):
+    rng = np.random.default_rng(1)
+    tokens, targets = _batch(rng, DIMS)
+    _, flats = _flats(DIMS, n_chunks)
+    want = model.full_model_loss(tokens, targets, flats, DIMS)
+
+    x = model.embed_fwd(tokens, flats[0], DIMS)
+    for f in flats[1:-1]:
+        x = model.mid_fwd(x, f, DIMS)
+    got = model.head_fwd(x, targets, flats[-1], DIMS)
+    np.testing.assert_allclose(got, want, atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("n_chunks", [2, 4])
+def test_chunked_backward_matches_composed(n_chunks):
+    rng = np.random.default_rng(2)
+    tokens, targets = _batch(rng, DIMS)
+    _, flats = _flats(DIMS, n_chunks)
+    loss_want, dflats_want = model.full_model_grads(tokens, targets, flats,
+                                                    DIMS)
+
+    # Pipeline-style: forward chain stashing chunk inputs, then backward.
+    acts = [model.embed_fwd(tokens, flats[0], DIMS)]
+    for f in flats[1:-1]:
+        acts.append(model.mid_fwd(acts[-1], f, DIMS))
+    loss, dx, dlast = model.head_bwd(acts[-1], targets, flats[-1], DIMS)
+    np.testing.assert_allclose(loss, loss_want, atol=1e-6, rtol=1e-6)
+    dflats = [dlast]
+    for i in range(n_chunks - 2, 0, -1):
+        dx, df = model.mid_bwd(acts[i - 1], dx, flats[i], DIMS)
+        dflats.append(df)
+    dflats.append(model.embed_bwd(tokens, dx, flats[0], DIMS))
+    dflats.reverse()
+    for i, (got, want) in enumerate(zip(dflats, dflats_want)):
+        np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5,
+                                   err_msg=f"chunk {i}")
+
+
+def test_grad_accumulation_linearity():
+    # Gradient of the mean loss over two micro-batches equals the mean of
+    # per-micro-batch gradients — the property pipeline grad-accum relies on.
+    rng = np.random.default_rng(3)
+    t1, y1 = _batch(rng, DIMS)
+    t2, y2 = _batch(rng, DIMS)
+    _, flats = _flats(DIMS, 2)
+
+    _, d1 = model.full_model_grads(t1, y1, flats, DIMS)
+    _, d2 = model.full_model_grads(t2, y2, flats, DIMS)
+
+    def mean_loss(fs):
+        return 0.5 * (model.full_model_loss(t1, y1, fs, DIMS)
+                      + model.full_model_loss(t2, y2, fs, DIMS))
+
+    dm = jax.grad(mean_loss)(list(flats))
+    for a, b, c in zip(d1, d2, dm):
+        np.testing.assert_allclose(0.5 * (a + b), c, atol=1e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# trainability / loss sanity
+# ---------------------------------------------------------------------------
+
+def test_initial_loss_near_uniform():
+    rng = np.random.default_rng(4)
+    tokens, targets = _batch(rng, DIMS)
+    _, flats = _flats(DIMS, 3)
+    loss = model.full_model_loss(tokens, targets, flats, DIMS)
+    assert abs(float(loss) - np.log(DIMS.vocab)) < 0.5
+
+
+def test_sgd_steps_reduce_loss():
+    rng = np.random.default_rng(5)
+    tokens = jnp.asarray(rng.integers(0, DIMS.vocab, (DIMS.batch, DIMS.seq)),
+                         jnp.int32)
+    targets = jnp.roll(tokens, -1, axis=1)  # learnable shift task
+    _, flats = _flats(DIMS, 2)
+    flats = list(flats)
+    first = float(model.full_model_loss(tokens, targets, flats, DIMS))
+    for _ in range(20):
+        _, grads = model.full_model_grads(tokens, targets, flats, DIMS)
+        flats = [f - 0.5 * g for f, g in zip(flats, grads)]
+    last = float(model.full_model_loss(tokens, targets, flats, DIMS))
+    assert last < first - 0.2, f"loss did not drop: {first} -> {last}"
+
+
+# ---------------------------------------------------------------------------
+# jit/lowering entry points
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", model.ARTIFACT_NAMES)
+def test_jitted_entry_points_lower(name):
+    fn = model.jitted(name, DIMS)
+    args = model.example_args(name, DIMS)
+    lowered = fn.lower(*args)
+    assert "stablehlo" in str(lowered.compiler_ir("stablehlo"))
+
+
+def test_jitted_outputs_are_tuples():
+    rng = np.random.default_rng(6)
+    tokens, targets = _batch(rng, DIMS)
+    flat = jnp.asarray(model.init_chunk("embed", DIMS, 1))
+    out = model.jitted("fwd_embed", DIMS)(tokens, flat)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (DIMS.batch, DIMS.seq, DIMS.hidden)
+    hflat = jnp.asarray(model.init_chunk("head", DIMS, 2))
+    out = model.jitted("bwd_head", DIMS)(out[0], targets, hflat)
+    assert len(out) == 3  # (loss, dx, dflat)
+    assert out[0].shape == ()

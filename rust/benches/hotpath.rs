@@ -1,0 +1,152 @@
+//! Hot-path micro-benchmarks for the Layer-3 coordinator: schedule
+//! generation, re-timing, simulation, the mailbox fabric, the collectives,
+//! and the Adam inner loop. Plain wall-clock harness (criterion is not
+//! vendored); each case reports median-of-runs ns/op style numbers and the
+//! §Perf targets from DESIGN.md are asserted as soft gates (warnings, not
+//! failures, so hardware variance does not break `make bench`).
+//!
+//! ```bash
+//! cargo bench --bench hotpath
+//! ```
+
+use bitpipe::collective::ring_allreduce;
+use bitpipe::comm::{Fabric, Tag};
+use bitpipe::config::{ClusterConfig, ParallelConfig, BERT_64};
+use bitpipe::schedule::{self, retime, Costs, ScheduleConfig, ScheduleKind};
+use bitpipe::sim::{simulate_schedule, CostModel};
+use bitpipe::train::optim::{Adam, AdamConfig};
+use std::time::{Duration, Instant};
+
+/// Run `f` repeatedly for ~`budget`, returning (median, iters).
+fn bench<F: FnMut()>(budget: Duration, mut f: F) -> (Duration, usize) {
+    // Warmup.
+    f();
+    let mut samples = Vec::new();
+    let t_start = Instant::now();
+    while t_start.elapsed() < budget || samples.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 1000 {
+            break;
+        }
+    }
+    samples.sort();
+    (samples[samples.len() / 2], samples.len())
+}
+
+fn report(name: &str, med: Duration, iters: usize, note: &str) {
+    println!("{name:<44} {med:>12.3?} /op   ({iters} runs){note}");
+}
+
+fn main() {
+    let budget = Duration::from_millis(600);
+    println!("== L3 hot paths (median wall time) ==\n");
+
+    // Schedule generation (the eval harness's inner loop).
+    for (kind, d, n) in [
+        (ScheduleKind::Dapple, 8usize, 8usize),
+        (ScheduleKind::BitPipe, 8, 8),
+        (ScheduleKind::BitPipe, 8, 32),
+        (ScheduleKind::BitPipe, 16, 16),
+    ] {
+        let cfg = ScheduleConfig::new(kind, d, n);
+        let (med, iters) = bench(budget, || {
+            let _ = schedule::build(&cfg).unwrap();
+        });
+        report(&format!("schedule::build {kind} D={d} N={n}"), med, iters, "");
+    }
+
+    // Re-timing.
+    let s = schedule::build(&ScheduleConfig::new(ScheduleKind::BitPipe, 8, 32)).unwrap();
+    let costs = Costs::default();
+    let (med, iters) = bench(budget, || {
+        let _ = retime(&s.compute_order, &s.placement, &costs).unwrap();
+    });
+    report("retime bitpipe D=8 N=32 (1024 ops)", med, iters, "");
+
+    // Discrete-event simulation of a full iteration.
+    let p = ParallelConfig::new(ScheduleKind::BitPipe, 4, 8, 4, 32);
+    let cm = CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(32));
+    let (med, iters) = bench(budget, || {
+        let _ = simulate_schedule(&s, &cm).unwrap();
+    });
+    let per_device_step = med.as_nanos() as f64 / (32.0 * 8.0);
+    report(
+        "simulate_schedule D=8 N=32",
+        med,
+        iters,
+        &format!("  [{per_device_step:.0} ns per device-step]"),
+    );
+
+    // Mailbox fabric round-trip.
+    let fabric = Fabric::new(2);
+    let payload = vec![1.0f32; 4096];
+    let (med, iters) = bench(budget, || {
+        for mb in 0..64 {
+            fabric.send(1, Tag::act(0, 0, 0, mb), payload.clone()).unwrap();
+        }
+        for mb in 0..64 {
+            let _ = fabric.recv(1, Tag::act(0, 0, 0, mb)).unwrap();
+        }
+    });
+    report("fabric 64x send+recv (16 KiB msgs)", med, iters, "");
+
+    // Ring all-reduce bandwidth (2 threads, 4 MiB vectors).
+    let n = 1 << 20;
+    let (med, iters) = bench(Duration::from_secs(2), || {
+        let fabric = Fabric::new(2);
+        std::thread::scope(|scope| {
+            for dev in 0..2usize {
+                let fabric = fabric.clone();
+                scope.spawn(move || {
+                    let mut data = vec![dev as f32; n];
+                    ring_allreduce(&fabric, dev, &[0, 1], 0, 0, &mut data).unwrap();
+                });
+            }
+        });
+    });
+    let gbps = (2.0 * 4.0 * n as f64) / med.as_secs_f64() / 1e9;
+    report(
+        "ring_allreduce g=2, 4 MiB",
+        med,
+        iters,
+        &format!("  [{gbps:.2} GB/s effective]"),
+    );
+
+    // Adam step (the optimizer inner loop; DESIGN.md §Perf target
+    // >= 1 GB/s effective update bandwidth per core).
+    let n = 1 << 20;
+    let mut adam = Adam::new(AdamConfig::default(), n);
+    let mut params = vec![0.1f32; n];
+    let grads = vec![0.01f32; n];
+    let (med, iters) = bench(Duration::from_secs(1), || {
+        adam.step(&mut params, &grads);
+    });
+    let gbs = (n as f64 * 4.0) / med.as_secs_f64() / 1e9;
+    report(
+        "adam step 1M params",
+        med,
+        iters,
+        &format!("  [{gbs:.2} GB/s param throughput]"),
+    );
+
+    // Gradient accumulation (axpy) — the backward hot loop.
+    let mut acc = vec![0.0f32; n];
+    let g = vec![0.5f32; n];
+    let (med, iters) = bench(Duration::from_millis(800), || {
+        for (a, b) in acc.iter_mut().zip(&g) {
+            *a += b;
+        }
+    });
+    let gbs = (n as f64 * 8.0) / med.as_secs_f64() / 1e9;
+    report(
+        "grad accumulate 1M f32 (axpy)",
+        med,
+        iters,
+        &format!("  [{gbs:.2} GB/s]"),
+    );
+    if gbs < 4.0 {
+        println!("  WARNING: below the 4 GB/s §Perf target");
+    }
+}

@@ -1,0 +1,46 @@
+//! Paper-table benchmark harness: times the regeneration of every table and
+//! figure of the paper and prints the same rows the paper reports.
+//!
+//! ```bash
+//! cargo bench --bench paper_tables            # everything
+//! cargo bench --bench paper_tables -- fig9    # one artifact
+//! ```
+//!
+//! (criterion is not vendored in this environment; this is a plain
+//! `harness = false` binary with wall-clock timing.)
+
+use std::time::Instant;
+
+fn main() {
+    // `cargo bench` appends harness flags like `--bench`; only a bare word
+    // is treated as an artifact filter.
+    let filter: Option<String> =
+        std::env::args().skip(1).find(|a| !a.starts_with("--"));
+    let ids: Vec<&str> = bitpipe::eval::ALL_IDS
+        .iter()
+        .chain(bitpipe::eval::EXTRA_IDS.iter())
+        .copied()
+        .filter(|id| filter.as_deref().map_or(true, |f| id.contains(&f)))
+        .collect();
+    if ids.is_empty() {
+        eprintln!("no artifact matches filter {filter:?}");
+        std::process::exit(1);
+    }
+    let t_all = Instant::now();
+    for id in ids {
+        let t0 = Instant::now();
+        match bitpipe::eval::run(id) {
+            Ok(outs) => {
+                for out in outs {
+                    println!("{}", out.render());
+                }
+                println!("[bench] {id} regenerated in {:?}\n", t0.elapsed());
+            }
+            Err(e) => {
+                eprintln!("[bench] {id} FAILED: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+    println!("[bench] full paper evaluation in {:?}", t_all.elapsed());
+}

@@ -1,0 +1,379 @@
+//! Gradient all-reduce over the mailbox fabric.
+//!
+//! Two algorithms:
+//!
+//! * [`ring_allreduce`] — the bandwidth-optimal ring (reduce-scatter +
+//!   all-gather, `2(g-1)` steps moving `len/g` elements each), the
+//!   algorithm NCCL uses and the one the simulator's cost model prices;
+//! * [`naive_allreduce`] — gather-to-root + broadcast, the baseline the
+//!   ablation benches compare against.
+//!
+//! All participants call the same function with the same `group` (sorted,
+//! deduplicated device list) and their own `dev`; the call blocks until the
+//! reduced vector is available. `epoch` disambiguates tag reuse across
+//! iterations (and across the per-stage collectives of one iteration).
+
+use crate::comm::{CommError, Fabric, Tag};
+use anyhow::{ensure, Result};
+
+/// Position of `dev` in `group`.
+fn rank_of(dev: usize, group: &[usize]) -> Option<usize> {
+    group.iter().position(|&g| g == dev)
+}
+
+/// Segment bounds for rank `r` of `g` ranks over `len` elements.
+fn segment(len: usize, g: usize, r: usize) -> (usize, usize) {
+    let base = len / g;
+    let rem = len % g;
+    let lo = r * base + r.min(rem);
+    let hi = lo + base + usize::from(r < rem);
+    (lo, hi)
+}
+
+/// Bandwidth-optimal ring all-reduce (sum). In-place on `data`.
+pub fn ring_allreduce(
+    fabric: &Fabric,
+    dev: usize,
+    group: &[usize],
+    stage: usize,
+    epoch: usize,
+    data: &mut [f32],
+) -> Result<()> {
+    let g = group.len();
+    ensure!(g >= 1, "empty group");
+    let Some(rank) = rank_of(dev, group) else {
+        anyhow::bail!("device {dev} not in group {group:?}")
+    };
+    if g == 1 {
+        return Ok(());
+    }
+    let next = group[(rank + 1) % g];
+    let prev = group[(rank + g - 1) % g];
+    let len = data.len();
+
+    // Tag scheme: class=Collective, pipe=epoch, stage=stage, mb=step.
+    let tag = |from: usize, step: usize| -> Tag {
+        let mut t = Tag::coll(from, stage, step);
+        t.pipe = epoch;
+        t
+    };
+
+    // Reduce-scatter: at step s, send segment (rank - s) and accumulate
+    // segment (rank - s - 1) received from prev.
+    for step in 0..g - 1 {
+        let send_seg = (rank + g - step) % g;
+        let (lo, hi) = segment(len, g, send_seg);
+        fabric.send(next, tag(dev, step), data[lo..hi].to_vec()).map_err(comm_err)?;
+        let recv_seg = (rank + g - step - 1) % g;
+        let (lo, hi) = segment(len, g, recv_seg);
+        let incoming = fabric.recv(dev, tag(prev, step)).map_err(comm_err)?;
+        ensure!(incoming.len() == hi - lo, "fragment size mismatch");
+        for (d, s) in data[lo..hi].iter_mut().zip(&incoming) {
+            *d += s;
+        }
+    }
+    // All-gather: circulate the fully-reduced segments.
+    for step in 0..g - 1 {
+        let send_seg = (rank + 1 + g - step) % g;
+        let (lo, hi) = segment(len, g, send_seg);
+        fabric
+            .send(next, tag(dev, g - 1 + step), data[lo..hi].to_vec())
+            .map_err(comm_err)?;
+        let recv_seg = (rank + g - step) % g;
+        let (lo, hi) = segment(len, g, recv_seg);
+        let incoming = fabric.recv(dev, tag(prev, g - 1 + step)).map_err(comm_err)?;
+        ensure!(incoming.len() == hi - lo, "fragment size mismatch");
+        data[lo..hi].copy_from_slice(&incoming);
+    }
+    Ok(())
+}
+
+/// Naive all-reduce: everyone sends to the group root, the root reduces
+/// and broadcasts. `2(g-1)` full-vector transfers through one node — the
+/// bottleneck the ring avoids.
+pub fn naive_allreduce(
+    fabric: &Fabric,
+    dev: usize,
+    group: &[usize],
+    stage: usize,
+    epoch: usize,
+    data: &mut [f32],
+) -> Result<()> {
+    let g = group.len();
+    ensure!(g >= 1, "empty group");
+    let Some(rank) = rank_of(dev, group) else {
+        anyhow::bail!("device {dev} not in group {group:?}")
+    };
+    if g == 1 {
+        return Ok(());
+    }
+    let root = group[0];
+    let tag = |from: usize, step: usize| -> Tag {
+        let mut t = Tag::coll(from, stage, step);
+        t.pipe = epoch;
+        t
+    };
+    if rank == 0 {
+        for &peer in &group[1..] {
+            let incoming = fabric.recv(dev, tag(peer, 0)).map_err(comm_err)?;
+            ensure!(incoming.len() == data.len(), "size mismatch");
+            for (d, s) in data.iter_mut().zip(&incoming) {
+                *d += s;
+            }
+        }
+        for &peer in &group[1..] {
+            fabric.send(peer, tag(dev, 1), data.to_vec()).map_err(comm_err)?;
+        }
+    } else {
+        fabric.send(root, tag(dev, 0), data.to_vec()).map_err(comm_err)?;
+        let reduced = fabric.recv(dev, tag(root, 1)).map_err(comm_err)?;
+        data.copy_from_slice(&reduced);
+    }
+    Ok(())
+}
+
+/// Eager pairwise-exchange all-reduce, split into a non-blocking *start*
+/// and a blocking *wait* — the shape the schedule IR's
+/// `AllReduceStart`/`AllReduceWait` ops require.
+///
+/// `start` posts the local contribution to every peer and never blocks, so
+/// devices may launch their per-stage collectives in *any* order (eager
+/// sync fires them from inside pipeline bubbles, and different devices
+/// reach different stages' last backwards in different orders — a blocking
+/// ring would deadlock there). `wait` receives the `g-1` peer
+/// contributions and sums.
+///
+/// For the bidirectional twin groups of this paper (g = 2) the exchange
+/// moves exactly the same bytes as the optimal ring; for larger g it
+/// trades `(g-1)/g` extra bandwidth for deadlock-freedom.
+pub fn exchange_start(
+    fabric: &Fabric,
+    dev: usize,
+    group: &[usize],
+    stage: usize,
+    epoch: usize,
+    data: &[f32],
+) -> Result<()> {
+    ensure!(rank_of(dev, group).is_some(), "device {dev} not in group {group:?}");
+    for &peer in group {
+        if peer == dev {
+            continue;
+        }
+        let mut t = Tag::coll(dev, stage, usize::MAX); // step slot unused
+        t.pipe = epoch;
+        fabric.send(peer, t, data.to_vec()).map_err(comm_err)?;
+    }
+    Ok(())
+}
+
+/// Blocking completion of [`exchange_start`]: receives every peer's
+/// contribution and accumulates into `data`.
+pub fn exchange_wait(
+    fabric: &Fabric,
+    dev: usize,
+    group: &[usize],
+    stage: usize,
+    epoch: usize,
+    data: &mut [f32],
+) -> Result<()> {
+    ensure!(rank_of(dev, group).is_some(), "device {dev} not in group {group:?}");
+    for &peer in group {
+        if peer == dev {
+            continue;
+        }
+        let mut t = Tag::coll(peer, stage, usize::MAX);
+        t.pipe = epoch;
+        let incoming = fabric.recv(dev, t).map_err(comm_err)?;
+        ensure!(incoming.len() == data.len(), "size mismatch from {peer}");
+        for (d, s) in data.iter_mut().zip(&incoming) {
+            *d += s;
+        }
+    }
+    Ok(())
+}
+
+fn comm_err(e: CommError) -> anyhow::Error {
+    anyhow::anyhow!("collective transport: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn run_allreduce(
+        g: usize,
+        len: usize,
+        f: impl Fn(&Fabric, usize, &[usize], usize, usize, &mut [f32]) -> Result<()>
+            + Send
+            + Sync
+            + Copy
+            + 'static,
+    ) -> Vec<Vec<f32>> {
+        let fabric = Fabric::new(g);
+        let group: Vec<usize> = (0..g).collect();
+        let mut handles = Vec::new();
+        for dev in 0..g {
+            let fabric = fabric.clone();
+            let group = group.clone();
+            handles.push(thread::spawn(move || {
+                // Device d contributes [d, d, ...] * (position+1 variation).
+                let mut data: Vec<f32> =
+                    (0..len).map(|i| (dev * len + i) as f32).collect();
+                f(&fabric, dev, &group, 0, 0, &mut data).unwrap();
+                data
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn expected(g: usize, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|i| (0..g).map(|d| (d * len + i) as f32).sum())
+            .collect()
+    }
+
+    #[test]
+    fn ring_matches_sum_various_sizes() {
+        for g in [2usize, 3, 4, 8] {
+            for len in [1usize, 7, 16, 1000] {
+                if len < g {
+                    continue;
+                }
+                let out = run_allreduce(g, len, ring_allreduce);
+                let want = expected(g, len);
+                for (dev, v) in out.iter().enumerate() {
+                    assert_eq!(v, &want, "ring g={g} len={len} dev={dev}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_handles_len_not_divisible_by_group() {
+        let out = run_allreduce(4, 10, ring_allreduce);
+        let want = expected(4, 10);
+        for v in out {
+            assert_eq!(v, want);
+        }
+    }
+
+    #[test]
+    fn naive_matches_sum() {
+        for g in [2usize, 4] {
+            let out = run_allreduce(g, 64, naive_allreduce);
+            let want = expected(g, 64);
+            for v in out {
+                assert_eq!(v, want);
+            }
+        }
+    }
+
+    #[test]
+    fn single_member_noop() {
+        let fabric = Fabric::new(1);
+        let mut data = vec![3.0, 4.0];
+        ring_allreduce(&fabric, 0, &[0], 0, 0, &mut data).unwrap();
+        assert_eq!(data, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn non_member_rejected() {
+        let fabric = Fabric::new(3);
+        let mut data = vec![0.0];
+        assert!(ring_allreduce(&fabric, 2, &[0, 1], 0, 0, &mut data).is_err());
+    }
+
+    #[test]
+    fn concurrent_stages_do_not_cross() {
+        // Two independent all-reduces (different stages) in flight on the
+        // same fabric must not exchange fragments.
+        let fabric = Fabric::new(2);
+        let mut handles = Vec::new();
+        for dev in 0..2usize {
+            let fabric = fabric.clone();
+            handles.push(thread::spawn(move || {
+                let mut a: Vec<f32> = vec![1.0 + dev as f32; 8]; // stage 0
+                let mut b: Vec<f32> = vec![10.0 + dev as f32; 8]; // stage 1
+                // Interleave: start stage-0, then stage-1, on both devices.
+                ring_allreduce(&fabric, dev, &[0, 1], 0, 0, &mut a).unwrap();
+                ring_allreduce(&fabric, dev, &[0, 1], 1, 0, &mut b).unwrap();
+                (a, b)
+            }));
+        }
+        for h in handles {
+            let (a, b) = h.join().unwrap();
+            assert_eq!(a, vec![3.0; 8]);
+            assert_eq!(b, vec![21.0; 8]);
+        }
+    }
+
+    #[test]
+    fn exchange_matches_sum_and_tolerates_opposite_order() {
+        // Device 0 starts stage-0 then stage-1; device 1 starts stage-1
+        // then stage-0. A blocking collective would deadlock; the eager
+        // exchange must complete with correct sums.
+        let fabric = Fabric::new(2);
+        let mut handles = Vec::new();
+        for dev in 0..2usize {
+            let fabric = fabric.clone();
+            handles.push(thread::spawn(move || {
+                let mut a = vec![1.0 + dev as f32; 6];
+                let mut b = vec![10.0 + dev as f32; 6];
+                let order = if dev == 0 { [(0usize, 0usize), (1, 1)] } else { [(1, 1), (0, 0)] };
+                for &(stage, _) in &order {
+                    let d = if stage == 0 { &a } else { &b };
+                    exchange_start(&fabric, dev, &[0, 1], stage, 0, d).unwrap();
+                }
+                for &(stage, _) in &order {
+                    let d = if stage == 0 { &mut a } else { &mut b };
+                    exchange_wait(&fabric, dev, &[0, 1], stage, 0, d).unwrap();
+                }
+                (a, b)
+            }));
+        }
+        for h in handles {
+            let (a, b) = h.join().unwrap();
+            assert_eq!(a, vec![3.0; 6]);
+            assert_eq!(b, vec![21.0; 6]);
+        }
+    }
+
+    #[test]
+    fn exchange_group_of_four() {
+        let fabric = Fabric::new(4);
+        let group: Vec<usize> = (0..4).collect();
+        let mut handles = Vec::new();
+        for dev in 0..4usize {
+            let fabric = fabric.clone();
+            let group = group.clone();
+            handles.push(thread::spawn(move || {
+                let mut d = vec![dev as f32; 5];
+                exchange_start(&fabric, dev, &group, 2, 7, &d).unwrap();
+                exchange_wait(&fabric, dev, &group, 2, 7, &mut d).unwrap();
+                d
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![6.0; 5]); // 0+1+2+3
+        }
+    }
+
+    #[test]
+    fn segments_cover_exactly() {
+        for len in [1usize, 5, 8, 17] {
+            for g in [1usize, 2, 3, 5] {
+                let mut covered = 0;
+                for r in 0..g {
+                    let (lo, hi) = segment(len, g, r);
+                    assert!(lo <= hi && hi <= len);
+                    covered += hi - lo;
+                    if r > 0 {
+                        assert_eq!(lo, segment(len, g, r - 1).1, "contiguous");
+                    }
+                }
+                assert_eq!(covered, len);
+            }
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Cluster hardware model: the paper's testbed (A800 80GB nodes, 8 GPUs
+//! per node on NVLink, 200 Gbps HDR Infiniband between nodes) expressed as
+//! bandwidth/latency parameters, plus the stage->device mapping policy of
+//! paper Fig 6.
+
+use anyhow::{ensure, Result};
+
+/// Interconnect class between two devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Same device (local copy).
+    Local,
+    /// Same server node (NVLink).
+    NvLink,
+    /// Across nodes (Infiniband).
+    InfiniBand,
+}
+
+/// How pipeline stages map onto physical devices (paper Fig 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MappingPolicy {
+    /// BitPipe/Chimera mapping: all replicas of a stage in the same node —
+    /// heavy allreduce on NVLink, light P2P on IB.
+    ReplicasTogether,
+    /// Naive mapping: each pipeline contiguous in a node — P2P on NVLink,
+    /// allreduce on IB (the slow configuration Fig 6 argues against).
+    PipesTogether,
+}
+
+/// Cluster hardware parameters. Defaults model the paper's testbed.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterConfig {
+    /// Total devices P.
+    pub n_devices: usize,
+    /// Devices per server node.
+    pub devices_per_node: usize,
+    /// NVLink per-direction bandwidth, bytes/s (A800: 400 GB/s NVLink-4
+    /// aggregate; effective p2p ~200 GB/s).
+    pub nvlink_bw: f64,
+    /// Infiniband bandwidth, bytes/s (200 Gbps HDR = 25 GB/s).
+    pub ib_bw: f64,
+    /// P2P latency (s) on NVLink.
+    pub nvlink_lat: f64,
+    /// P2P latency (s) on IB.
+    pub ib_lat: f64,
+    /// Per-device sustained compute, FLOP/s (A800 bf16 dense ~312 TFLOPs,
+    /// ~45% achievable on transformer layers => 140 TFLOPs effective).
+    pub flops: f64,
+    /// Micro-batch size at which kernels reach half their peak efficiency
+    /// (GPU kernels are launch/occupancy-bound at tiny B; paper Fig 11(b):
+    /// "training throughput increases with the increase of B").
+    pub b_half: f64,
+    /// Device memory capacity, bytes (A800 80GB).
+    pub mem_capacity: u64,
+    /// Stage mapping policy.
+    pub mapping: MappingPolicy,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_devices: 8,
+            devices_per_node: 8,
+            nvlink_bw: 200.0e9,
+            ib_bw: 25.0e9,
+            nvlink_lat: 3.0e-6,
+            ib_lat: 8.0e-6,
+            flops: 140.0e12,
+            b_half: 0.75,
+            mem_capacity: 80 * (1 << 30),
+            mapping: MappingPolicy::ReplicasTogether,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Paper testbed scaled to `n` devices (8 per node).
+    pub fn paper_testbed(n: usize) -> Self {
+        ClusterConfig { n_devices: n, ..Default::default() }
+    }
+
+    /// Single fully-NVLinked node (the ablation study's setting).
+    pub fn single_node(n: usize) -> Self {
+        ClusterConfig { n_devices: n, devices_per_node: n, ..Default::default() }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        (self.n_devices + self.devices_per_node - 1) / self.devices_per_node
+    }
+
+    /// Node of a physical device id.
+    pub fn node_of(&self, dev: usize) -> usize {
+        dev / self.devices_per_node
+    }
+
+    /// Link class between two physical devices.
+    pub fn link(&self, a: usize, b: usize) -> LinkKind {
+        if a == b {
+            LinkKind::Local
+        } else if self.node_of(a) == self.node_of(b) {
+            LinkKind::NvLink
+        } else {
+            LinkKind::InfiniBand
+        }
+    }
+
+    /// Bandwidth of a link class, bytes/s. Local copies are modeled at
+    /// HBM copy bandwidth (fast but not free).
+    pub fn bw(&self, kind: LinkKind) -> f64 {
+        match kind {
+            LinkKind::Local => 1.0e12,
+            LinkKind::NvLink => self.nvlink_bw,
+            LinkKind::InfiniBand => self.ib_bw,
+        }
+    }
+
+    /// Latency of a link class, seconds.
+    pub fn lat(&self, kind: LinkKind) -> f64 {
+        match kind {
+            LinkKind::Local => 0.5e-6,
+            LinkKind::NvLink => self.nvlink_lat,
+            LinkKind::InfiniBand => self.ib_lat,
+        }
+    }
+
+    /// Fraction of peak FLOPs achieved at micro-batch size `b`
+    /// (saturating occupancy curve b / (b + b_half)).
+    pub fn mbs_efficiency(&self, b: usize) -> f64 {
+        let b = b as f64;
+        b / (b + self.b_half)
+    }
+
+    /// Time to move `bytes` over the link between devices `a` and `b`.
+    pub fn xfer_time(&self, a: usize, b: usize, bytes: u64) -> f64 {
+        let k = self.link(a, b);
+        self.lat(k) + bytes as f64 / self.bw(k)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n_devices >= 1, "need at least one device");
+        ensure!(self.devices_per_node >= 1, "devices_per_node >= 1");
+        ensure!(self.nvlink_bw > self.ib_bw, "NVLink must outpace IB");
+        ensure!(self.flops > 0.0 && self.mem_capacity > 0, "positive compute/memory");
+        Ok(())
+    }
+
+    /// Physical device id of (pipeline-group w, pipeline device d) under
+    /// the mapping policy, for W pipeline replicas of depth D.
+    ///
+    /// * `ReplicasTogether` (Fig 6 right): device d of every replica w sits
+    ///   in node d*W+w's slot — replicas of a stage share a node when
+    ///   W <= devices_per_node.
+    /// * `PipesTogether` (Fig 6 left): replica w occupies a contiguous
+    ///   block of D slots.
+    pub fn physical_device(&self, policy: MappingPolicy, w: usize, d: usize, n_w: usize, n_d: usize) -> usize {
+        debug_assert!(w < n_w && d < n_d);
+        match policy {
+            MappingPolicy::ReplicasTogether => d * n_w + w,
+            MappingPolicy::PipesTogether => w * n_d + d,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_classes() {
+        let c = ClusterConfig::paper_testbed(16);
+        assert_eq!(c.n_nodes(), 2);
+        assert_eq!(c.link(0, 0), LinkKind::Local);
+        assert_eq!(c.link(0, 7), LinkKind::NvLink);
+        assert_eq!(c.link(0, 8), LinkKind::InfiniBand);
+    }
+
+    #[test]
+    fn xfer_times_ordered() {
+        let c = ClusterConfig::default();
+        let msg = 10 << 20;
+        let local = c.xfer_time(0, 0, msg);
+        let nv = c.xfer_time(0, 1, msg);
+        let c16 = ClusterConfig::paper_testbed(16);
+        let ib = c16.xfer_time(0, 8, msg);
+        assert!(local < nv && nv < ib, "{local} {nv} {ib}");
+    }
+
+    #[test]
+    fn mapping_policies() {
+        let c = ClusterConfig::paper_testbed(16);
+        // W=2 replicas, D=8: ReplicasTogether puts (w=0,d=0) and (w=1,d=0)
+        // adjacent (same node); PipesTogether puts them 8 apart.
+        let a = c.physical_device(MappingPolicy::ReplicasTogether, 0, 0, 2, 8);
+        let b = c.physical_device(MappingPolicy::ReplicasTogether, 1, 0, 2, 8);
+        assert_eq!(c.node_of(a), c.node_of(b));
+        let a = c.physical_device(MappingPolicy::PipesTogether, 0, 3, 2, 8);
+        let b = c.physical_device(MappingPolicy::PipesTogether, 1, 3, 2, 8);
+        assert_ne!(c.node_of(a), c.node_of(b));
+    }
+
+    #[test]
+    fn efficiency_curve_monotone() {
+        let c = ClusterConfig::default();
+        assert!(c.mbs_efficiency(1) < c.mbs_efficiency(2));
+        assert!(c.mbs_efficiency(2) < c.mbs_efficiency(8));
+        assert!(c.mbs_efficiency(64) > 0.95);
+    }
+
+    #[test]
+    fn default_validates() {
+        ClusterConfig::default().validate().unwrap();
+        ClusterConfig::single_node(8).validate().unwrap();
+    }
+}

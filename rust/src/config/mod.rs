@@ -1,0 +1,100 @@
+//! Configuration system: model dimensions (paper Table 3), parallelism
+//! layout (W, D, B, N — paper Table 1's symbols), and cluster hardware
+//! (paper's testbed: A800 nodes, NVLink intra-node, Infiniband inter-node).
+//!
+//! Configs are plain structs with named presets plus a tiny `key=value`
+//! file/CLI parser (`parse_kv`) so the launcher needs no external crates.
+
+mod cluster;
+mod model;
+mod parallel;
+
+pub use cluster::{ClusterConfig, LinkKind, MappingPolicy};
+pub use model::{ModelConfig, BERT_64, GPT_96, GPT_TINY, GPT_SMALL};
+pub use parallel::ParallelConfig;
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parse `key=value` pairs (one per line in files; `--set k=v` on the CLI).
+/// `#` starts a comment; blank lines ignored.
+pub fn parse_kv(text: &str) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected key=value, got {raw:?}", lineno + 1);
+        };
+        out.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(out)
+}
+
+/// Typed lookup helpers over a parsed kv map.
+pub trait KvExt {
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize>;
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64>;
+    fn get_bool(&self, key: &str, default: bool) -> Result<bool>;
+    fn get_str(&self, key: &str, default: &str) -> String;
+}
+
+impl KvExt for HashMap<String, String> {
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v}: not an integer")),
+        }
+    }
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v}: not a float")),
+        }
+    }
+    fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.as_str() {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                _ => bail!("{key}={v}: not a bool"),
+            },
+        }
+    }
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kv_basics() {
+        let m = parse_kv("a=1\n# comment\nb = two # trailing\n\nc=3.5").unwrap();
+        assert_eq!(m.get_usize("a", 0).unwrap(), 1);
+        assert_eq!(m.get_str("b", ""), "two");
+        assert_eq!(m.get_f64("c", 0.0).unwrap(), 3.5);
+        assert_eq!(m.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn parse_kv_rejects_garbage() {
+        assert!(parse_kv("not a pair").is_err());
+        let m = parse_kv("x=abc").unwrap();
+        assert!(m.get_usize("x", 0).is_err());
+        assert!(m.get_bool("x", false).is_err());
+    }
+
+    #[test]
+    fn bool_spellings() {
+        let m = parse_kv("a=true\nb=0\nc=yes").unwrap();
+        assert!(m.get_bool("a", false).unwrap());
+        assert!(!m.get_bool("b", true).unwrap());
+        assert!(m.get_bool("c", false).unwrap());
+    }
+}

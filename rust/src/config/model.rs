@@ -1,0 +1,173 @@
+//! Transformer model configurations, including the paper's two benchmark
+//! models (Table 3) and the small models used by the real training runtime.
+
+use anyhow::{ensure, Result};
+
+/// GPT/BERT-style transformer dimensions. Parameter and FLOP counts follow
+//  the standard Megatron-LM accounting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    /// Transformer layers (paper Table 3 "# Layers").
+    pub n_layers: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Hidden size H.
+    pub hidden: usize,
+    /// Sequence length S.
+    pub seq_len: usize,
+    /// Vocabulary size (Megatron GPT-2 BPE padded: 50304; BERT: 30592).
+    pub vocab: usize,
+    /// Bytes per parameter/activation element (2 = mixed precision).
+    pub dtype_bytes: usize,
+}
+
+/// BERT-64 (5B): 64 layers, 64 heads, hidden 2560, seq 512 (paper Table 3).
+pub const BERT_64: ModelConfig = ModelConfig {
+    name: "bert-64",
+    n_layers: 64,
+    n_heads: 64,
+    hidden: 2560,
+    seq_len: 512,
+    vocab: 30592,
+    dtype_bytes: 2,
+};
+
+/// GPT-96 (11B): 96 layers, 32 heads, hidden 3072, seq 1024 (paper Table 3).
+pub const GPT_96: ModelConfig = ModelConfig {
+    name: "gpt-96",
+    n_layers: 96,
+    n_heads: 32,
+    hidden: 3072,
+    seq_len: 1024,
+    vocab: 50304,
+    dtype_bytes: 2,
+};
+
+/// Tiny GPT for the real end-to-end training example (~20M params):
+/// 8 layers, hidden 256, seq 128 — matches python/compile/model.py.
+pub const GPT_TINY: ModelConfig = ModelConfig {
+    name: "gpt-tiny",
+    n_layers: 8,
+    n_heads: 8,
+    hidden: 256,
+    seq_len: 128,
+    vocab: 512,
+    dtype_bytes: 4,
+};
+
+/// ~100M-param GPT for the headline end-to-end run: 12 layers, hidden 768.
+pub const GPT_SMALL: ModelConfig = ModelConfig {
+    name: "gpt-small",
+    n_layers: 12,
+    n_heads: 12,
+    hidden: 768,
+    seq_len: 256,
+    vocab: 2048,
+    dtype_bytes: 4,
+};
+
+impl ModelConfig {
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        [BERT_64, GPT_96, GPT_TINY, GPT_SMALL].into_iter().find(|m| m.name == name)
+    }
+
+    /// Per-layer parameter count: 12 H^2 + 13 H (attention + MLP + norms).
+    pub fn params_per_layer(&self) -> u64 {
+        let h = self.hidden as u64;
+        12 * h * h + 13 * h
+    }
+
+    /// Embedding (+ untied head) parameters.
+    pub fn embedding_params(&self) -> u64 {
+        (self.vocab as u64 + self.seq_len as u64) * self.hidden as u64
+    }
+
+    /// Total parameters (embeddings counted once; LM head tied).
+    pub fn total_params(&self) -> u64 {
+        self.params_per_layer() * self.n_layers as u64 + self.embedding_params()
+    }
+
+    /// Forward FLOPs for one layer on a micro-batch of size `b`
+    /// (Megatron accounting: 24 b s H^2 + 4 b s^2 H, x2 for fwd matmul
+    /// multiply-add already included).
+    pub fn layer_fwd_flops(&self, b: usize) -> u64 {
+        let (bs, s, h) = (b as u64, self.seq_len as u64, self.hidden as u64);
+        24 * bs * s * h * h + 4 * bs * s * s * h
+    }
+
+    /// Backward is ~2x forward (the paper's t_b = 2 t_f premise).
+    pub fn layer_bwd_flops(&self, b: usize) -> u64 {
+        2 * self.layer_fwd_flops(b)
+    }
+
+    /// Activation bytes stashed per layer per micro-batch (Megatron's
+    /// s*b*h*(34 + 5*a*s/h) with selective recompute off).
+    pub fn layer_activation_bytes(&self, b: usize) -> u64 {
+        let (bs, s, h, a) = (
+            b as u64,
+            self.seq_len as u64,
+            self.hidden as u64,
+            self.n_heads as u64,
+        );
+        // 34sbh + 5 a s^2 b  (bytes, already in fp16 units for 2-byte dtypes)
+        (34 * s * bs * h + 5 * a * s * s * bs) * self.dtype_bytes as u64 / 2
+    }
+
+    /// Bytes of one inter-stage activation message (paper Appendix C:
+    /// message_size = 2 bytes * B * S * H for mixed precision).
+    pub fn message_bytes(&self, b: usize) -> u64 {
+        self.dtype_bytes as u64 * b as u64 * self.seq_len as u64 * self.hidden as u64
+    }
+
+    /// Validate the dimensions are self-consistent.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n_layers > 0, "n_layers must be positive");
+        ensure!(self.hidden % self.n_heads == 0, "hidden must divide by heads");
+        ensure!(self.dtype_bytes == 2 || self.dtype_bytes == 4, "dtype_bytes in {{2,4}}");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_parameter_counts() {
+        // Paper Table 3: BERT-64 is 5B, GPT-96 is 11B. Our accounting
+        // should land within 10% of the headline numbers.
+        let bert = BERT_64.total_params() as f64;
+        assert!((bert - 5.0e9).abs() / 5.0e9 < 0.10, "BERT-64 params {bert:.3e}");
+        let gpt = GPT_96.total_params() as f64;
+        assert!((gpt - 11.0e9).abs() / 11.0e9 < 0.10, "GPT-96 params {gpt:.3e}");
+    }
+
+    #[test]
+    fn tiny_model_is_small() {
+        let p = GPT_TINY.total_params();
+        assert!(p < 30_000_000, "gpt-tiny params {p}");
+        let p = GPT_SMALL.total_params();
+        assert!((50_000_000..200_000_000).contains(&p), "gpt-small params {p}");
+    }
+
+    #[test]
+    fn all_presets_validate() {
+        for m in [BERT_64, GPT_96, GPT_TINY, GPT_SMALL] {
+            m.validate().unwrap();
+            assert_eq!(ModelConfig::by_name(m.name), Some(m));
+        }
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn bwd_is_twice_fwd() {
+        assert_eq!(GPT_96.layer_bwd_flops(2), 2 * GPT_96.layer_fwd_flops(2));
+    }
+
+    #[test]
+    fn message_bytes_formula() {
+        // Appendix C: 2 B * S * H bytes for BERT-64 B=4.
+        assert_eq!(BERT_64.message_bytes(4), 2 * 4 * 512 * 2560);
+    }
+}

@@ -1,0 +1,108 @@
+//! Parallelism configuration: the paper's Table 1 symbols (W, D, B, N)
+//! plus schedule selection.
+
+use crate::schedule::{ScheduleConfig, ScheduleKind, SyncPolicy};
+use anyhow::{ensure, Result};
+
+/// Full parallel layout for one run.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelConfig {
+    /// Schedule kind (BitPipe or a baseline).
+    pub kind: ScheduleKind,
+    /// Replicated pipelines (data parallelism width), paper's W.
+    pub w: usize,
+    /// Pipeline devices per pipeline, paper's D.
+    pub d: usize,
+    /// Micro-batch size, paper's B.
+    pub b: usize,
+    /// Micro-batches per iteration per pipeline, paper's N.
+    pub n: usize,
+    /// Chunks per device per pipe (paper's v; Appendix A).
+    pub v: usize,
+    /// Gradient sync policy (eager = paper default, lazy = w/o E ablation).
+    pub sync: SyncPolicy,
+    /// Appendix B early forwarding for N > D.
+    pub early_forward: bool,
+}
+
+impl ParallelConfig {
+    pub fn new(kind: ScheduleKind, w: usize, d: usize, b: usize, n: usize) -> Self {
+        ParallelConfig {
+            kind,
+            w,
+            d,
+            b,
+            n,
+            v: kind.default_v(),
+            sync: SyncPolicy::Eager,
+            early_forward: true,
+        }
+    }
+
+    /// Total devices P = W * D (paper Table 1).
+    pub fn total_devices(&self) -> usize {
+        self.w * self.d
+    }
+
+    /// Mini-batch size B-hat = B * N * W (paper Table 1).
+    pub fn minibatch_size(&self) -> usize {
+        self.b * self.n * self.w
+    }
+
+    /// The schedule sub-config.
+    pub fn schedule(&self) -> ScheduleConfig {
+        ScheduleConfig::new(self.kind, self.d, self.n)
+            .with_v(self.v)
+            .with_sync(self.sync)
+            .with_early_forward(self.early_forward)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.w >= 1, "W >= 1");
+        ensure!(self.d >= 2, "D >= 2");
+        ensure!(self.b >= 1, "B >= 1");
+        ensure!(self.n >= 1, "N >= 1");
+        if self.kind.bidirectional() {
+            ensure!(self.d % 2 == 0, "bidirectional schedules need even D");
+            ensure!(self.n % 2 == 0, "bidirectional schedules need even N");
+        }
+        if self.n > self.d {
+            ensure!(self.n % self.d == 0, "N must be a multiple of D when N > D");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_quantities() {
+        // Paper main-results setting: BERT-64, W=1, D=8, B=4, N=D => B-hat=32.
+        let p = ParallelConfig::new(ScheduleKind::BitPipe, 1, 8, 4, 8);
+        assert_eq!(p.total_devices(), 8);
+        assert_eq!(p.minibatch_size(), 32);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_layouts() {
+        assert!(ParallelConfig::new(ScheduleKind::BitPipe, 1, 7, 1, 8).validate().is_err());
+        assert!(ParallelConfig::new(ScheduleKind::BitPipe, 1, 8, 1, 7).validate().is_err());
+        assert!(ParallelConfig::new(ScheduleKind::Dapple, 1, 4, 1, 10).validate().is_err());
+        assert!(ParallelConfig::new(ScheduleKind::Dapple, 0, 4, 1, 8).validate().is_err());
+    }
+
+    #[test]
+    fn schedule_subconfig_carries_knobs() {
+        let mut p = ParallelConfig::new(ScheduleKind::BitPipe, 2, 4, 1, 8);
+        p.sync = SyncPolicy::Lazy;
+        p.early_forward = false;
+        let s = p.schedule();
+        assert_eq!(s.kind, ScheduleKind::BitPipe);
+        assert_eq!(s.sync, SyncPolicy::Lazy);
+        assert!(!s.early_forward);
+        assert_eq!(s.v, 2);
+    }
+}

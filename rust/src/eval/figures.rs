@@ -1,0 +1,448 @@
+//! Figure regeneration: schedule diagrams (Figs 1–3, 13), communication
+//! studies (Figs 4–7), memory distributions (Fig 8), and throughput plots
+//! (Figs 9–11) as text series.
+
+use super::EvalOutput;
+use crate::config::{
+    ClusterConfig, MappingPolicy, ModelConfig, ParallelConfig, BERT_64, GPT_96,
+};
+use crate::schedule::{
+    self, analysis, comm_pass, timeline, Costs, ScheduleConfig, ScheduleKind, SyncPolicy,
+};
+use crate::sim::{self, simulate_schedule, CostModel, SimConfig};
+use crate::util::Table;
+use anyhow::Result;
+use std::fmt::Write as _;
+
+fn render_kind(kind: ScheduleKind, d: usize, n: usize) -> Result<String> {
+    let s = schedule::build(&ScheduleConfig::new(kind, d, n))?;
+    let txt = timeline::render(&s, &Costs::default(), &timeline::RenderOpts::default())?;
+    let costs = Costs::default();
+    let t = schedule::retime(&s.compute_order, &s.placement, &costs)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(format!(
+        "{kind} (D={d}, N={n}; makespan {} ticks, bubble ratio {:.3}):\n{txt}\n",
+        t.makespan,
+        t.bubble_ratio()
+    ))
+}
+
+/// Fig 1: classic synchronous schedules — GPipe vs 1F1B, D=4, N=8.
+pub fn fig1() -> Result<EvalOutput> {
+    let mut body = String::new();
+    for kind in [ScheduleKind::GPipe, ScheduleKind::Dapple] {
+        body.push_str(&render_kind(kind, 4, 8)?);
+    }
+    body.push_str(
+        "Same bubble overhead; 1F1B caps the in-flight stash at D (imbalanced across devices).\n",
+    );
+    Ok(EvalOutput { id: "fig1", title: "Classic synchronous pipeline schedules", body })
+}
+
+/// Fig 2: the approaches considered — DAPPLE, 1F1B-Int, Chimera, BitPipe
+/// at D=4, N=4.
+pub fn fig2() -> Result<EvalOutput> {
+    let mut body = String::new();
+    for kind in [
+        ScheduleKind::Dapple,
+        ScheduleKind::Interleaved,
+        ScheduleKind::Chimera,
+        ScheduleKind::BitPipe,
+    ] {
+        body.push_str(&render_kind(kind, 4, 4)?);
+    }
+    body.push_str("Digits = down pipe, letters/symbols = up pipe / second chunk round.\n");
+    Ok(EvalOutput { id: "fig2", title: "Synchronous approaches considered (D=4, N=4)", body })
+}
+
+/// Fig 3: BitPipe's fused bidirectional V-shaped pipelines, D=4, N=4.
+pub fn fig3() -> Result<EvalOutput> {
+    let s = schedule::build(&ScheduleConfig::new(ScheduleKind::BitPipe, 4, 4))?;
+    let mut body = render_kind(ScheduleKind::BitPipe, 4, 4)?;
+    let placement = &s.placement;
+    body.push_str("Chunk placement (down pipe): ");
+    for st in 0..placement.n_stages() {
+        let _ = write!(body, "s{}→P{} ", st + 1, placement.device(0, st) + 1);
+    }
+    body.push_str("\nChunk placement (up pipe):   ");
+    for st in 0..placement.n_stages() {
+        let _ = write!(body, "s{}→P{} ", st + 1, placement.device(1, st) + 1);
+    }
+    body.push('\n');
+    Ok(EvalOutput { id: "fig3", title: "BitPipe bidirectional interleaved schedule", body })
+}
+
+/// Fig 12 (Appendix A): generalizing to more than 2D stages per pipeline
+/// (v > 2) — smaller bubbles at the cost of proportionally more P2P.
+pub fn fig12() -> Result<EvalOutput> {
+    let costs = Costs::default();
+    let mut t = Table::new(vec![
+        "v", "D", "N", "bubble measured", "bubble formula(v=2)", "P2P msgs", "local copies",
+    ]);
+    for (d, n) in [(4usize, 4usize), (4, 8)] {
+        for v in [2usize, 3, 4] {
+            let cfg = ScheduleConfig::new(ScheduleKind::BitPipe, d, n).with_v(v);
+            let s = schedule::build(&cfg)?;
+            let r = analysis::report(&s, &costs)?;
+            t.row(vec![
+                v.to_string(),
+                d.to_string(),
+                n.to_string(),
+                format!("{:.3}", r.bubble_ratio_measured),
+                format!("{:.3}", r.bubble_ratio_formula),
+                r.comm_measured.p2p_messages.to_string(),
+                r.comm_measured.local_copies.to_string(),
+            ]);
+        }
+    }
+    let body = format!(
+        "{}\nAppendix A: each extra chunk per device shrinks the per-op grain (bubble size\n\
+         drops ~1/v) while P2P volume grows ~v; the paper defaults to v=2 and expects\n\
+         v>2 to pay off only for larger future models. The local-copy count also grows\n\
+         (v-1 turn points per pipe), partially offsetting the extra traffic.\n",
+        t.render()
+    );
+    Ok(EvalOutput {
+        id: "fig12",
+        title: "Generalizing to more stages per pipeline (Appendix A)",
+        body,
+    })
+}
+
+/// Fig 13 (appendix): all five approaches side by side, D=4, N=8.
+pub fn fig13() -> Result<EvalOutput> {
+    let mut body = String::new();
+    for kind in ScheduleKind::PAPER_BASELINES {
+        body.push_str(&render_kind(kind, 4, 8)?);
+    }
+    Ok(EvalOutput { id: "fig13", title: "Five synchronous approaches (D=4, N=8)", body })
+}
+
+/// Fig 4: looping vs V-shaped interleaved placement — the local-copy win.
+pub fn fig4() -> Result<EvalOutput> {
+    let mut t = Table::new(vec![
+        "placement", "D", "N", "P2P msgs", "local copies", "geom ticks", "sim iter (ms)",
+    ]);
+    let costs = Costs::default();
+    for (d, n) in [(2usize, 2usize), (4, 4), (4, 8)] {
+        for kind in [ScheduleKind::Interleaved, ScheduleKind::VShaped] {
+            let s = schedule::build(&ScheduleConfig::new(kind, d, n))?;
+            let p2p: usize = comm_pass::p2p_send_counts(&s).iter().sum();
+            let copies: usize = comm_pass::local_copy_counts(&s).iter().sum();
+            let span = schedule::retime(&s.compute_order, &s.placement, &costs)
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .makespan;
+            // Priced execution on a cluster whose links make P2P expensive
+            // (the regime the V-shape targets: small chunks, slow fabric).
+            let p = ParallelConfig::new(kind, 1, d, 1, n);
+            let mut cluster = ClusterConfig::paper_testbed(d);
+            cluster.nvlink_bw = 5.0e9; // activation-bound fabric
+            cluster.nvlink_lat = 1.0e-4;
+            let cm = CostModel::new(&BERT_64, &p, &cluster);
+            let tr = simulate_schedule(&s, &cm).map_err(|e| anyhow::anyhow!("{e}"))?;
+            t.row(vec![
+                kind.name().to_string(),
+                d.to_string(),
+                n.to_string(),
+                p2p.to_string(),
+                copies.to_string(),
+                span.to_string(),
+                format!("{:.1}", tr.makespan * 1e3),
+            ]);
+        }
+    }
+    let body = format!(
+        "{}\nThe V-shape converts every turn-device hand-off into a zero-P2P local copy\n\
+         (-2N(v-1) transfers; confirmed by the real runtime's counters in\n\
+         rust/tests/e2e_train.rs). As a *standalone* pipe our greedy V order carries a\n\
+         small geometric deficit vs looping; the placement's payoff is inside BitPipe's\n\
+         fused schedule, where the turn co-location is what lets the two pipes mesh\n\
+         (fig3/fig9) — consistent with the paper, which deploys the V-shape only there.\n",
+        t.render()
+    );
+    Ok(EvalOutput { id: "fig4", title: "Looping vs V-shaped interleaved schedule", body })
+}
+
+/// Fig 5: eager vs lazy (default) gradient synchronization overlap.
+pub fn fig5() -> Result<EvalOutput> {
+    let mut t = Table::new(vec!["cluster", "W", "sync", "iter time (s)", "ar-blocked mean (s)"]);
+    for (w, nodes, map) in [
+        (1usize, "single-node", MappingPolicy::ReplicasTogether),
+        (4, "multi-node/IB", MappingPolicy::PipesTogether),
+    ] {
+        for sync in [SyncPolicy::Eager, SyncPolicy::Lazy] {
+            let s = schedule::build(&ScheduleConfig::new(ScheduleKind::BitPipe, 8, 8)
+                .with_sync(sync))?;
+            let p = ParallelConfig::new(ScheduleKind::BitPipe, w, 8, 4, 8);
+            let mut cluster = ClusterConfig::paper_testbed(8 * w);
+            cluster.mapping = map;
+            let cm = CostModel::new(&BERT_64, &p, &cluster);
+            let tr = simulate_schedule(&s, &cm).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let blocked =
+                tr.devices.iter().map(|d| d.allreduce_blocked).sum::<f64>() / 8.0;
+            t.row(vec![
+                nodes.to_string(),
+                w.to_string(),
+                format!("{sync:?}"),
+                format!("{:.4}", tr.makespan),
+                format!("{:.4}", blocked),
+            ]);
+        }
+    }
+    let body = format!(
+        "{}\nEager launches drain each stage's collective inside pipeline bubbles; the gain is\n\
+         large when the collective is expensive (IB) and ~neutral on one NVLink node — the\n\
+         paper's own single-node ablation (Table 5) finds ~1%.\n",
+        t.render()
+    );
+    Ok(EvalOutput { id: "fig5", title: "Eager gradient synchronization overlap", body })
+}
+
+/// Fig 6: device mapping — replicas-together (allreduce on NVLink) vs
+/// pipes-together (allreduce on IB).
+pub fn fig6() -> Result<EvalOutput> {
+    let mut t = Table::new(vec!["mapping", "model", "W", "D", "throughput (samples/s)"]);
+    for model in [&BERT_64, &GPT_96] {
+        for map in [MappingPolicy::ReplicasTogether, MappingPolicy::PipesTogether] {
+            let b = if model.name == "bert-64" { 4 } else { 1 };
+            let parallel = ParallelConfig::new(ScheduleKind::BitPipe, 2, 8, b, 8);
+            let mut cluster = ClusterConfig::paper_testbed(16);
+            cluster.mapping = map;
+            let r = sim::simulate(&SimConfig { model: *model, parallel, cluster })?;
+            t.row(vec![
+                format!("{map:?}"),
+                model.name.to_string(),
+                "2".to_string(),
+                "8".to_string(),
+                format!("{:.2}", r.throughput),
+            ]);
+        }
+    }
+    let body = format!(
+        "{}\nReplicasTogether keeps the heavy gradient allreduce on NVLink and pushes only the\n\
+         small activation messages onto Infiniband (paper Fig 6's recommended mapping).\n",
+        t.render()
+    );
+    Ok(EvalOutput { id: "fig6", title: "Device mapping for bidirectional pipelines", body })
+}
+
+/// Fig 7: scaling to N > D micro-batches — software-pipelined basic units.
+pub fn fig7() -> Result<EvalOutput> {
+    let costs = Costs::default();
+    let mut t = Table::new(vec!["N", "makespan", "2x basic unit", "bubble ratio", "formula"]);
+    let d = 4usize;
+    let unit = schedule::retime(
+        &schedule::build(&ScheduleConfig::new(ScheduleKind::BitPipe, d, d))?.compute_order,
+        &schedule::build(&ScheduleConfig::new(ScheduleKind::BitPipe, d, d))?.placement,
+        &costs,
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?
+    .makespan;
+    for k in [1usize, 2, 4] {
+        let n = k * d;
+        let s = schedule::build(&ScheduleConfig::new(ScheduleKind::BitPipe, d, n))?;
+        let tr = schedule::retime(&s.compute_order, &s.placement, &costs)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let formula =
+            analysis::bubble_ratio_formula(ScheduleKind::BitPipe, d, n, true);
+        t.row(vec![
+            n.to_string(),
+            tr.makespan.to_string(),
+            (unit * k as u64).to_string(),
+            format!("{:.3}", tr.bubble_ratio()),
+            format!("{:.3}", formula),
+        ]);
+    }
+    let body = format!(
+        "{}\nConcatenated units overlap: the makespan grows by less than one full basic unit\n\
+         per extra unit (trailing bubbles absorb the next unit's warmup forwards).\n",
+        t.render()
+    );
+    Ok(EvalOutput { id: "fig7", title: "Scaling to more micro-batches (N > D)", body })
+}
+
+/// Fig 8: per-device memory footprint distribution.
+pub fn fig8() -> Result<EvalOutput> {
+    let mut body = String::new();
+    // (a) 8 GPUs, pipeline-only.
+    for (model, b) in [(&BERT_64, 4usize), (&GPT_96, 1usize)] {
+        let mut t = Table::new(vec![
+            "approach", "min GiB", "max GiB", "mean GiB", "spread GiB",
+        ]);
+        for kind in [
+            ScheduleKind::Dapple,
+            ScheduleKind::Interleaved,
+            ScheduleKind::Chimera,
+            ScheduleKind::MixPipe,
+            ScheduleKind::BitPipe,
+        ] {
+            let parallel = ParallelConfig::new(kind, 1, 8, b, 8);
+            let cluster = ClusterConfig::paper_testbed(8);
+            let r = sim::simulate(&SimConfig { model: *model, parallel, cluster })?;
+            let totals = r.memory.total_peak();
+            let gib = |x: u64| x as f64 / (1u64 << 30) as f64;
+            let min = totals.iter().copied().min().unwrap_or(0);
+            let max = totals.iter().copied().max().unwrap_or(0);
+            t.row(vec![
+                kind.name().to_string(),
+                format!("{:.1}", gib(min)),
+                format!("{:.1}", gib(max)),
+                format!("{:.1}", r.memory.mean() / (1u64 << 30) as f64),
+                format!("{:.1}", gib(r.memory.spread())),
+            ]);
+        }
+        let _ = writeln!(body, "(a) 8 GPUs pipeline-only, {} B={b}:\n{}", model.name, t.render());
+    }
+    // (b) 32 GPUs, best configs (W from table 4-style layout).
+    let mut t = Table::new(vec!["approach", "W", "D", "B", "min GiB", "max GiB", "spread GiB"]);
+    for (kind, w, d, b) in [
+        (ScheduleKind::Dapple, 4usize, 8usize, 2usize),
+        (ScheduleKind::Interleaved, 8, 4, 2),
+        (ScheduleKind::MixPipe, 4, 8, 4),
+        (ScheduleKind::BitPipe, 4, 8, 4),
+    ] {
+        let parallel = ParallelConfig::new(kind, w, d, b, d);
+        let cluster = ClusterConfig::paper_testbed(32);
+        let r = sim::simulate(&SimConfig { model: BERT_64, parallel, cluster })?;
+        let totals = r.memory.total_peak();
+        let gib = |x: u64| x as f64 / (1u64 << 30) as f64;
+        t.row(vec![
+            kind.name().to_string(),
+            w.to_string(),
+            d.to_string(),
+            b.to_string(),
+            format!("{:.1}", gib(totals.iter().copied().min().unwrap_or(0))),
+            format!("{:.1}", gib(totals.iter().copied().max().unwrap_or(0))),
+            format!("{:.1}", gib(r.memory.spread())),
+        ]);
+    }
+    let _ = writeln!(body, "(b) 32 GPUs, BERT-64 best configs:\n{}", t.render());
+    body.push_str(
+        "BitPipe: higher mean (two weight replicas) but the narrowest, most uniform spread;\n\
+         DAPPLE/1F1B-Int put the deepest stash on the first-stage device (most imbalanced).\n",
+    );
+    Ok(EvalOutput { id: "fig8", title: "Memory footprint distributions", body })
+}
+
+/// Shared helper: simulated throughput of one configuration.
+fn throughput(
+    kind: ScheduleKind,
+    model: &ModelConfig,
+    w: usize,
+    d: usize,
+    b: usize,
+    n: usize,
+    devices: usize,
+) -> Result<f64> {
+    let parallel = ParallelConfig::new(kind, w, d, b, n);
+    let cluster = ClusterConfig::paper_testbed(devices);
+    Ok(sim::simulate(&SimConfig { model: *model, parallel, cluster })?.throughput)
+}
+
+/// Fig 9: throughput, pipeline parallelism only, 8 GPUs.
+pub fn fig9() -> Result<EvalOutput> {
+    let mut body = String::new();
+    for (model, b) in [(&BERT_64, 4usize), (&GPT_96, 1usize)] {
+        let mut t = Table::new(vec!["B-hat", "dapple", "1f1b-int", "chimera", "bitpipe", "best/bitpipe-x"]);
+        for n in [8usize, 16, 32] {
+            let mut cells = vec![format!("{}", b * n)];
+            let mut best_baseline: f64 = 0.0;
+            let mut bit = 0.0;
+            for kind in [
+                ScheduleKind::Dapple,
+                ScheduleKind::Interleaved,
+                ScheduleKind::Chimera,
+                ScheduleKind::BitPipe,
+            ] {
+                let thr = throughput(kind, model, 1, 8, b, n, 8)?;
+                if kind == ScheduleKind::BitPipe {
+                    bit = thr;
+                } else {
+                    best_baseline = best_baseline.max(thr);
+                }
+                cells.push(format!("{thr:.2}"));
+            }
+            cells.push(format!("{:.2}x", bit / best_baseline));
+            t.row(cells);
+        }
+        let _ = writeln!(body, "{} (W=1, D=8, B={b}):\n{}", model.name, t.render());
+    }
+    body.push_str(
+        "Paper Fig 9: BitPipe beats DAPPLE/1F1B-Int/Chimera by 1.27x/1.12x/1.09x (BERT) and\n\
+         1.15x/1.03x/1.09x (GPT) on average; the lead narrows as B-hat grows (more P2P).\n",
+    );
+    Ok(EvalOutput { id: "fig9", title: "Throughput, pipeline-only, 8 GPUs", body })
+}
+
+/// Fig 10: throughput combined with data parallelism at 8/16/32 GPUs.
+pub fn fig10() -> Result<EvalOutput> {
+    let mut body = String::new();
+    for (model, b) in [(&BERT_64, 4usize), (&GPT_96, 1usize)] {
+        let mut t =
+            Table::new(vec!["GPUs", "dapple", "1f1b-int", "mixpipe", "bitpipe", "bitpipe/best-x"]);
+        for gpus in [8usize, 16, 32] {
+            let w = gpus / 8;
+            let mut cells = vec![gpus.to_string()];
+            let mut best_baseline: f64 = 0.0;
+            let mut bit = 0.0;
+            for kind in [
+                ScheduleKind::Dapple,
+                ScheduleKind::Interleaved,
+                ScheduleKind::MixPipe,
+                ScheduleKind::BitPipe,
+            ] {
+                let thr = throughput(kind, model, w, 8, b, 8, gpus)?;
+                if kind == ScheduleKind::BitPipe {
+                    bit = thr;
+                } else {
+                    best_baseline = best_baseline.max(thr);
+                }
+                cells.push(format!("{thr:.2}"));
+            }
+            cells.push(format!("{:.2}x", bit / best_baseline));
+            t.row(cells);
+        }
+        let _ = writeln!(body, "{} (D=8, B={b}, N=D, W=GPUs/8):\n{}", model.name, t.render());
+    }
+    body.push_str(
+        "Paper Fig 10: BitPipe outperforms at all scales (avg 1.28x/1.13x/1.06x over\n\
+         DAPPLE/1F1B-Int/MixPipe on BERT); the lead shrinks with more nodes (IB share grows).\n",
+    );
+    Ok(EvalOutput { id: "fig10", title: "Throughput with data parallelism", body })
+}
+
+/// Fig 11: hyper-parameter study — D and B sensitivity on 32 GPUs.
+pub fn fig11() -> Result<EvalOutput> {
+    let mut body = String::new();
+    // (a) pipeline size D with B-hat = 128 fixed.
+    let mut t = Table::new(vec!["D", "W", "B", "N", "throughput"]);
+    for d in [4usize, 8, 16] {
+        let w = 32 / d;
+        let b = 4usize;
+        let n = (128 / (b * w)).max(d); // B-hat = B*N*W = 128
+        let n = (n / d).max(1) * d;
+        let thr = throughput(ScheduleKind::BitPipe, &BERT_64, w, d, b, n, 32)?;
+        t.row(vec![
+            d.to_string(),
+            w.to_string(),
+            b.to_string(),
+            n.to_string(),
+            format!("{thr:.2}"),
+        ]);
+    }
+    let _ = writeln!(body, "(a) pipeline size D (BERT-64, 32 GPUs, B-hat=128):\n{}", t.render());
+    // (b) micro-batch size B at D=8.
+    let mut t = Table::new(vec!["B", "W", "N", "throughput"]);
+    for b in [1usize, 2, 4] {
+        let w = 4usize;
+        let n = (128 / (b * w)).max(8) / 8 * 8;
+        let thr = throughput(ScheduleKind::BitPipe, &BERT_64, w, 8, b, n, 32)?;
+        t.row(vec![b.to_string(), w.to_string(), n.to_string(), format!("{thr:.2}")]);
+    }
+    let _ = writeln!(body, "(b) micro-batch size B (D=8):\n{}", t.render());
+    body.push_str(
+        "Paper Fig 11: D=8 is the sweet spot (bubbles vs communication); throughput rises\n\
+         with B while memory and communication allow.\n",
+    );
+    Ok(EvalOutput { id: "fig11", title: "Hyper-parameter study (D, B)", body })
+}

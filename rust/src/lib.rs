@@ -1,0 +1,33 @@
+//! # BitPipe
+//!
+//! Production-grade reproduction of *BitPipe: Bidirectional Interleaved
+//! Pipeline Parallelism for Accelerating Large Models Training*
+//! (Wu, Chen, Yu, 2024) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: schedule
+//!   generation for BitPipe and all baselines (GPipe, DAPPLE, 1F1B-Int,
+//!   GEMS, Chimera, MixPipe), a discrete-event cluster simulator that
+//!   regenerates every table/figure of the paper, and a real threaded
+//!   training runtime driving AOT-compiled XLA executables.
+//! * **Layer 2 (python/compile/model.py)** — a chunked GPT transformer
+//!   (embed / middle / head chunks) with explicit per-chunk forward and
+//!   backward functions, AOT-lowered to HLO text once at build time.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas attention and fused
+//!   ops kernels used inside every chunk (interpret mode on CPU).
+//!
+//! Python never runs at training time: the rust binary loads
+//! `artifacts/*.hlo.txt` via PJRT and is self-contained.
+
+pub mod config;
+pub mod eval;
+pub mod metrics;
+pub mod schedule;
+pub mod sim;
+pub mod util;
+
+// Heavier subsystems (PJRT runtime + threaded trainer) live behind modules
+// that only examples/binaries exercising real execution need.
+pub mod collective;
+pub mod comm;
+pub mod runtime;
+pub mod train;

@@ -1,0 +1,296 @@
+//! BitPipe command-line launcher.
+//!
+//! ```text
+//! bitpipe schedule   --kind bitpipe --d 4 --n 8 [--v 2] [--sync eager|lazy]
+//!                    [--csv] [--ticks-per-col T] [--stage-ids]
+//! bitpipe simulate   --kind bitpipe --model bert-64 --w 1 --d 8 --b 4 --n 8
+//!                    [--gpus P] [--mapping replicas|pipes] [--single-node]
+//! bitpipe eval-paper [--only table2,fig9,...] (default: all)
+//! bitpipe train      --artifacts DIR --kind bitpipe --d 4 --n 8 --steps 50
+//!                    [--dataset synthetic|corpus] [--lr 1e-3] [--seed 42]
+//!                    [--log-every 10] [--sync eager|lazy]
+//!                    [--save CKPT_DIR] [--resume CKPT_DIR]
+//! bitpipe inspect    --artifacts DIR
+//! ```
+//!
+//! All configuration is plain `--key value` flags (no external CLI crate);
+//! `bitpipe help` prints the command list.
+
+use anyhow::{bail, Context, Result};
+use bitpipe::config::{ClusterConfig, MappingPolicy, ModelConfig, ParallelConfig};
+use bitpipe::schedule::{self, timeline, Costs, ScheduleConfig, ScheduleKind, SyncPolicy};
+use bitpipe::sim::{self, SimConfig};
+use bitpipe::train::{self, DatasetKind, TrainConfig};
+use std::collections::HashMap;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "schedule" => cmd_schedule(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "eval-paper" => cmd_eval_paper(&flags),
+        "train" => cmd_train(&flags),
+        "inspect" => cmd_inspect(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; run `bitpipe help`"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "BitPipe — bidirectional interleaved pipeline parallelism (reproduction)\n\n\
+         USAGE: bitpipe <command> [--flag value ...]\n\n\
+         COMMANDS:\n  \
+         schedule    render a pipeline schedule timeline + analytic report\n  \
+         simulate    simulate one training iteration on the modeled cluster\n  \
+         eval-paper  regenerate the paper's tables and figures\n  \
+         train       real training run over AOT artifacts (threads-as-devices)\n  \
+         inspect     print an artifact directory's manifest\n  \
+         help        this message\n\n\
+         Schedule kinds: gpipe dapple 1f1b-int gems chimera mixpipe bitpipe\n\
+         \x20                bitpipe-no-v v-shaped"
+    );
+}
+
+/// `--key value` pairs (plus bare `--flag` booleans).
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("expected --flag, got {a:?}");
+        };
+        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            out.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            out.insert(key.to_string(), "true".to_string());
+            i += 1;
+        }
+    }
+    Ok(out)
+}
+
+fn get<'a>(flags: &'a HashMap<String, String>, key: &str) -> Option<&'a str> {
+    flags.get(key).map(|s| s.as_str())
+}
+
+fn get_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    match get(flags, key) {
+        None => Ok(default),
+        Some(v) => v.parse().with_context(|| format!("--{key} {v}: not an integer")),
+    }
+}
+
+fn get_kind(flags: &HashMap<String, String>) -> Result<ScheduleKind> {
+    let name = get(flags, "kind").unwrap_or("bitpipe");
+    ScheduleKind::parse(name).with_context(|| format!("unknown schedule kind {name:?}"))
+}
+
+fn get_sync(flags: &HashMap<String, String>) -> Result<SyncPolicy> {
+    match get(flags, "sync").unwrap_or("eager") {
+        "eager" => Ok(SyncPolicy::Eager),
+        "lazy" => Ok(SyncPolicy::Lazy),
+        other => bail!("--sync must be eager|lazy, got {other:?}"),
+    }
+}
+
+fn cmd_schedule(flags: &HashMap<String, String>) -> Result<()> {
+    let kind = get_kind(flags)?;
+    let d = get_usize(flags, "d", 4)?;
+    let n = get_usize(flags, "n", d)?;
+    let v = get_usize(flags, "v", kind.default_v())?;
+    let cfg = ScheduleConfig::new(kind, d, n).with_v(v).with_sync(get_sync(flags)?);
+    let s = schedule::build(&cfg)?;
+    schedule::validate::validate(&s)?;
+
+    if flags.contains_key("csv") {
+        print!("{}", timeline::to_csv(&s, &Costs::default())?);
+        return Ok(());
+    }
+
+    let opts = timeline::RenderOpts {
+        ticks_per_col: get_usize(flags, "ticks-per-col", 1)? as u64,
+        show_stage: flags.contains_key("stage-ids"),
+    };
+    println!("{}", timeline::render(&s, &Costs::default(), &opts)?);
+
+    let r = schedule::analysis::report(&s, &Costs::default())?;
+    println!(
+        "kind={} D={} N={} v={}\n\
+         bubble ratio: measured {:.4} (closed form {:.4})\n\
+         weights memory: {:.0} x M_theta; activation stash: {:.1}..{:.1} x M_a\n\
+         P2P messages: {} (formula {}); local copies: {} (formula {})\n\
+         makespan: {} ticks",
+        r.kind,
+        r.d,
+        r.n,
+        r.v,
+        r.bubble_ratio_measured,
+        r.bubble_ratio_formula,
+        r.weights_mem_measured_max,
+        r.act_mem_measured.0,
+        r.act_mem_measured.1,
+        r.comm_measured.p2p_messages,
+        r.comm_formula.p2p_messages,
+        r.comm_measured.local_copies,
+        r.comm_formula.local_copies,
+        r.makespan,
+    );
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let kind = get_kind(flags)?;
+    let model_name = get(flags, "model").unwrap_or("bert-64");
+    let model = ModelConfig::by_name(model_name)
+        .with_context(|| format!("unknown model {model_name:?}"))?;
+    let w = get_usize(flags, "w", 1)?;
+    let d = get_usize(flags, "d", 8)?;
+    let b = get_usize(flags, "b", if model.name == "gpt-96" { 1 } else { 4 })?;
+    let n = get_usize(flags, "n", d)?;
+    let gpus = get_usize(flags, "gpus", w * d)?;
+
+    let mut parallel = ParallelConfig::new(kind, w, d, b, n);
+    parallel.sync = get_sync(flags)?;
+    let mut cluster = if flags.contains_key("single-node") {
+        ClusterConfig::single_node(gpus)
+    } else {
+        ClusterConfig::paper_testbed(gpus)
+    };
+    if let Some(m) = get(flags, "mapping") {
+        cluster.mapping = match m {
+            "replicas" => MappingPolicy::ReplicasTogether,
+            "pipes" => MappingPolicy::PipesTogether,
+            other => bail!("--mapping must be replicas|pipes, got {other:?}"),
+        };
+    }
+
+    let r = sim::simulate(&SimConfig { model, parallel, cluster })?;
+    println!(
+        "model={} kind={} W={w} D={d} B={b} N={n} (mini-batch {})",
+        model.name,
+        kind,
+        parallel.minibatch_size()
+    );
+    println!("iteration time: {:.4} s", r.iter_time);
+    println!("throughput:     {:.2} samples/s", r.throughput);
+    println!("bubble frac:    {:.4}", r.bubble_fraction);
+    println!(
+        "peak memory:    {:.1} GiB ({})",
+        r.peak_memory() as f64 / (1u64 << 30) as f64,
+        if r.fits(&cluster) { "fits" } else { "OOM" },
+    );
+    for dev in 0..d {
+        println!(
+            "  dev {dev}: compute {:.4}s, p2p-blocked {:.4}s, allreduce-blocked {:.4}s",
+            r.compute_time[dev], r.p2p_block_time[dev], r.allreduce_block_time[dev]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval_paper(flags: &HashMap<String, String>) -> Result<()> {
+    let only = get(flags, "only").unwrap_or("all");
+    for id in only.split(',') {
+        for out in bitpipe::eval::run(id.trim())? {
+            println!("{}", out.render());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let artifacts = get(flags, "artifacts").unwrap_or("artifacts");
+    let kind = get_kind(flags)?;
+    let d = get_usize(flags, "d", 4)?;
+    let n = get_usize(flags, "n", d)?;
+    let mut cfg = TrainConfig::new(artifacts, kind, d, n);
+    cfg.v = get_usize(flags, "v", kind.default_v())?;
+    cfg.steps = get_usize(flags, "steps", 20)?;
+    cfg.sync = get_sync(flags)?;
+    cfg.seed = get_usize(flags, "seed", 42)? as u64;
+    cfg.log_every = get_usize(flags, "log-every", 10)?;
+    if let Some(lr) = get(flags, "lr") {
+        cfg.adam.lr = lr.parse().with_context(|| format!("--lr {lr}"))?;
+    }
+    cfg.dataset = match get(flags, "dataset").unwrap_or("synthetic") {
+        "synthetic" => DatasetKind::Synthetic,
+        "corpus" => DatasetKind::Corpus,
+        other => bail!("--dataset must be synthetic|corpus, got {other:?}"),
+    };
+    cfg.save_to = get(flags, "save").map(Into::into);
+    cfg.resume_from = get(flags, "resume").map(Into::into);
+
+    println!(
+        "training: kind={} D={} N={} v={} steps={} dataset={:?} artifacts={}",
+        kind, d, n, cfg.v, cfg.steps, cfg.dataset, artifacts
+    );
+    let report = train::run(&cfg)?;
+    println!("\nloss curve:");
+    for (i, loss) in report.losses.iter().enumerate() {
+        println!("  iter {:4}  loss {:.4}", i + 1, loss);
+    }
+    let c = &report.counters;
+    println!(
+        "\ntotals: {:.1}s wall; {} fwd, {} bwd, {} P2P msgs ({:.1} MiB), {} local copies,\n\
+         {} allreduces ({:.1} MiB), {} optimizer steps; peak stash {:?}",
+        report.total_time,
+        c.forwards,
+        c.backwards,
+        c.p2p_msgs,
+        c.p2p_bytes as f64 / (1 << 20) as f64,
+        c.local_copies,
+        c.allreduces,
+        c.allreduce_bytes as f64 / (1 << 20) as f64,
+        c.optim_steps,
+        report.peak_stash,
+    );
+    Ok(())
+}
+
+fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = get(flags, "artifacts").unwrap_or("artifacts");
+    let manifest = bitpipe::runtime::Manifest::load(format!("{dir}/manifest.txt"))?;
+    println!("artifact directory: {dir}");
+    println!(
+        "model={} hidden={} seq={} batch={} vocab={} heads={}",
+        manifest.model, manifest.hidden, manifest.seq, manifest.batch, manifest.vocab,
+        manifest.heads
+    );
+    println!(
+        "n_chunks={} layers_per_chunk={} selfcheck_loss={:.4}",
+        manifest.n_chunks, manifest.layers_per_chunk, manifest.selfcheck_loss
+    );
+    for role in ["embed", "mid", "head"] {
+        println!("params.{role} = {} f32", manifest.param_len(role).unwrap_or(0));
+    }
+    for name in manifest.artifact_names() {
+        let meta = manifest.artifact(name).unwrap();
+        println!("artifact {name} -> {}", meta.file);
+    }
+    for stage in 0..manifest.n_chunks {
+        println!(
+            "stage {stage}: role={} init={}",
+            manifest.role_of_stage(stage),
+            manifest.init_file(stage).unwrap_or("<missing>")
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! Runtime metrics: iteration timing, throughput (the paper's headline
+//! samples/s metric), and communication counters. Lock-free-ish: counters
+//! are plain atomics so the training hot loop never blocks on metrics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Monotonic counters shared across worker threads.
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// Micro-batch forward passes executed.
+    pub forwards: AtomicU64,
+    /// Micro-batch backward passes executed.
+    pub backwards: AtomicU64,
+    /// P2P messages sent.
+    pub p2p_msgs: AtomicU64,
+    /// P2P bytes sent.
+    pub p2p_bytes: AtomicU64,
+    /// Local copies performed (V-shape path).
+    pub local_copies: AtomicU64,
+    /// All-reduce operations completed.
+    pub allreduces: AtomicU64,
+    /// All-reduce bytes moved (sum over steps).
+    pub allreduce_bytes: AtomicU64,
+    /// Optimizer steps applied.
+    pub optim_steps: AtomicU64,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, field: &AtomicU64, n: u64) {
+        field.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CountersSnapshot {
+        CountersSnapshot {
+            forwards: self.forwards.load(Ordering::Relaxed),
+            backwards: self.backwards.load(Ordering::Relaxed),
+            p2p_msgs: self.p2p_msgs.load(Ordering::Relaxed),
+            p2p_bytes: self.p2p_bytes.load(Ordering::Relaxed),
+            local_copies: self.local_copies.load(Ordering::Relaxed),
+            allreduces: self.allreduces.load(Ordering::Relaxed),
+            allreduce_bytes: self.allreduce_bytes.load(Ordering::Relaxed),
+            optim_steps: self.optim_steps.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`Counters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CountersSnapshot {
+    pub forwards: u64,
+    pub backwards: u64,
+    pub p2p_msgs: u64,
+    pub p2p_bytes: u64,
+    pub local_copies: u64,
+    pub allreduces: u64,
+    pub allreduce_bytes: u64,
+    pub optim_steps: u64,
+}
+
+impl std::ops::Sub for CountersSnapshot {
+    type Output = CountersSnapshot;
+    fn sub(self, rhs: Self) -> Self {
+        CountersSnapshot {
+            forwards: self.forwards - rhs.forwards,
+            backwards: self.backwards - rhs.backwards,
+            p2p_msgs: self.p2p_msgs - rhs.p2p_msgs,
+            p2p_bytes: self.p2p_bytes - rhs.p2p_bytes,
+            local_copies: self.local_copies - rhs.local_copies,
+            allreduces: self.allreduces - rhs.allreduces,
+            allreduce_bytes: self.allreduce_bytes - rhs.allreduce_bytes,
+            optim_steps: self.optim_steps - rhs.optim_steps,
+        }
+    }
+}
+
+/// Per-iteration timing with warm-up skipping (the paper records after 100
+/// warm-up iterations; our driver uses a configurable count).
+#[derive(Debug)]
+pub struct IterationTimer {
+    warmup: usize,
+    seen: usize,
+    current: Option<Instant>,
+    durations: Vec<Duration>,
+}
+
+impl IterationTimer {
+    pub fn new(warmup: usize) -> Self {
+        IterationTimer { warmup, seen: 0, current: None, durations: Vec::new() }
+    }
+
+    pub fn start(&mut self) {
+        self.current = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        let Some(t0) = self.current.take() else { return };
+        self.seen += 1;
+        if self.seen > self.warmup {
+            self.durations.push(t0.elapsed());
+        }
+    }
+
+    /// Recorded (post-warmup) iteration count.
+    pub fn n_recorded(&self) -> usize {
+        self.durations.len()
+    }
+
+    /// Mean recorded iteration time.
+    pub fn mean(&self) -> Duration {
+        if self.durations.is_empty() {
+            return Duration::ZERO;
+        }
+        self.durations.iter().sum::<Duration>() / self.durations.len() as u32
+    }
+
+    /// Samples/s given the mini-batch size per iteration.
+    pub fn throughput(&self, minibatch: usize) -> f64 {
+        let m = self.mean();
+        if m.is_zero() {
+            return 0.0;
+        }
+        minibatch as f64 / m.as_secs_f64()
+    }
+
+    pub fn durations(&self) -> &[Duration] {
+        &self.durations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_roundtrip() {
+        let c = Counters::new();
+        c.add(&c.forwards, 3);
+        c.add(&c.p2p_bytes, 1024);
+        let s = c.snapshot();
+        assert_eq!(s.forwards, 3);
+        assert_eq!(s.p2p_bytes, 1024);
+        c.add(&c.forwards, 1);
+        let d = c.snapshot() - s;
+        assert_eq!(d.forwards, 1);
+        assert_eq!(d.p2p_bytes, 0);
+    }
+
+    #[test]
+    fn timer_skips_warmup() {
+        let mut t = IterationTimer::new(2);
+        for _ in 0..5 {
+            t.start();
+            std::thread::sleep(Duration::from_millis(1));
+            t.stop();
+        }
+        assert_eq!(t.n_recorded(), 3);
+        assert!(t.mean() >= Duration::from_millis(1));
+        assert!(t.throughput(32) > 0.0);
+    }
+
+    #[test]
+    fn timer_empty_safe() {
+        let t = IterationTimer::new(0);
+        assert_eq!(t.mean(), Duration::ZERO);
+        assert_eq!(t.throughput(8), 0.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Plain `key=value` lines (see [`crate::config::parse_kv`]):
+//!
+//! ```text
+//! # model geometry
+//! hidden=256
+//! seq=128
+//! batch=4
+//! vocab=512
+//! n_chunks=4
+//! layers_per_chunk=2
+//! # artifacts: artifact.<name>=<hlo file>
+//! artifact.fwd_embed=fwd_embed.hlo.txt
+//! # parameter vector lengths: params.<name>=<len>
+//! params.embed=137216
+//! ```
+
+use crate::config::{parse_kv, KvExt};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Model preset name the artifacts were lowered for.
+    pub model: String,
+    /// Model geometry the artifacts were lowered for.
+    pub hidden: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub vocab: usize,
+    pub heads: usize,
+    /// Total pipeline chunks (v * D) the model was split into.
+    pub n_chunks: usize,
+    pub layers_per_chunk: usize,
+    /// Composed-model loss on the AOT self-check batch (rust integration
+    /// tests reproduce this through the artifacts).
+    pub selfcheck_loss: f64,
+    artifacts: HashMap<String, ArtifactMeta>,
+    /// Flat parameter-vector length per chunk role.
+    params: HashMap<String, usize>,
+    /// Initial parameter vector file per stage index.
+    init_files: HashMap<usize, String>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`?)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let kv = parse_kv(text)?;
+        let mut artifacts = HashMap::new();
+        let mut params = HashMap::new();
+        let mut init_files = HashMap::new();
+        for (k, v) in &kv {
+            if let Some(name) = k.strip_prefix("artifact.") {
+                artifacts.insert(
+                    name.to_string(),
+                    ArtifactMeta { name: name.to_string(), file: v.clone() },
+                );
+            } else if let Some(name) = k.strip_prefix("params.") {
+                params.insert(
+                    name.to_string(),
+                    v.parse::<usize>().with_context(|| format!("params.{name}={v}"))?,
+                );
+            } else if let Some(stage) = k.strip_prefix("init.") {
+                init_files.insert(
+                    stage.parse::<usize>().with_context(|| format!("init.{stage}"))?,
+                    v.clone(),
+                );
+            }
+        }
+        Ok(Manifest {
+            model: kv.get_str("model", "custom"),
+            hidden: kv.get_usize("hidden", 0)?,
+            seq: kv.get_usize("seq", 0)?,
+            batch: kv.get_usize("batch", 0)?,
+            vocab: kv.get_usize("vocab", 0)?,
+            heads: kv.get_usize("heads", 0)?,
+            n_chunks: kv.get_usize("n_chunks", 0)?,
+            layers_per_chunk: kv.get_usize("layers_per_chunk", 0)?,
+            selfcheck_loss: kv.get_f64("selfcheck.loss", 0.0)?,
+            artifacts,
+            params,
+            init_files,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.get(name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// Flat parameter length of a chunk role (`embed`, `mid`, `head`).
+    pub fn param_len(&self, role: &str) -> Option<usize> {
+        self.params.get(role).copied()
+    }
+
+    /// Chunk role by global stage index: stage 0 embeds, the last stage
+    /// computes the loss head, everything between is a mid chunk.
+    pub fn role_of_stage(&self, stage: usize) -> &'static str {
+        if stage == 0 {
+            "embed"
+        } else if stage + 1 == self.n_chunks {
+            "head"
+        } else {
+            "mid"
+        }
+    }
+
+    /// Initial parameter vector file for a stage (relative to the artifact
+    /// directory).
+    pub fn init_file(&self, stage: usize) -> Option<&str> {
+        self.init_files.get(&stage).map(|s| s.as_str())
+    }
+
+    /// Activation element count of one inter-chunk tensor (B * S * H).
+    pub fn act_len(&self) -> usize {
+        self.batch * self.seq * self.hidden
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+model=gpt-tiny
+hidden=256
+seq=128
+batch=4
+vocab=512
+heads=8
+n_chunks=4
+layers_per_chunk=2
+artifact.fwd_embed=fwd_embed.hlo.txt
+artifact.bwd_embed=bwd_embed.hlo.txt
+params.embed=137216
+params.mid=789504
+init.0=init_stage0.bin
+init.1=init_stage1.bin
+selfcheck.loss=6.291064
+";
+
+    #[test]
+    fn parse_roundtrip() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.hidden, 256);
+        assert_eq!(m.n_chunks, 4);
+        assert_eq!(m.heads, 8);
+        assert_eq!(m.model, "gpt-tiny");
+        assert_eq!(m.artifact("fwd_embed").unwrap().file, "fwd_embed.hlo.txt");
+        assert_eq!(m.param_len("mid"), Some(789504));
+        assert!(m.artifact("nope").is_none());
+        assert_eq!(m.artifact_names(), vec!["bwd_embed", "fwd_embed"]);
+        assert_eq!(m.init_file(1), Some("init_stage1.bin"));
+        assert!(m.init_file(9).is_none());
+        assert!((m.selfcheck_loss - 6.291064).abs() < 1e-9);
+        assert_eq!(m.act_len(), 4 * 128 * 256);
+    }
+
+    #[test]
+    fn roles_by_stage() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.role_of_stage(0), "embed");
+        assert_eq!(m.role_of_stage(1), "mid");
+        assert_eq!(m.role_of_stage(2), "mid");
+        assert_eq!(m.role_of_stage(3), "head");
+    }
+
+    #[test]
+    fn bad_params_rejected() {
+        assert!(Manifest::parse("params.embed=abc").is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text + a `manifest.txt`) and executes them on the CPU PJRT client.
+//!
+//! HLO **text** is the interchange format: jax >= 0.5 serializes protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids and round-trips cleanly (see
+//! /opt/xla-example/README.md).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so each worker thread builds
+//! its own [`Runtime`]; tensors cross threads as plain `Vec<f32>` and are
+//! converted to literals at the executor boundary.
+
+mod manifest;
+
+pub use manifest::{ArtifactMeta, Manifest};
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (manifest key), for diagnostics.
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; flattens the jax `return_tuple=True`
+    /// tuple wrapper into the plain output list.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let results = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing artifact {}", self.name))?;
+        let out = results[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        out.to_tuple().with_context(|| format!("untupling result of {}", self.name))
+    }
+
+    /// Execute with pre-staged device buffers — the training hot path
+    /// (parameter buffers are cached across micro-batches; only
+    /// activations/tokens are re-staged per op).
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let results = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing artifact {} (buffers)", self.name))?;
+        let out = results[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        out.to_tuple().with_context(|| format!("untupling result of {}", self.name))
+    }
+
+    /// Execute and return the single output as an f32 vector.
+    pub fn run1_f32(&self, args: &[xla::Literal]) -> Result<Vec<f32>> {
+        let outs = self.run(args)?;
+        anyhow::ensure!(outs.len() == 1, "{}: expected 1 output, got {}", self.name, outs.len());
+        to_f32_vec(&outs[0])
+    }
+}
+
+/// Per-thread PJRT runtime with a compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifact directory (expects `manifest.txt` inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir, cache: HashMap::new(), manifest })
+    }
+
+    /// Load (or fetch from cache) an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("artifact {name} not in manifest"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let e = std::rc::Rc::new(Executable { exe, name: name.to_string() });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Stage an f32 host slice as a device buffer.
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Stage an i32 host slice as a device buffer.
+    pub fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+/// Host `Vec<f32>` -> literal of the given shape.
+pub fn f32_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Host `Vec<i32>` (token ids) -> literal of the given shape.
+pub fn i32_literal(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Literal -> host f32 vector.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need real artifacts live in rust/tests/ (they
+    // require `make artifacts` to have run). Here: pure host-side helpers.
+
+    #[test]
+    fn f32_literal_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = f32_literal(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_f32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+        assert!(i32_literal(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn i32_literal_roundtrip() {
+        let data = vec![5i32, 6, 7, 8];
+        let lit = i32_literal(&data, &[4]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+}

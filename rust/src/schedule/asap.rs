@@ -1,0 +1,316 @@
+//! ASAP (as-soon-as-possible) re-timing of a per-device compute order.
+//!
+//! Given each device's *order* of compute ops, dependency edges between ops
+//! (pipeline dataflow), and per-op costs, this computes the earliest start
+//! time of every op. The resulting timed schedule is the geometric ground
+//! truth used by the analysis engine (bubble ratios, Table 2), the timeline
+//! renderer (Figs 1–3, 13), and as the skeleton the simulator refines with
+//! a cluster cost model.
+//!
+//! Costs are expressed in integer *ticks*. A full (non-interleaved) stage
+//! forward is [`Costs::f_full`] ticks; a chunk in a `v`-way interleaved
+//! schedule costs `f_full / v` (the paper's premise that splitting a stage
+//! into `v` chunks divides the per-op time by `v`). Backward cost is
+//! `b_num/b_den` times forward (paper assumes 2×).
+
+use super::ir::{CompOp, OpKind, Placement};
+use std::collections::HashMap;
+
+/// Integer tick cost model for schedule geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct Costs {
+    /// Ticks for a full-stage forward (must be divisible by every `v` used;
+    /// 12 covers v ∈ {1,2,3,4,6,12}).
+    pub f_full: u64,
+    /// Backward/forward cost ratio, as a fraction `b_num / b_den`.
+    pub b_num: u64,
+    pub b_den: u64,
+    /// Extra latency (ticks) on cross-device dependency edges; 0 for pure
+    /// geometry (the paper's schedule diagrams ignore P2P latency).
+    pub comm_lat: u64,
+}
+
+impl Default for Costs {
+    fn default() -> Self {
+        Costs { f_full: 12, b_num: 2, b_den: 1, comm_lat: 0 }
+    }
+}
+
+impl Costs {
+    pub fn chunk_f(&self, v: usize) -> u64 {
+        assert!(
+            self.f_full % v as u64 == 0,
+            "f_full={} not divisible by v={v}",
+            self.f_full
+        );
+        self.f_full / v as u64
+    }
+
+    pub fn chunk_b(&self, v: usize) -> u64 {
+        self.chunk_f(v) * self.b_num / self.b_den
+    }
+
+    pub fn of(&self, op: &CompOp, v: usize) -> u64 {
+        match op.kind {
+            OpKind::Forward => self.chunk_f(v),
+            OpKind::Backward => self.chunk_b(v),
+        }
+    }
+}
+
+/// A compute op with its assigned time interval `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimedOp {
+    pub op: CompOp,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// Result of ASAP re-timing: per-device timelines (in device-order).
+#[derive(Debug, Clone)]
+pub struct TimedSchedule {
+    pub devices: Vec<Vec<TimedOp>>,
+    pub makespan: u64,
+}
+
+impl TimedSchedule {
+    /// Busy ticks per device.
+    pub fn busy(&self) -> Vec<u64> {
+        self.devices
+            .iter()
+            .map(|ops| ops.iter().map(|t| t.end - t.start).sum())
+            .collect()
+    }
+
+    /// Idle (bubble) ticks per device over the full iteration `[0, makespan)`.
+    pub fn bubbles(&self) -> Vec<u64> {
+        self.busy().iter().map(|b| self.makespan - b).collect()
+    }
+
+    /// Paper's bubble ratio: total bubble / (D * makespan), equivalently
+    /// mean over devices of idle share.
+    pub fn bubble_ratio(&self) -> f64 {
+        if self.makespan == 0 || self.devices.is_empty() {
+            return 0.0;
+        }
+        let total_bubble: u64 = self.bubbles().iter().sum();
+        total_bubble as f64 / (self.makespan as f64 * self.devices.len() as f64)
+    }
+
+    /// End time of a specific op (None if absent).
+    pub fn end_of(&self, op: &CompOp) -> Option<u64> {
+        for dev in &self.devices {
+            for t in dev {
+                if &t.op == op {
+                    return Some(t.end);
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Dataflow dependencies of a compute op within its pipeline replica.
+///
+/// * `F(p,s,m)` for `s>0` depends on `F(p,s-1,m)`;
+/// * `B(p,S-1,m)` depends on `F(p,S-1,m)` (loss is computed at the last
+///   stage — its stash is the forward input);
+/// * `B(p,s,m)` for `s<S-1` depends on `B(p,s+1,m)` *and* `F(p,s,m)`.
+pub fn deps_of(op: &CompOp, n_stages: usize) -> Vec<CompOp> {
+    let mut d = Vec::with_capacity(2);
+    match op.kind {
+        OpKind::Forward => {
+            if op.stage > 0 {
+                d.push(CompOp::fwd(op.pipe, op.stage - 1, op.mb));
+            }
+        }
+        OpKind::Backward => {
+            d.push(CompOp::fwd(op.pipe, op.stage, op.mb));
+            if op.stage + 1 < n_stages {
+                d.push(CompOp::bwd(op.pipe, op.stage + 1, op.mb));
+            }
+        }
+    }
+    d
+}
+
+/// Errors from re-timing.
+#[derive(Debug, thiserror::Error)]
+pub enum AsapError {
+    #[error("schedule deadlock: no device can progress; stuck ops: {0}")]
+    Deadlock(String),
+    #[error("op {0} appears on device {1} but is placed on device {2}")]
+    Misplaced(CompOp, usize, usize),
+}
+
+/// Compute earliest start times for `order` (per-device op sequences),
+/// respecting both per-device serialization and cross-op dataflow.
+///
+/// Returns an error if the per-device orders are inconsistent with the
+/// dataflow (deadlock) or an op sits on the wrong device.
+pub fn retime(
+    order: &[Vec<CompOp>],
+    placement: &Placement,
+    costs: &Costs,
+) -> Result<TimedSchedule, AsapError> {
+    let n_stages = placement.n_stages();
+    let v = placement.v;
+    let n_dev = order.len();
+
+    // Validate placement once up front.
+    for (dev, ops) in order.iter().enumerate() {
+        for op in ops {
+            let want = placement.device(op.pipe, op.stage);
+            if want != dev {
+                return Err(AsapError::Misplaced(*op, dev, want));
+            }
+        }
+    }
+
+    let total: usize = order.iter().map(|o| o.len()).sum();
+    let mut done: HashMap<CompOp, u64> = HashMap::with_capacity(total);
+    let mut cursor = vec![0usize; n_dev];
+    let mut avail = vec![0u64; n_dev];
+    let mut out: Vec<Vec<TimedOp>> = vec![Vec::new(); n_dev];
+    let mut scheduled = 0usize;
+
+    while scheduled < total {
+        let mut progressed = false;
+        for dev in 0..n_dev {
+            // Drain every currently-executable op on this device before
+            // moving on; a single sweep per outer loop is also correct but
+            // this is faster.
+            while cursor[dev] < order[dev].len() {
+                let op = order[dev][cursor[dev]];
+                let deps = deps_of(&op, n_stages);
+                let mut ready_at = avail[dev];
+                let mut ok = true;
+                for dep in &deps {
+                    match done.get(dep) {
+                        Some(&end) => {
+                            let lat = if placement.device(dep.pipe, dep.stage)
+                                != placement.device(op.pipe, op.stage)
+                            {
+                                costs.comm_lat
+                            } else {
+                                0
+                            };
+                            ready_at = ready_at.max(end + lat);
+                        }
+                        None => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if !ok {
+                    break;
+                }
+                let dur = costs.of(&op, v);
+                let end = ready_at + dur;
+                out[dev].push(TimedOp { op, start: ready_at, end });
+                done.insert(op, end);
+                avail[dev] = end;
+                cursor[dev] += 1;
+                scheduled += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            let stuck: Vec<String> = (0..n_dev)
+                .filter(|&d| cursor[d] < order[d].len())
+                .map(|d| format!("d{}:{}", d, order[d][cursor[d]]))
+                .collect();
+            return Err(AsapError::Deadlock(stuck.join(", ")));
+        }
+    }
+
+    let makespan = out
+        .iter()
+        .flat_map(|ops| ops.iter().map(|t| t.end))
+        .max()
+        .unwrap_or(0);
+    Ok(TimedSchedule { devices: out, makespan })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::ir::Placement;
+
+    fn chain_placement(d: usize) -> Placement {
+        Placement::from_fn(d, 1, 1, |_p, s| s)
+    }
+
+    #[test]
+    fn costs_chunking() {
+        let c = Costs::default();
+        assert_eq!(c.chunk_f(1), 12);
+        assert_eq!(c.chunk_f(2), 6);
+        assert_eq!(c.chunk_b(2), 12);
+        assert_eq!(c.chunk_b(3), 8);
+    }
+
+    #[test]
+    fn two_device_single_mb() {
+        // F(s0)@d0, F(s1)@d1, B(s1)@d1, B(s0)@d0 — pure chain.
+        let p = chain_placement(2);
+        let order = vec![
+            vec![CompOp::fwd(0, 0, 0), CompOp::bwd(0, 0, 0)],
+            vec![CompOp::fwd(0, 1, 0), CompOp::bwd(0, 1, 0)],
+        ];
+        let t = retime(&order, &p, &Costs::default()).unwrap();
+        // 12 + 12 + 24 + 24 = 72 makespan.
+        assert_eq!(t.makespan, 72);
+        assert_eq!(t.devices[0][0].start, 0);
+        assert_eq!(t.devices[1][0].start, 12);
+        assert_eq!(t.devices[1][1].start, 24);
+        assert_eq!(t.devices[0][1].start, 48);
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        // Device 0 wants B before its F dependency chain can complete:
+        // B(s0) placed before F(s0) on the same device.
+        let p = chain_placement(1);
+        let order = vec![vec![CompOp::bwd(0, 0, 0), CompOp::fwd(0, 0, 0)]];
+        assert!(matches!(
+            retime(&order, &p, &Costs::default()),
+            Err(AsapError::Deadlock(_))
+        ));
+    }
+
+    #[test]
+    fn misplaced_detected() {
+        let p = chain_placement(2);
+        let order = vec![vec![CompOp::fwd(0, 1, 0)], vec![]];
+        assert!(matches!(
+            retime(&order, &p, &Costs::default()),
+            Err(AsapError::Misplaced(..))
+        ));
+    }
+
+    #[test]
+    fn comm_latency_shifts_downstream() {
+        let p = chain_placement(2);
+        let order = vec![vec![CompOp::fwd(0, 0, 0)], vec![CompOp::fwd(0, 1, 0)]];
+        let mut c = Costs::default();
+        c.comm_lat = 5;
+        let t = retime(&order, &p, &c).unwrap();
+        assert_eq!(t.devices[1][0].start, 17); // 12 + 5
+    }
+
+    #[test]
+    fn bubble_accounting() {
+        let p = chain_placement(2);
+        let order = vec![
+            vec![CompOp::fwd(0, 0, 0), CompOp::bwd(0, 0, 0)],
+            vec![CompOp::fwd(0, 1, 0), CompOp::bwd(0, 1, 0)],
+        ];
+        let t = retime(&order, &p, &Costs::default()).unwrap();
+        let busy = t.busy();
+        assert_eq!(busy, vec![36, 36]);
+        assert_eq!(t.bubbles(), vec![36, 36]);
+        assert!((t.bubble_ratio() - 0.5).abs() < 1e-9);
+    }
+}

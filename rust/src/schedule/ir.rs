@@ -1,0 +1,414 @@
+//! Instruction IR for synchronous pipeline-parallel schedules.
+//!
+//! A *schedule* is, per device, an ordered stream of [`Instr`]s: compute ops
+//! (forward / backward of a model chunk on one micro-batch), point-to-point
+//! communication ops (send/recv of activations and gradients), local copies
+//! (the V-shape payoff: producer and consumer chunk co-located), collective
+//! gradient synchronization, and optimizer steps.
+//!
+//! The same IR drives three consumers:
+//!   * the **analysis engine** (`analysis.rs`) — bubble ratio, peak memory,
+//!     communication volume (paper Tables 2 and 6);
+//!   * the **discrete-event simulator** (`crate::sim`) — virtual-time
+//!     execution under a cluster cost model (paper Figs 8–11, Tables 4/5/7);
+//!   * the **real training runtime** (`crate::train`) — threads-as-devices
+//!     executing AOT-compiled XLA chunk executables.
+
+use std::fmt;
+
+/// Device index within one pipeline-parallel group, `0..D`.
+pub type DeviceId = usize;
+/// Model stage (chunk) index within one pipeline replica, `0..v*D`.
+pub type StageId = usize;
+/// Micro-batch index within one training iteration, `0..N` (global ids;
+/// bidirectional schedules partition them between the two pipelines).
+pub type MicroBatch = usize;
+/// Pipeline replica index: `0` = down pipeline, `1` = up pipeline.
+pub type PipeId = usize;
+
+/// Compute op kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    Forward,
+    Backward,
+}
+
+/// A single compute op: run chunk `stage` of pipeline replica `pipe` on
+/// micro-batch `mb`, in the given direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CompOp {
+    pub kind: OpKind,
+    pub pipe: PipeId,
+    pub stage: StageId,
+    pub mb: MicroBatch,
+}
+
+impl CompOp {
+    pub fn fwd(pipe: PipeId, stage: StageId, mb: MicroBatch) -> Self {
+        CompOp { kind: OpKind::Forward, pipe, stage, mb }
+    }
+    pub fn bwd(pipe: PipeId, stage: StageId, mb: MicroBatch) -> Self {
+        CompOp { kind: OpKind::Backward, pipe, stage, mb }
+    }
+    pub fn is_fwd(&self) -> bool {
+        self.kind == OpKind::Forward
+    }
+}
+
+impl fmt::Display for CompOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let k = if self.is_fwd() { 'F' } else { 'B' };
+        write!(f, "{}{}(p{},s{})", k, self.mb, self.pipe, self.stage)
+    }
+}
+
+/// Full instruction set executed by one device.
+///
+/// P2P ops are tagged with the *consumer-side* chunk coordinates so the
+/// runtime can match sends and receives out of order (tagged mailboxes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Instr {
+    /// Run chunk forward. Stashes the chunk input for the matching backward.
+    Forward { pipe: PipeId, stage: StageId, mb: MicroBatch },
+    /// Run chunk backward (consumes the stash; accumulates weight grads).
+    Backward { pipe: PipeId, stage: StageId, mb: MicroBatch },
+    /// Send the activation produced by local `stage` to the device holding
+    /// `stage + 1` of the same pipe.
+    SendAct { to: DeviceId, pipe: PipeId, stage: StageId, mb: MicroBatch },
+    /// Receive the activation feeding local `stage` (produced by `stage-1`).
+    RecvAct { from: DeviceId, pipe: PipeId, stage: StageId, mb: MicroBatch },
+    /// Send the input-gradient produced by local `stage`'s backward to the
+    /// device holding `stage - 1`.
+    SendGrad { to: DeviceId, pipe: PipeId, stage: StageId, mb: MicroBatch },
+    /// Receive the output-gradient feeding local `stage`'s backward
+    /// (produced by `stage+1`'s backward).
+    RecvGrad { from: DeviceId, pipe: PipeId, stage: StageId, mb: MicroBatch },
+    /// Producer chunk `stage` and consumer chunk `stage+1` are co-located:
+    /// forward hand-off is a local copy (no P2P). The V-shape optimization.
+    LocalCopyAct { pipe: PipeId, stage: StageId, mb: MicroBatch },
+    /// Same for the backward hand-off (`stage` -> `stage-1` gradient).
+    LocalCopyGrad { pipe: PipeId, stage: StageId, mb: MicroBatch },
+    /// Launch gradient all-reduce for model `stage` across all replicas of
+    /// that stage (bidirectional twin + data-parallel group). Non-blocking.
+    AllReduceStart { stage: StageId },
+    /// Block until the all-reduce for `stage` completed.
+    AllReduceWait { stage: StageId },
+    /// Apply the optimizer update for local replica(s) of model `stage`.
+    OptimStep { stage: StageId },
+}
+
+impl Instr {
+    /// The compute op, if this is a Forward/Backward.
+    pub fn comp(&self) -> Option<CompOp> {
+        match *self {
+            Instr::Forward { pipe, stage, mb } => Some(CompOp::fwd(pipe, stage, mb)),
+            Instr::Backward { pipe, stage, mb } => Some(CompOp::bwd(pipe, stage, mb)),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Instr::Forward { pipe, stage, mb } => write!(f, "F{}(p{},s{})", mb, pipe, stage),
+            Instr::Backward { pipe, stage, mb } => write!(f, "B{}(p{},s{})", mb, pipe, stage),
+            Instr::SendAct { to, pipe, stage, mb } => {
+                write!(f, "SA{}(p{},s{})->d{}", mb, pipe, stage, to)
+            }
+            Instr::RecvAct { from, pipe, stage, mb } => {
+                write!(f, "RA{}(p{},s{})<-d{}", mb, pipe, stage, from)
+            }
+            Instr::SendGrad { to, pipe, stage, mb } => {
+                write!(f, "SG{}(p{},s{})->d{}", mb, pipe, stage, to)
+            }
+            Instr::RecvGrad { from, pipe, stage, mb } => {
+                write!(f, "RG{}(p{},s{})<-d{}", mb, pipe, stage, from)
+            }
+            Instr::LocalCopyAct { pipe, stage, mb } => write!(f, "LC{}(p{},s{})", mb, pipe, stage),
+            Instr::LocalCopyGrad { pipe, stage, mb } => {
+                write!(f, "LG{}(p{},s{})", mb, pipe, stage)
+            }
+            Instr::AllReduceStart { stage } => write!(f, "AR+s{}", stage),
+            Instr::AllReduceWait { stage } => write!(f, "AR?s{}", stage),
+            Instr::OptimStep { stage } => write!(f, "OPT s{}", stage),
+        }
+    }
+}
+
+/// Where each (pipe, stage) chunk lives, and the reverse map.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// Number of pipeline devices D.
+    pub d: usize,
+    /// Chunks per device per pipeline (paper's `v`; 1 for non-interleaved).
+    pub v: usize,
+    /// Number of pipeline replicas (1 unidirectional, 2 bidirectional).
+    pub n_pipes: usize,
+    /// `device_of[pipe][stage]` — the device executing that chunk.
+    pub device_of: Vec<Vec<DeviceId>>,
+    /// `chunks_on[device]` — (pipe, stage) chunks hosted by the device, in
+    /// ascending (pipe, stage) order.
+    pub chunks_on: Vec<Vec<(PipeId, StageId)>>,
+}
+
+impl Placement {
+    /// Build from a per-pipe stage->device function.
+    pub fn from_fn(
+        d: usize,
+        v: usize,
+        n_pipes: usize,
+        f: impl Fn(PipeId, StageId) -> DeviceId,
+    ) -> Self {
+        let n_stages = v * d;
+        let mut device_of = vec![vec![0usize; n_stages]; n_pipes];
+        let mut chunks_on = vec![Vec::new(); d];
+        for p in 0..n_pipes {
+            for s in 0..n_stages {
+                let dev = f(p, s);
+                assert!(dev < d, "placement out of range: pipe {p} stage {s} -> dev {dev}");
+                device_of[p][s] = dev;
+                chunks_on[dev].push((p, s));
+            }
+        }
+        Placement { d, v, n_pipes, device_of, chunks_on }
+    }
+
+    /// Total stages per pipeline replica (`v * D`).
+    pub fn n_stages(&self) -> usize {
+        self.v * self.d
+    }
+
+    pub fn device(&self, pipe: PipeId, stage: StageId) -> DeviceId {
+        self.device_of[pipe][stage]
+    }
+
+    /// Devices participating in the gradient all-reduce for model `stage`
+    /// (one per pipeline replica holding that stage; deduplicated).
+    pub fn allreduce_group(&self, stage: StageId) -> Vec<DeviceId> {
+        let mut g: Vec<DeviceId> = (0..self.n_pipes).map(|p| self.device_of[p][stage]).collect();
+        g.sort_unstable();
+        g.dedup();
+        g
+    }
+}
+
+/// Which pipeline schedule; mirrors the paper's comparison set
+/// (Figs 1, 2, 13; Tables 2, 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScheduleKind {
+    /// GPipe (Huang et al. 2019): all forwards, then all backwards.
+    GPipe,
+    /// DAPPLE / PipeDream-Flush 1F1B (Fan et al. 2021; Narayanan et al. 2021a).
+    Dapple,
+    /// 1F1B-Int, Megatron-LM interleaved looping schedule
+    /// (Narayanan et al. 2021b), `v` chunks per device.
+    Interleaved,
+    /// GEMS (Jain et al. 2020): bidirectional, at most two concurrent
+    /// micro-batches; memory-efficient, high bubble ratio.
+    Gems,
+    /// Chimera (Li & Hoefler 2021): two non-interleaved pipelines in
+    /// opposite directions.
+    Chimera,
+    /// MixPipe (Zhang et al. 2023): bidirectional with regulated injection.
+    MixPipe,
+    /// BitPipe (this paper): two V-shaped interleaved pipelines fused.
+    BitPipe,
+    /// Ablation: BitPipe w/o V — looping (1F1B-Int) placement instead of
+    /// the V-shape, still bidirectional (paper Table 5).
+    BitPipeNoV,
+    /// Single-pipeline V-shaped interleaved schedule (paper Fig 4b) —
+    /// 1F1B-Int order with the V placement; used to isolate the local-copy
+    /// benefit.
+    VShaped,
+}
+
+impl ScheduleKind {
+    pub const ALL: [ScheduleKind; 9] = [
+        ScheduleKind::GPipe,
+        ScheduleKind::Dapple,
+        ScheduleKind::Interleaved,
+        ScheduleKind::Gems,
+        ScheduleKind::Chimera,
+        ScheduleKind::MixPipe,
+        ScheduleKind::BitPipe,
+        ScheduleKind::BitPipeNoV,
+        ScheduleKind::VShaped,
+    ];
+
+    /// The five headline approaches of the paper's evaluation.
+    pub const PAPER_BASELINES: [ScheduleKind; 5] = [
+        ScheduleKind::Dapple,
+        ScheduleKind::Interleaved,
+        ScheduleKind::Chimera,
+        ScheduleKind::MixPipe,
+        ScheduleKind::BitPipe,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleKind::GPipe => "gpipe",
+            ScheduleKind::Dapple => "dapple",
+            ScheduleKind::Interleaved => "1f1b-int",
+            ScheduleKind::Gems => "gems",
+            ScheduleKind::Chimera => "chimera",
+            ScheduleKind::MixPipe => "mixpipe",
+            ScheduleKind::BitPipe => "bitpipe",
+            ScheduleKind::BitPipeNoV => "bitpipe-no-v",
+            ScheduleKind::VShaped => "v-shaped",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ScheduleKind> {
+        Self::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// Is this a bidirectional (two-replica) schedule?
+    pub fn bidirectional(&self) -> bool {
+        matches!(
+            self,
+            ScheduleKind::Gems
+                | ScheduleKind::Chimera
+                | ScheduleKind::MixPipe
+                | ScheduleKind::BitPipe
+                | ScheduleKind::BitPipeNoV
+        )
+    }
+
+    /// Default chunks-per-device `v` (2 for interleaved family, else 1).
+    pub fn default_v(&self) -> usize {
+        match self {
+            ScheduleKind::Interleaved
+            | ScheduleKind::BitPipe
+            | ScheduleKind::BitPipeNoV
+            | ScheduleKind::VShaped => 2,
+            _ => 1,
+        }
+    }
+}
+
+impl fmt::Display for ScheduleKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// When gradient all-reduce is launched relative to the backward passes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncPolicy {
+    /// Launch each stage's all-reduce as soon as its last local backward
+    /// completed, exploiting trailing bubbles (paper Fig 5b; the default).
+    Eager,
+    /// Synchronize every stage after all local compute (paper Fig 5a; the
+    /// `w/o E` ablation of Table 5).
+    Lazy,
+}
+
+/// Parameters selecting and shaping a schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct ScheduleConfig {
+    pub kind: ScheduleKind,
+    /// Pipeline devices D (even for bidirectional kinds).
+    pub d: usize,
+    /// Micro-batches per iteration N (paper: multiples of D).
+    pub n: usize,
+    /// Chunks per device per pipeline (paper's v; Appendix A generalization).
+    pub v: usize,
+    pub sync: SyncPolicy,
+    /// Appendix B early-forwarding when N > D (BitPipe only): pull forwards
+    /// of later basic units into the bubbles of earlier units.
+    pub early_forward: bool,
+}
+
+impl ScheduleConfig {
+    pub fn new(kind: ScheduleKind, d: usize, n: usize) -> Self {
+        ScheduleConfig { kind, d, n, v: kind.default_v(), sync: SyncPolicy::Eager, early_forward: true }
+    }
+
+    pub fn with_v(mut self, v: usize) -> Self {
+        self.v = v;
+        self
+    }
+
+    pub fn with_sync(mut self, sync: SyncPolicy) -> Self {
+        self.sync = sync;
+        self
+    }
+
+    pub fn with_early_forward(mut self, ef: bool) -> Self {
+        self.early_forward = ef;
+        self
+    }
+
+    /// Total chunk-forwards (== chunk-backwards) in one iteration.
+    pub fn total_chunk_ops(&self) -> usize {
+        self.n * self.v * self.d
+    }
+}
+
+/// A fully generated schedule: placement + per-device instruction streams.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub cfg: ScheduleConfig,
+    pub placement: Placement,
+    /// Compute-only per-device order (the "what runs when" skeleton).
+    pub compute_order: Vec<Vec<CompOp>>,
+    /// Full instruction streams including comm/collective/optimizer ops,
+    /// produced by `comm_pass`.
+    pub device_ops: Vec<Vec<Instr>>,
+    /// Which pipe each micro-batch is injected into.
+    pub pipe_of_mb: Vec<PipeId>,
+}
+
+impl Schedule {
+    /// Micro-batches processed by pipeline replica `p`, ascending.
+    pub fn mbs_of_pipe(&self, p: PipeId) -> Vec<MicroBatch> {
+        self.pipe_of_mb
+            .iter()
+            .enumerate()
+            .filter(|&(_, &q)| q == p)
+            .map(|(m, _)| m)
+            .collect()
+    }
+
+    /// Number of devices.
+    pub fn n_devices(&self) -> usize {
+        self.placement.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_from_fn_roundtrip() {
+        // Looping placement, D=4 v=2: stage s -> device s % D.
+        let p = Placement::from_fn(4, 2, 1, |_p, s| s % 4);
+        assert_eq!(p.n_stages(), 8);
+        assert_eq!(p.device(0, 5), 1);
+        assert_eq!(p.chunks_on[1], vec![(0, 1), (0, 5)]);
+    }
+
+    #[test]
+    fn allreduce_group_dedups() {
+        // Bidirectional: down s->s%2, up s->1-(s%2) on D=2, v=1.
+        let p = Placement::from_fn(2, 1, 2, |pipe, s| if pipe == 0 { s } else { 1 - s });
+        assert_eq!(p.allreduce_group(0), vec![0, 1]);
+        assert_eq!(p.allreduce_group(1), vec![0, 1]);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in ScheduleKind::ALL {
+            assert_eq!(ScheduleKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(ScheduleKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn comp_op_display() {
+        assert_eq!(CompOp::fwd(0, 3, 7).to_string(), "F7(p0,s3)");
+        assert_eq!(CompOp::bwd(1, 0, 2).to_string(), "B2(p1,s0)");
+    }
+}

@@ -1,0 +1,39 @@
+//! Pipeline-parallel schedules: the paper's contribution (BitPipe) and all
+//! baselines, over a shared instruction IR.
+//!
+//! Pipeline: `generate` (compute orders) -> `comm_pass` (P2P/collective
+//! instructions) -> consumers (`validate`, `analysis`, `timeline`,
+//! `crate::sim`, `crate::train`).
+
+pub mod analysis;
+pub mod asap;
+pub mod comm_pass;
+pub mod generate;
+pub mod greedy;
+pub mod ir;
+pub mod slotted;
+pub mod timeline;
+pub mod unidir;
+pub mod validate;
+
+pub use asap::{retime, Costs, TimedOp, TimedSchedule};
+pub use generate::{generate_compute, placement_for};
+pub use ir::{
+    CompOp, DeviceId, Instr, MicroBatch, OpKind, PipeId, Placement, Schedule, ScheduleConfig,
+    ScheduleKind, StageId, SyncPolicy,
+};
+
+use anyhow::Result;
+
+/// Full schedule build: compute order generation + communication pass.
+pub fn build(cfg: &ScheduleConfig) -> Result<Schedule> {
+    let costs = Costs::default();
+    build_with_costs(cfg, &costs)
+}
+
+/// Full schedule build with explicit geometry costs.
+pub fn build_with_costs(cfg: &ScheduleConfig, costs: &Costs) -> Result<Schedule> {
+    let mut s = generate_compute(cfg, costs)?;
+    comm_pass::insert_comm(&mut s)?;
+    Ok(s)
+}

@@ -1,0 +1,157 @@
+//! Timeline rendering: ASCII pipeline diagrams (the paper's Figs 1, 2, 3,
+//! 13) and CSV dumps for external plotting.
+//!
+//! One character column = one tick of the [`Costs`] geometry; each device
+//! is one row. Forwards print the micro-batch id (down pipe) or letter
+//! (up pipe, mirroring the paper's black/white text distinction), backwards
+//! print the id in brackets-free lowercase-hex-style but twice as wide
+//! (t_b = 2 t_f).
+
+use super::asap::{retime, Costs, TimedSchedule};
+use super::ir::{OpKind, Schedule};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// Render options.
+#[derive(Debug, Clone, Copy)]
+pub struct RenderOpts {
+    /// Ticks per character column (compresses long schedules).
+    pub ticks_per_col: u64,
+    /// Show chunk (stage) id instead of micro-batch id.
+    pub show_stage: bool,
+}
+
+impl Default for RenderOpts {
+    fn default() -> Self {
+        RenderOpts { ticks_per_col: 1, show_stage: false }
+    }
+}
+
+/// Character for an op cell. Down pipe: digits/uppercase; up pipe:
+/// lowercase letters. Forward cells use the plain symbol, backward cells
+/// the same symbol (the doubled width already distinguishes them visually);
+/// second chunk (odd rounds) renders in a distinct alphabet when
+/// `show_stage` is off, mirroring the paper's dark/light shading.
+fn cell_symbol(pipe: usize, stage: usize, mb: usize, d: usize, show_stage: bool) -> char {
+    let idx = if show_stage { stage } else { mb };
+    let second_chunk = (stage / d) % 2 == 1;
+    match (pipe, second_chunk) {
+        (0, false) => char::from_digit((idx % 10) as u32, 10).unwrap(),
+        (0, true) => (b'A' + (idx % 26) as u8) as char,
+        (1, false) => (b'a' + (idx % 26) as u8) as char,
+        (1, true) => {
+            const SYM: &[u8] = b"!@#$%^&*()+=~<>?/|{}[]";
+            SYM[idx % SYM.len()] as char
+        }
+        _ => '?',
+    }
+}
+
+/// Render a timed schedule as an ASCII grid.
+pub fn render_timed(t: &TimedSchedule, d_hint: usize, opts: &RenderOpts) -> String {
+    let cols = (t.makespan + opts.ticks_per_col - 1) / opts.ticks_per_col;
+    let mut out = String::new();
+    for (dev, ops) in t.devices.iter().enumerate() {
+        let mut row = vec!['.'; cols as usize];
+        for top in ops {
+            let c = cell_symbol(top.op.pipe, top.op.stage, top.op.mb, d_hint, opts.show_stage);
+            let c0 = top.start / opts.ticks_per_col;
+            let c1 = ((top.end + opts.ticks_per_col - 1) / opts.ticks_per_col).min(cols);
+            for col in c0..c1 {
+                row[col as usize] = c;
+            }
+        }
+        let _ = writeln!(out, "P{:<2} {}", dev + 1, row.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "    makespan={} ticks, bubble_ratio={:.4}", t.makespan, t.bubble_ratio());
+    out
+}
+
+/// Render a schedule (re-times internally).
+pub fn render(s: &Schedule, costs: &Costs, opts: &RenderOpts) -> Result<String> {
+    let t = retime(&s.compute_order, &s.placement, costs)
+        .map_err(|e| anyhow::anyhow!("retime: {e}"))?;
+    let mut header = format!(
+        "{} D={} N={} v={} ({})\n",
+        s.cfg.kind,
+        s.cfg.d,
+        s.cfg.n,
+        s.cfg.v,
+        if s.placement.n_pipes == 2 { "bidirectional" } else { "unidirectional" }
+    );
+    header.push_str(&render_timed(&t, s.cfg.d, opts));
+    Ok(header)
+}
+
+/// CSV dump: one row per op — device,start,end,kind,pipe,stage,mb.
+pub fn to_csv(s: &Schedule, costs: &Costs) -> Result<String> {
+    let t = retime(&s.compute_order, &s.placement, costs)
+        .map_err(|e| anyhow::anyhow!("retime: {e}"))?;
+    let mut out = String::from("device,start,end,kind,pipe,stage,mb\n");
+    for (dev, ops) in t.devices.iter().enumerate() {
+        for top in ops {
+            let k = match top.op.kind {
+                OpKind::Forward => "F",
+                OpKind::Backward => "B",
+            };
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{},{}",
+                dev, top.start, top.end, k, top.op.pipe, top.op.stage, top.op.mb
+            );
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::ir::{ScheduleConfig, ScheduleKind};
+    use crate::schedule::build;
+
+    #[test]
+    fn render_has_one_row_per_device() {
+        let s = build(&ScheduleConfig::new(ScheduleKind::BitPipe, 4, 4)).unwrap();
+        let txt = render(&s, &Costs::default(), &RenderOpts::default()).unwrap();
+        let rows = txt.lines().filter(|l| l.starts_with('P')).count();
+        assert_eq!(rows, 4);
+    }
+
+    #[test]
+    fn render_width_matches_makespan() {
+        let s = build(&ScheduleConfig::new(ScheduleKind::Dapple, 4, 4)).unwrap();
+        let costs = Costs::default();
+        let t = retime(&s.compute_order, &s.placement, &costs).unwrap();
+        let txt = render_timed(&t, 4, &RenderOpts::default());
+        let first = txt.lines().next().unwrap();
+        // "Pn  " prefix is 4 chars.
+        assert_eq!(first.len() as u64 - 4, t.makespan);
+    }
+
+    #[test]
+    fn compression_shrinks_output() {
+        let s = build(&ScheduleConfig::new(ScheduleKind::GPipe, 4, 8)).unwrap();
+        let costs = Costs::default();
+        let full = render(&s, &costs, &RenderOpts::default()).unwrap();
+        let half = render(&s, &costs, &RenderOpts { ticks_per_col: 6, show_stage: false }).unwrap();
+        assert!(half.len() < full.len());
+    }
+
+    #[test]
+    fn csv_row_count() {
+        let s = build(&ScheduleConfig::new(ScheduleKind::Chimera, 4, 4)).unwrap();
+        let csv = to_csv(&s, &Costs::default()).unwrap();
+        // header + 2 ops per (stage, mb): D stages * N mbs * 2.
+        assert_eq!(csv.lines().count(), 1 + 2 * 4 * 4);
+    }
+
+    #[test]
+    fn bidirectional_renders_both_alphabets() {
+        let s = build(&ScheduleConfig::new(ScheduleKind::BitPipe, 4, 4)).unwrap();
+        let txt = render(&s, &Costs::default(), &RenderOpts::default()).unwrap();
+        let grid: String = txt.lines().filter(|l| l.starts_with('P')).map(|l| &l[4..]).collect();
+        assert!(grid.contains('0'), "down-pipe digits missing");
+        assert!(grid.chars().any(|c| c.is_ascii_lowercase()), "up-pipe letters missing");
+    }
+}

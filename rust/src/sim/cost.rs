@@ -1,0 +1,198 @@
+//! Analytical cost model: maps (model, parallel, cluster) configurations to
+//! per-instruction times in seconds.
+//!
+//! * Compute — transformer FLOP counts (Megatron accounting) over the
+//!   device's sustained FLOP rate; backward = 2x forward (paper premise).
+//! * P2P — `message_size = dtype * B * S * H` bytes (paper Appendix C)
+//!   over the link class between the two physical devices.
+//! * All-reduce — ring algorithm: `2 (g-1)/g * bytes / bw_bottleneck`,
+//!   where the group spans the bidirectional twin and the W data-parallel
+//!   replicas; the bottleneck link depends on the Fig 6 mapping policy.
+
+use crate::config::{ClusterConfig, LinkKind, MappingPolicy, ModelConfig, ParallelConfig};
+use crate::schedule::{DeviceId, Placement, StageId};
+
+/// Per-instruction costs in seconds for one simulated pipeline group.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Forward time of one chunk (stage) on one micro-batch.
+    pub chunk_fwd: f64,
+    /// Backward time of one chunk on one micro-batch.
+    pub chunk_bwd: f64,
+    /// Activation / gradient message bytes.
+    pub msg_bytes: u64,
+    /// Gradient bytes per *stage* all-reduce (one chunk's parameters).
+    pub grad_bytes: u64,
+    /// All-reduce group size g (bidirectional twins x W replicas).
+    pub allreduce_group: usize,
+    /// Bottleneck link for the all-reduce under the mapping policy.
+    pub allreduce_link: LinkKind,
+    /// Cluster parameters (bandwidth/latency tables).
+    pub cluster: ClusterConfig,
+    /// Pipeline-parallel sizes.
+    pub d: usize,
+    pub w: usize,
+}
+
+impl CostModel {
+    pub fn new(model: &ModelConfig, parallel: &ParallelConfig, cluster: &ClusterConfig) -> Self {
+        let chunks = parallel.v * parallel.d;
+        // Layers per chunk (at least one; tiny models on deep pipelines
+        // saturate at 1 layer per chunk).
+        let layers_per_chunk = (model.n_layers + chunks - 1) / chunks;
+        let fwd_flops = model.layer_fwd_flops(parallel.b) * layers_per_chunk as u64;
+        // Small micro-batches under-utilize the device (occupancy/launch
+        // bound) — the effect behind paper Fig 11(b)'s B sensitivity.
+        let eff = cluster.mbs_efficiency(parallel.b);
+        let chunk_fwd = fwd_flops as f64 / (cluster.flops * eff);
+        let chunk_bwd = 2.0 * chunk_fwd;
+        let msg_bytes = model.message_bytes(parallel.b);
+        let grad_bytes =
+            model.params_per_layer() * layers_per_chunk as u64 * model.dtype_bytes as u64;
+
+        // All-reduce group: both directions of the bidirectional pipe (if
+        // any) times W replicas.
+        let twins = if parallel.kind.bidirectional() { 2 } else { 1 };
+        let group = twins * parallel.w;
+
+        // Link class for the all-reduce ring (Fig 6): with the
+        // ReplicasTogether mapping all replicas of a stage share a node as
+        // long as the group fits; otherwise the ring spills onto IB.
+        let allreduce_link = if group == 1 {
+            LinkKind::Local
+        } else {
+            match cluster.mapping {
+                MappingPolicy::ReplicasTogether if group <= cluster.devices_per_node => {
+                    LinkKind::NvLink
+                }
+                _ => LinkKind::InfiniBand,
+            }
+        };
+
+        CostModel {
+            chunk_fwd,
+            chunk_bwd,
+            msg_bytes,
+            grad_bytes,
+            allreduce_group: group,
+            allreduce_link,
+            cluster: *cluster,
+            d: parallel.d,
+            w: parallel.w,
+        }
+    }
+
+    /// Physical device of pipeline-device `dev` in the simulated group
+    /// (group 0) under the mapping policy.
+    fn physical(&self, dev: DeviceId) -> usize {
+        self.cluster.physical_device(self.cluster.mapping, 0, dev, self.w.max(1), self.d)
+    }
+
+    /// P2P transfer time between pipeline devices `a` and `b`.
+    pub fn p2p_time(&self, a: DeviceId, b: DeviceId) -> f64 {
+        let (pa, pb) = (self.physical(a), self.physical(b));
+        self.cluster.xfer_time(pa, pb, self.msg_bytes)
+    }
+
+    /// Local copy time (same device HBM->HBM).
+    pub fn local_copy_time(&self) -> f64 {
+        self.cluster.lat(LinkKind::Local)
+            + self.msg_bytes as f64 / self.cluster.bw(LinkKind::Local)
+    }
+
+    /// Ring all-reduce time for one stage's gradients.
+    pub fn allreduce_time(&self, _stage: StageId) -> f64 {
+        let g = self.allreduce_group as f64;
+        if self.allreduce_group <= 1 {
+            return 0.0;
+        }
+        let bw = self.cluster.bw(self.allreduce_link);
+        let lat = self.cluster.lat(self.allreduce_link);
+        // Ring: 2(g-1) steps, each moving bytes/g.
+        2.0 * (g - 1.0) * (self.grad_bytes as f64 / g / bw + lat)
+    }
+
+    /// Optimizer step time: elementwise update over the chunk's params,
+    /// modeled at HBM bandwidth (read grad+param+2 Adam moments, write 3).
+    pub fn optim_time(&self) -> f64 {
+        let bytes = self.grad_bytes as f64 * 7.0;
+        bytes / self.cluster.bw(LinkKind::Local)
+    }
+
+    /// Whether the P2P link between two pipeline devices crosses nodes.
+    pub fn p2p_link(&self, a: DeviceId, b: DeviceId, placement: &Placement) -> LinkKind {
+        let _ = placement;
+        self.cluster.link(self.physical(a), self.physical(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ParallelConfig, BERT_64};
+    use crate::schedule::ScheduleKind;
+
+    fn model_costs(kind: ScheduleKind, w: usize, d: usize) -> CostModel {
+        let p = ParallelConfig::new(kind, w, d, 4, d.max(2));
+        CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(w * d))
+    }
+
+    #[test]
+    fn bwd_twice_fwd() {
+        let c = model_costs(ScheduleKind::BitPipe, 1, 8);
+        assert!((c.chunk_bwd - 2.0 * c.chunk_fwd).abs() < 1e-15);
+    }
+
+    #[test]
+    fn interleaved_chunks_are_smaller() {
+        let bit = model_costs(ScheduleKind::BitPipe, 1, 8); // v=2: 4 layers/chunk
+        let dap = model_costs(ScheduleKind::Dapple, 1, 8); // v=1: 8 layers/chunk
+        assert!(bit.chunk_fwd < dap.chunk_fwd);
+        assert!((dap.chunk_fwd / bit.chunk_fwd - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn allreduce_group_and_link() {
+        // W=1 unidirectional: no allreduce.
+        let c = model_costs(ScheduleKind::Dapple, 1, 8);
+        assert_eq!(c.allreduce_group, 1);
+        assert_eq!(c.allreduce_time(0), 0.0);
+        // W=1 bidirectional: twins only, NVLink group of 2.
+        let c = model_costs(ScheduleKind::BitPipe, 1, 8);
+        assert_eq!(c.allreduce_group, 2);
+        assert_eq!(c.allreduce_link, LinkKind::NvLink);
+        assert!(c.allreduce_time(0) > 0.0);
+        // W=4 bidirectional: group of 8, still fits one node => NVLink.
+        let c = model_costs(ScheduleKind::BitPipe, 4, 8);
+        assert_eq!(c.allreduce_group, 8);
+        assert_eq!(c.allreduce_link, LinkKind::NvLink);
+        // W=8 bidirectional: group of 16 > 8/node => IB.
+        let c = model_costs(ScheduleKind::BitPipe, 8, 4);
+        assert_eq!(c.allreduce_link, LinkKind::InfiniBand);
+    }
+
+    #[test]
+    fn ring_scales_sublinearly() {
+        let c2 = model_costs(ScheduleKind::BitPipe, 1, 8);
+        let c8 = model_costs(ScheduleKind::BitPipe, 4, 8);
+        // Same per-stage bytes; larger group is slower but << 4x.
+        let t2 = c2.allreduce_time(0);
+        let t8 = c8.allreduce_time(0);
+        assert!(t8 > t2);
+        assert!(t8 < 2.0 * t2, "ring should scale ~(g-1)/g: {t2} vs {t8}");
+    }
+
+    #[test]
+    fn p2p_crosses_nodes_when_replicas_together() {
+        // ReplicasTogether with W=2, D=8 on 16 devices: pipeline neighbours
+        // d and d+1 sit 2 apart physically; half the hops cross nodes.
+        let c = model_costs(ScheduleKind::BitPipe, 2, 8);
+        let mut cross = 0;
+        for dev in 0..7 {
+            if c.cluster.link(c.physical(dev), c.physical(dev + 1)) == LinkKind::InfiniBand {
+                cross += 1;
+            }
+        }
+        assert!(cross > 0, "expected some inter-node P2P under ReplicasTogether");
+    }
+}

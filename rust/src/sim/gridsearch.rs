@@ -1,0 +1,123 @@
+//! Grid search over (W, D, B) — the paper's Table 4 procedure: for a fixed
+//! device count P and schedule, sweep the parameter space, drop layouts
+//! that do not fit in device memory, and report the best-throughput
+//! configuration.
+
+use super::{simulate, SimConfig, SimResult};
+use crate::config::{ClusterConfig, ModelConfig, ParallelConfig};
+use crate::schedule::ScheduleKind;
+use anyhow::Result;
+
+/// The search space (paper Table 4 "Considered Values").
+#[derive(Debug, Clone)]
+pub struct GridSpace {
+    pub w: Vec<usize>,
+    pub d: Vec<usize>,
+    pub b: Vec<usize>,
+}
+
+impl GridSpace {
+    /// Paper Table 4, BERT-64 row.
+    pub fn bert64() -> Self {
+        GridSpace { w: vec![1, 2, 4, 8], d: vec![4, 8, 16], b: vec![1, 2, 4, 8] }
+    }
+
+    /// Paper Table 4, GPT-96 row.
+    pub fn gpt96() -> Self {
+        GridSpace { w: vec![1, 2, 4], d: vec![8, 16], b: vec![1, 2] }
+    }
+}
+
+/// One evaluated grid point.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    pub parallel: ParallelConfig,
+    pub result: SimResult,
+}
+
+/// Sweep the space for one schedule on `n_devices` total devices with a
+/// fixed mini-batch size `minibatch` (the paper holds B-hat fixed per GPU
+/// count and model; N is derived as minibatch / (B*W), floored to a
+/// multiple of D as the paper's N=D-default requires).
+///
+/// Returns all feasible points sorted by descending throughput.
+pub fn grid_search(
+    kind: ScheduleKind,
+    model: &ModelConfig,
+    space: &GridSpace,
+    n_devices: usize,
+    minibatch: usize,
+) -> Result<Vec<GridPoint>> {
+    let mut points = Vec::new();
+    for &w in &space.w {
+        for &d in &space.d {
+            if w * d != n_devices {
+                continue;
+            }
+            for &b in &space.b {
+                // Derive N from the fixed mini-batch: B-hat = B * N * W.
+                if minibatch % (b * w) != 0 {
+                    continue;
+                }
+                let n = minibatch / (b * w);
+                if n < d || n % d != 0 {
+                    continue; // paper requires N >= D, N % D == 0
+                }
+                let parallel = ParallelConfig::new(kind, w, d, b, n);
+                if parallel.validate().is_err() {
+                    continue;
+                }
+                let cluster = ClusterConfig::paper_testbed(n_devices);
+                let cfg = SimConfig { model: *model, parallel, cluster };
+                let Ok(result) = simulate(&cfg) else { continue };
+                if !result.fits(&cluster) {
+                    continue; // OOM — the paper's grid search drops these
+                }
+                points.push(GridPoint { parallel, result });
+            }
+        }
+    }
+    points.sort_by(|a, b| {
+        b.result.throughput.partial_cmp(&a.result.throughput).unwrap()
+    });
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BERT_64;
+
+    #[test]
+    fn finds_feasible_points_bert_32gpu() {
+        let pts =
+            grid_search(ScheduleKind::BitPipe, &BERT_64, &GridSpace::bert64(), 32, 128).unwrap();
+        assert!(!pts.is_empty(), "no feasible configuration found");
+        // Sorted descending.
+        for w in pts.windows(2) {
+            assert!(w[0].result.throughput >= w[1].result.throughput);
+        }
+        // Every point uses exactly 32 devices and the full mini-batch.
+        for p in &pts {
+            assert_eq!(p.parallel.total_devices(), 32);
+            assert_eq!(p.parallel.minibatch_size(), 128);
+        }
+    }
+
+    #[test]
+    fn infeasible_layouts_skipped() {
+        // Device count with no (w, d) product in the space.
+        let pts =
+            grid_search(ScheduleKind::BitPipe, &BERT_64, &GridSpace::bert64(), 24, 128).unwrap();
+        assert!(pts.is_empty());
+    }
+
+    #[test]
+    fn best_d_for_bitpipe_is_8_on_32gpus() {
+        // Paper Table 7: D=8 is the sweet spot for BitPipe on 32 GPUs.
+        let pts =
+            grid_search(ScheduleKind::BitPipe, &BERT_64, &GridSpace::bert64(), 32, 128).unwrap();
+        let best = &pts[0];
+        assert_eq!(best.parallel.d, 8, "best D {} (throughput {})", best.parallel.d, best.result.throughput);
+    }
+}

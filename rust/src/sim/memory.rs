@@ -1,0 +1,160 @@
+//! Static memory accounting per device (paper Fig 8 and Table 2):
+//! weights (+ grads + optimizer state) for every chunk a device holds, and
+//! peak activation stash measured from the schedule's compute order.
+
+use crate::config::{ModelConfig, ParallelConfig};
+use crate::schedule::{OpKind, Schedule};
+
+/// Per-device memory footprint, bytes.
+#[derive(Debug, Clone)]
+pub struct MemoryFootprint {
+    /// Model weights held (both pipes for bidirectional schedules).
+    pub weights: Vec<u64>,
+    /// Gradient buffers (same layout as weights).
+    pub grads: Vec<u64>,
+    /// Optimizer state (Adam: fp32 master + two fp32 moments).
+    pub optim: Vec<u64>,
+    /// Peak activation stash over the iteration.
+    pub activations: Vec<u64>,
+}
+
+impl MemoryFootprint {
+    /// Total peak per device.
+    pub fn total_peak(&self) -> Vec<u64> {
+        (0..self.weights.len())
+            .map(|i| self.weights[i] + self.grads[i] + self.optim[i] + self.activations[i])
+            .collect()
+    }
+
+    /// Max-minus-min spread of the per-device totals (Fig 8's balance
+    /// metric: narrower is better).
+    pub fn spread(&self) -> u64 {
+        let t = self.total_peak();
+        let max = t.iter().copied().max().unwrap_or(0);
+        let min = t.iter().copied().min().unwrap_or(0);
+        max - min
+    }
+
+    /// Mean of per-device totals.
+    pub fn mean(&self) -> f64 {
+        let t = self.total_peak();
+        if t.is_empty() {
+            return 0.0;
+        }
+        t.iter().sum::<u64>() as f64 / t.len() as f64
+    }
+}
+
+/// Compute the footprint of `schedule` for `model` under `parallel`.
+pub fn memory_footprint(
+    s: &Schedule,
+    model: &ModelConfig,
+    parallel: &ParallelConfig,
+) -> MemoryFootprint {
+    let d = s.n_devices();
+    let chunks = s.placement.n_stages();
+    let layers_per_chunk = (model.n_layers + chunks - 1) / chunks;
+    let chunk_param_bytes =
+        model.params_per_layer() * layers_per_chunk as u64 * model.dtype_bytes as u64;
+    // Adam on mixed precision: fp32 master + 2 fp32 moments = 12 bytes per
+    // parameter regardless of compute dtype.
+    let chunk_optim_bytes = model.params_per_layer() * layers_per_chunk as u64 * 12;
+    let chunk_act_bytes =
+        model.layer_activation_bytes(parallel.b) * layers_per_chunk as u64;
+
+    let mut weights = vec![0u64; d];
+    let mut grads = vec![0u64; d];
+    let mut optim = vec![0u64; d];
+    for dev in 0..d {
+        let held = s.placement.chunks_on[dev].len() as u64;
+        weights[dev] = held * chunk_param_bytes;
+        grads[dev] = held * chunk_param_bytes;
+        optim[dev] = held * chunk_optim_bytes;
+    }
+
+    // Peak stash in chunk units from the compute order.
+    let mut activations = vec![0u64; d];
+    for dev in 0..d {
+        let mut depth = 0i64;
+        let mut peak = 0i64;
+        for op in &s.compute_order[dev] {
+            match op.kind {
+                OpKind::Forward => depth += 1,
+                OpKind::Backward => depth -= 1,
+            }
+            peak = peak.max(depth);
+        }
+        activations[dev] = peak as u64 * chunk_act_bytes;
+    }
+
+    MemoryFootprint { weights, grads, optim, activations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ParallelConfig, BERT_64};
+    use crate::schedule::{build, ScheduleConfig, ScheduleKind};
+
+    fn fp(kind: ScheduleKind, d: usize, n: usize, b: usize) -> MemoryFootprint {
+        let s = build(&ScheduleConfig::new(kind, d, n)).unwrap();
+        let p = ParallelConfig::new(kind, 1, d, b, n);
+        memory_footprint(&s, &BERT_64, &p)
+    }
+
+    #[test]
+    fn bidirectional_doubles_weights() {
+        let dap = fp(ScheduleKind::Dapple, 8, 8, 4);
+        let bit = fp(ScheduleKind::BitPipe, 8, 8, 4);
+        // Every device: BitPipe holds 2x the weight bytes of DAPPLE
+        // (2 pipes x v chunks of 1/v size each).
+        for dev in 0..8 {
+            assert_eq!(bit.weights[dev], 2 * dap.weights[dev], "dev {dev}");
+        }
+    }
+
+    #[test]
+    fn dapple_first_device_heaviest_activations() {
+        // Fig 8a: DAPPLE's device 0 stashes D micro-batches, device D-1
+        // stashes 1 — the most imbalanced profile.
+        let dap = fp(ScheduleKind::Dapple, 8, 8, 4);
+        assert!(dap.activations[0] > dap.activations[7]);
+        assert_eq!(dap.activations[0], 8 * dap.activations[7]);
+    }
+
+    #[test]
+    fn bitpipe_narrower_spread_than_dapple() {
+        let dap = fp(ScheduleKind::Dapple, 8, 8, 4);
+        let bit = fp(ScheduleKind::BitPipe, 8, 8, 4);
+        assert!(
+            bit.spread() < dap.spread(),
+            "BitPipe spread {} !< DAPPLE {}",
+            bit.spread(),
+            dap.spread()
+        );
+    }
+
+    #[test]
+    fn gpipe_activations_grow_with_n() {
+        let n8 = fp(ScheduleKind::GPipe, 4, 8, 4);
+        let n16 = fp(ScheduleKind::GPipe, 4, 16, 4);
+        assert!(n16.activations[0] > n8.activations[0]);
+        // DAPPLE stays flat in N.
+        let d8 = fp(ScheduleKind::Dapple, 4, 8, 4);
+        let d16 = fp(ScheduleKind::Dapple, 4, 16, 4);
+        assert_eq!(d8.activations[0], d16.activations[0]);
+    }
+
+    #[test]
+    fn totals_are_sums() {
+        let bit = fp(ScheduleKind::BitPipe, 4, 4, 4);
+        let t = bit.total_peak();
+        for dev in 0..4 {
+            assert_eq!(
+                t[dev],
+                bit.weights[dev] + bit.grads[dev] + bit.optim[dev] + bit.activations[dev]
+            );
+        }
+        assert!(bit.mean() > 0.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! Training checkpoints: save/restore the full optimizer state so long
+//! runs survive restarts and runs can be forked for ablations.
+//!
+//! Format: one directory per checkpoint —
+//!
+//! ```text
+//! ckpt/
+//!   meta.txt                 # key=value: iteration, n_chunks, adam step
+//!   stage<k>.params.bin      # flat f32 LE
+//!   stage<k>.m.bin           # Adam first moment
+//!   stage<k>.v.bin           # Adam second moment
+//! ```
+//!
+//! Both pipes' replicas of a stage are bit-identical by the synchronous
+//! update invariant (validated in `e2e_train.rs`), so one copy per model
+//! stage suffices; on restore every replica is seeded from it.
+
+use super::optim::{Adam, AdamConfig};
+use crate::config::{parse_kv, KvExt};
+use anyhow::{ensure, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// In-memory checkpoint: per model stage, (params, adam m, adam v).
+#[derive(Debug, Clone, Default)]
+pub struct Checkpoint {
+    /// Completed training iterations.
+    pub iteration: usize,
+    /// Adam step count (same for every stage under synchronous updates).
+    pub adam_step: u64,
+    /// Per-stage state.
+    pub stages: HashMap<usize, StageState>,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl Checkpoint {
+    /// Record one stage's state (replicas are identical; last write wins).
+    pub fn put(&mut self, stage: usize, params: Vec<f32>, adam: &Adam) {
+        let (m, v) = adam.moments();
+        assert_eq!(params.len(), m.len(), "stage {stage}: params/optimizer length mismatch");
+        self.adam_step = adam.step_count();
+        self.stages.insert(stage, StageState { params, m: m.to_vec(), v: v.to_vec() });
+    }
+
+    /// Restore a stage: returns (params, rebuilt Adam).
+    pub fn get(&self, stage: usize, cfg: AdamConfig) -> Option<(Vec<f32>, Adam)> {
+        let s = self.stages.get(&stage)?;
+        let adam = Adam::restore(cfg, s.m.clone(), s.v.clone(), self.adam_step);
+        Some((s.params.clone(), adam))
+    }
+
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        let mut meta = format!(
+            "iteration={}\nadam_step={}\nn_stages={}\n",
+            self.iteration,
+            self.adam_step,
+            self.stages.len()
+        );
+        let mut stages: Vec<_> = self.stages.keys().copied().collect();
+        stages.sort_unstable();
+        for k in stages {
+            let s = &self.stages[&k];
+            write_f32(dir.join(format!("stage{k}.params.bin")), &s.params)?;
+            write_f32(dir.join(format!("stage{k}.m.bin")), &s.m)?;
+            write_f32(dir.join(format!("stage{k}.v.bin")), &s.v)?;
+            meta.push_str(&format!("stage.{k}={}\n", s.params.len()));
+        }
+        std::fs::write(dir.join("meta.txt"), meta)?;
+        Ok(())
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> Result<Checkpoint> {
+        let dir = dir.as_ref();
+        let meta = std::fs::read_to_string(dir.join("meta.txt"))
+            .with_context(|| format!("reading checkpoint meta in {dir:?}"))?;
+        let kv = parse_kv(&meta)?;
+        let mut ckpt = Checkpoint {
+            iteration: kv.get_usize("iteration", 0)?,
+            adam_step: kv.get_usize("adam_step", 0)? as u64,
+            stages: HashMap::new(),
+        };
+        for (key, val) in &kv {
+            let Some(stage) = key.strip_prefix("stage.") else { continue };
+            let stage: usize = stage.parse().with_context(|| format!("bad key {key}"))?;
+            let len: usize = val.parse()?;
+            let params = read_f32(dir.join(format!("stage{stage}.params.bin")))?;
+            let m = read_f32(dir.join(format!("stage{stage}.m.bin")))?;
+            let v = read_f32(dir.join(format!("stage{stage}.v.bin")))?;
+            ensure!(
+                params.len() == len && m.len() == len && v.len() == len,
+                "stage {stage}: length mismatch (meta {len}, files {}/{}/{})",
+                params.len(),
+                m.len(),
+                v.len()
+            );
+            ckpt.stages.insert(stage, StageState { params, m, v });
+        }
+        let want = kv.get_usize("n_stages", 0)?;
+        ensure!(ckpt.stages.len() == want, "expected {want} stages, found {}", ckpt.stages.len());
+        Ok(ckpt)
+    }
+}
+
+fn write_f32(path: impl AsRef<Path>, data: &[f32]) -> Result<()> {
+    let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+    std::fs::write(path.as_ref(), bytes).with_context(|| format!("writing {:?}", path.as_ref()))
+}
+
+fn read_f32(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    super::read_f32_file(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("bitpipe_ckpt_tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut adam = Adam::new(AdamConfig::default(), 4);
+        let mut params = vec![1.0f32, 2.0, 3.0, 4.0];
+        adam.step(&mut params, &[0.1, 0.2, 0.3, 0.4]);
+        adam.step(&mut params, &[0.2, 0.1, 0.0, -0.1]);
+
+        let mut ckpt = Checkpoint { iteration: 7, ..Default::default() };
+        ckpt.put(0, params.clone(), &adam);
+        ckpt.put(3, vec![9.0; 4], &adam);
+
+        let dir = tmpdir("roundtrip");
+        ckpt.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.iteration, 7);
+        assert_eq!(back.adam_step, 2);
+        let (p, a) = back.get(0, AdamConfig::default()).unwrap();
+        assert_eq!(p, params);
+        assert_eq!(a.step_count(), 2);
+        assert!(back.get(1, AdamConfig::default()).is_none());
+    }
+
+    #[test]
+    fn restored_adam_continues_identically() {
+        // Training with a restore mid-way must match uninterrupted training
+        // bit-for-bit — the property that makes checkpoints trustworthy.
+        let cfg = AdamConfig::default();
+        let grads: Vec<Vec<f32>> = (0..6)
+            .map(|t| (0..4).map(|i| ((t * 4 + i) as f32 * 0.37).sin()).collect())
+            .collect();
+
+        // Uninterrupted.
+        let mut adam = Adam::new(cfg, 4);
+        let mut p1 = vec![0.5f32; 4];
+        for g in &grads {
+            adam.step(&mut p1, g);
+        }
+
+        // Interrupted after 3 steps.
+        let mut adam_a = Adam::new(cfg, 4);
+        let mut p2 = vec![0.5f32; 4];
+        for g in &grads[..3] {
+            adam_a.step(&mut p2, g);
+        }
+        let mut ckpt = Checkpoint { iteration: 3, ..Default::default() };
+        ckpt.put(0, p2.clone(), &adam_a);
+        let dir = tmpdir("resume");
+        ckpt.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        let (mut p3, mut adam_b) = back.get(0, cfg).unwrap();
+        for g in &grads[3..] {
+            adam_b.step(&mut p3, g);
+        }
+        assert_eq!(p1, p3, "resume diverged from uninterrupted run");
+    }
+
+    #[test]
+    fn corrupt_meta_rejected() {
+        let dir = tmpdir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("meta.txt"), "iteration=1\nn_stages=2\n").unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+    }
+}

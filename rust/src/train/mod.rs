@@ -1,0 +1,759 @@
+//! Real training runtime: threads-as-devices executing the *same*
+//! instruction streams (`Schedule::device_ops`) the simulator prices, over
+//! AOT-compiled XLA chunk executables.
+//!
+//! Each pipeline device is one OS thread owning:
+//!
+//! * its own PJRT CPU client + compiled chunk executables
+//!   (`PjRtClient` is `Rc`-based, so never crosses threads);
+//! * the parameters, gradient accumulators, and Adam state of every
+//!   (pipe, stage) chunk placed on it;
+//! * an activation stash — exactly one chunk *input* per in-flight
+//!   micro-batch (backward artifacts recompute the chunk forward from it),
+//!   which is the `M_a` accounting the paper's Table 2 uses.
+//!
+//! P2P activations/gradients move through the tagged-mailbox [`Fabric`];
+//! the V-shaped schedule's co-located hand-offs stay device-local
+//! (`LocalCopy*` never touches the fabric). Gradient synchronization uses
+//! the eager exchange collective (`AllReduceStart` posts, `AllReduceWait`
+//! sums), so devices may launch per-stage collectives in any order — the
+//! property the eager sync of paper Fig 5(b) requires.
+//!
+//! Python never runs here: artifacts were lowered once by
+//! `python/compile/aot.py`.
+
+pub mod checkpoint;
+pub mod data;
+pub mod optim;
+
+use crate::collective::{exchange_start, exchange_wait};
+use crate::comm::{Fabric, Tag};
+use crate::metrics::Counters;
+use crate::runtime::{to_f32_vec, Executable, Runtime};
+use crate::schedule::{
+    self, Instr, PipeId, Schedule, ScheduleConfig, ScheduleKind, StageId, SyncPolicy,
+};
+use anyhow::{bail, ensure, Context, Result};
+use data::Dataset;
+use optim::{Adam, AdamConfig};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Which dataset the run draws from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// Modular-affine synthetic sequences (learnable, no external data).
+    Synthetic,
+    /// Embedded tiny character-level corpus.
+    Corpus,
+}
+
+/// Full configuration of a real training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Artifact directory (output of `make artifacts`).
+    pub artifacts: PathBuf,
+    /// Pipeline schedule selection.
+    pub kind: ScheduleKind,
+    /// Pipeline devices (threads).
+    pub d: usize,
+    /// Micro-batches per iteration.
+    pub n: usize,
+    /// Chunks per device per pipe.
+    pub v: usize,
+    pub sync: SyncPolicy,
+    pub early_forward: bool,
+    /// Training iterations.
+    pub steps: usize,
+    pub adam: AdamConfig,
+    pub dataset: DatasetKind,
+    pub seed: u64,
+    /// Print a progress line every `log_every` iterations (0 = silent).
+    pub log_every: usize,
+    /// Save a checkpoint here after the final iteration (None = off).
+    pub save_to: Option<PathBuf>,
+    /// Resume parameters + optimizer state from this checkpoint.
+    pub resume_from: Option<PathBuf>,
+}
+
+impl TrainConfig {
+    pub fn new(artifacts: impl AsRef<Path>, kind: ScheduleKind, d: usize, n: usize) -> Self {
+        TrainConfig {
+            artifacts: artifacts.as_ref().to_path_buf(),
+            kind,
+            d,
+            n,
+            v: kind.default_v(),
+            sync: SyncPolicy::Eager,
+            early_forward: true,
+            steps: 20,
+            adam: AdamConfig::default(),
+            dataset: DatasetKind::Synthetic,
+            seed: 42,
+            log_every: 0,
+            save_to: None,
+            resume_from: None,
+        }
+    }
+
+    fn schedule_config(&self) -> ScheduleConfig {
+        ScheduleConfig::new(self.kind, self.d, self.n)
+            .with_v(self.v)
+            .with_sync(self.sync)
+            .with_early_forward(self.early_forward)
+    }
+}
+
+/// Outcome of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Mean head loss per iteration.
+    pub losses: Vec<f64>,
+    /// Wall time per iteration, seconds (measured on device 0).
+    pub iter_times: Vec<f64>,
+    /// Total wall time, seconds.
+    pub total_time: f64,
+    /// Communication/compute counters over the whole run.
+    pub counters: crate::metrics::CountersSnapshot,
+    /// Peak activation-stash entries per device (chunk inputs).
+    pub peak_stash: Vec<usize>,
+}
+
+impl TrainReport {
+    /// Throughput in samples/s (micro-batch size from the manifest).
+    pub fn throughput(&self, micro_batch: usize, n: usize) -> f64 {
+        if self.total_time == 0.0 {
+            return 0.0;
+        }
+        (self.losses.len() * n * micro_batch) as f64 / self.total_time
+    }
+}
+
+/// Per-(pipe, stage) chunk state owned by one worker.
+struct ChunkState {
+    /// Flat parameters (mirrors the AOT init vector layout).
+    params: Vec<f32>,
+    /// Device-staged copy of `params`, invalidated by the optimizer step.
+    /// Caching it saves one host->device copy of the full chunk per op —
+    /// the dominant per-op overhead before the §Perf pass.
+    params_buf: Option<xla::PjRtBuffer>,
+    /// Gradient accumulator (sum over local micro-batches).
+    grad: Vec<f32>,
+    adam: Adam,
+}
+
+/// Stash entry: the chunk input needed by the backward.
+enum Stash {
+    Tokens(Vec<i32>),
+    Act(Vec<f32>),
+}
+
+/// Run a real training job. Spawns `cfg.d` worker threads, each executing
+/// its device's instruction stream for `cfg.steps` iterations.
+pub fn run(cfg: &TrainConfig) -> Result<TrainReport> {
+    let sched = schedule::build(&cfg.schedule_config())?;
+    schedule::validate::validate(&sched).context("generated schedule failed validation")?;
+
+    // Manifest sanity against the requested schedule shape.
+    let manifest = crate::runtime::Manifest::load(cfg.artifacts.join("manifest.txt"))?;
+    ensure!(
+        manifest.n_chunks == cfg.v * cfg.d,
+        "artifacts were lowered for {} chunks but schedule needs v*D = {} \
+         (rebuild with `python -m compile.aot --n-chunks {}`)",
+        manifest.n_chunks,
+        cfg.v * cfg.d,
+        cfg.v * cfg.d
+    );
+
+    let dataset: Arc<dyn Dataset> = match cfg.dataset {
+        DatasetKind::Synthetic => Arc::new(data::SyntheticLm::new(
+            manifest.batch,
+            manifest.seq,
+            manifest.vocab,
+            cfg.seed,
+        )),
+        DatasetKind::Corpus => {
+            ensure!(
+                manifest.vocab >= 128,
+                "corpus dataset needs vocab >= 128 (got {})",
+                manifest.vocab
+            );
+            Arc::new(data::TinyCorpus::new(manifest.batch, manifest.seq, cfg.seed))
+        }
+    };
+
+    let fabric = Fabric::new(cfg.d);
+    let counters = Arc::new(Counters::new());
+    let losses: Arc<Mutex<Vec<(usize, f32)>>> = Arc::new(Mutex::new(Vec::new()));
+    let iter_times: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+    let resume: Option<Arc<checkpoint::Checkpoint>> = match &cfg.resume_from {
+        Some(dir) => {
+            let c = checkpoint::Checkpoint::load(dir)
+                .with_context(|| format!("resuming from {dir:?}"))?;
+            ensure!(
+                c.stages.len() == manifest.n_chunks,
+                "checkpoint has {} stages, artifacts expect {}",
+                c.stages.len(),
+                manifest.n_chunks
+            );
+            Some(Arc::new(c))
+        }
+        None => None,
+    };
+    let base_iter = resume.as_ref().map_or(0, |c| c.iteration);
+    let final_state: Arc<Mutex<checkpoint::Checkpoint>> =
+        Arc::new(Mutex::new(checkpoint::Checkpoint::default()));
+    let start = Instant::now();
+
+    let peak_stash = std::thread::scope(|scope| -> Result<Vec<usize>> {
+        let mut handles = Vec::new();
+        for dev in 0..cfg.d {
+            let sched = &sched;
+            let cfg = &cfg;
+            let fabric = fabric.clone();
+            let counters = counters.clone();
+            let losses = losses.clone();
+            let iter_times = iter_times.clone();
+            let dataset = dataset.clone();
+            let resume = resume.clone();
+            let final_state = final_state.clone();
+            handles.push(scope.spawn(move || -> Result<usize> {
+                let mut w = Worker::new(
+                    dev,
+                    cfg,
+                    sched,
+                    fabric,
+                    dataset,
+                    counters,
+                    losses.clone(),
+                    resume.as_deref(),
+                )?;
+                w.base_iter = base_iter;
+                for iter in 0..cfg.steps {
+                    let t0 = Instant::now();
+                    w.run_iteration(iter)
+                        .with_context(|| format!("device {dev}, iteration {iter}"))?;
+                    if dev == 0 {
+                        iter_times.lock().unwrap().push(t0.elapsed().as_secs_f64());
+                        if cfg.log_every > 0 && (iter + 1) % cfg.log_every == 0 {
+                            let snap = losses.lock().unwrap();
+                            let recent: Vec<f32> = snap
+                                .iter()
+                                .filter(|&&(i, _)| i == iter)
+                                .map(|&(_, l)| l)
+                                .collect();
+                            let mean = if recent.is_empty() {
+                                f32::NAN
+                            } else {
+                                recent.iter().sum::<f32>() / recent.len() as f32
+                            };
+                            eprintln!(
+                                "iter {:4}  loss {:.4}  {:.2}s/it",
+                                iter + 1,
+                                mean,
+                                t0.elapsed().as_secs_f64()
+                            );
+                        }
+                    }
+                    let _ = iter;
+                }
+                if cfg.save_to.is_some() {
+                    let mut out = final_state.lock().unwrap();
+                    for ((_, stage), chunk) in &w.chunks {
+                        out.put(*stage, chunk.params.clone(), &chunk.adam);
+                    }
+                }
+                Ok(w.peak_stash)
+            }));
+        }
+        let mut peaks = Vec::new();
+        for h in handles {
+            peaks.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
+        }
+        Ok(peaks)
+    })?;
+
+    let total_time = start.elapsed().as_secs_f64();
+
+    if let Some(dir) = &cfg.save_to {
+        let mut ckpt = final_state.lock().unwrap();
+        ckpt.iteration = base_iter + cfg.steps;
+        ckpt.save(dir).with_context(|| format!("saving checkpoint to {dir:?}"))?;
+    }
+
+    // Average losses per iteration.
+    let raw = losses.lock().unwrap();
+    let mut per_iter: Vec<(f64, usize)> = vec![(0.0, 0); cfg.steps];
+    for &(iter, l) in raw.iter() {
+        per_iter[iter].0 += l as f64;
+        per_iter[iter].1 += 1;
+    }
+    let losses: Vec<f64> = per_iter
+        .into_iter()
+        .map(|(s, c)| if c > 0 { s / c as f64 } else { f64::NAN })
+        .collect();
+    ensure!(
+        losses.iter().all(|l| l.is_finite()),
+        "some iterations recorded no loss (head stage never ran?)"
+    );
+
+    let iter_times = iter_times.lock().unwrap().clone();
+    Ok(TrainReport {
+        losses,
+        iter_times,
+        total_time,
+        counters: counters.snapshot(),
+        peak_stash,
+    })
+}
+
+/// One device's execution context.
+struct Worker<'a> {
+    dev: usize,
+    cfg: &'a TrainConfig,
+    sched: &'a Schedule,
+    fabric: Fabric,
+    dataset: Arc<dyn Dataset>,
+    counters: Arc<Counters>,
+    losses: Arc<Mutex<Vec<(usize, f32)>>>,
+
+    manifest: crate::runtime::Manifest,
+    /// Completed iterations in a resumed run: the dataset and message tags
+    /// advance globally so resume is bit-exact with uninterrupted training.
+    base_iter: usize,
+    rt: Runtime,
+    exes: HashMap<&'static str, Rc<Executable>>,
+    chunks: HashMap<(PipeId, StageId), ChunkState>,
+
+    // Per-iteration dataflow buffers, keyed by (pipe, stage, mb).
+    inbox_act: HashMap<(usize, usize, usize), Vec<f32>>,
+    outbox_act: HashMap<(usize, usize, usize), Vec<f32>>,
+    inbox_grad: HashMap<(usize, usize, usize), Vec<f32>>,
+    outbox_grad: HashMap<(usize, usize, usize), Vec<f32>>,
+    stash: HashMap<(usize, usize, usize), Stash>,
+    peak_stash: usize,
+}
+
+const EXE_NAMES: [&str; 6] =
+    ["fwd_embed", "fwd_mid", "fwd_head", "bwd_embed", "bwd_mid", "bwd_head"];
+
+impl<'a> Worker<'a> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        dev: usize,
+        cfg: &'a TrainConfig,
+        sched: &'a Schedule,
+        fabric: Fabric,
+        dataset: Arc<dyn Dataset>,
+        counters: Arc<Counters>,
+        losses: Arc<Mutex<Vec<(usize, f32)>>>,
+        resume: Option<&checkpoint::Checkpoint>,
+    ) -> Result<Self> {
+        let mut rt = Runtime::open(&cfg.artifacts)?;
+        let manifest = rt.manifest.clone();
+
+        let mut exes = HashMap::new();
+        for name in EXE_NAMES {
+            exes.insert(name, rt.load(name)?);
+        }
+
+        // Parameter state for every chunk this device hosts. Both pipes'
+        // replicas of a stage start from the identical init vector (the
+        // bidirectional twins are model replicas kept in sync by the
+        // gradient exchange).
+        let mut chunks = HashMap::new();
+        for &(pipe, stage) in &sched.placement.chunks_on[dev] {
+            let (params, adam) = match resume.and_then(|c| c.get(stage, cfg.adam)) {
+                Some(state) => state,
+                None => {
+                    let file = manifest
+                        .init_file(stage)
+                        .with_context(|| format!("manifest missing init.{stage}"))?;
+                    let params = read_f32_file(cfg.artifacts.join(file))?;
+                    let adam = Adam::new(cfg.adam, params.len());
+                    (params, adam)
+                }
+            };
+            let role = manifest.role_of_stage(stage);
+            let want = manifest
+                .param_len(role)
+                .with_context(|| format!("manifest missing params.{role}"))?;
+            ensure!(
+                params.len() == want,
+                "stage {stage} parameter vector has {} f32s, manifest says {want}",
+                params.len()
+            );
+            let grad = vec![0.0; params.len()];
+            chunks.insert(
+                (pipe, stage),
+                ChunkState { params, params_buf: None, grad, adam },
+            );
+        }
+
+        Ok(Worker {
+            dev,
+            cfg,
+            sched,
+            fabric,
+            dataset,
+            counters,
+            losses,
+            manifest,
+            base_iter: 0,
+            rt,
+            exes,
+            chunks,
+            inbox_act: HashMap::new(),
+            outbox_act: HashMap::new(),
+            inbox_grad: HashMap::new(),
+            outbox_grad: HashMap::new(),
+            stash: HashMap::new(),
+            peak_stash: 0,
+        })
+    }
+
+    /// Message tag micro-batch id, unique across iterations so streams of
+    /// consecutive iterations can overlap without tag collisions.
+    fn tag_mb(&self, giter: usize, mb: usize) -> usize {
+        giter * self.cfg.n + mb
+    }
+
+    fn run_iteration(&mut self, iter: usize) -> Result<()> {
+        // Data and tags advance by the *global* iteration index so a
+        // checkpoint-resumed run consumes exactly the batches the
+        // uninterrupted run would have.
+        let giter = self.base_iter + iter;
+        for i in 0..self.sched.device_ops[self.dev].len() {
+            let instr = self.sched.device_ops[self.dev][i];
+            self.exec(iter, giter, &instr)
+                .with_context(|| format!("instruction {i}: {instr}"))?;
+        }
+        // Dataflow buffers must drain completely each iteration: leftovers
+        // mean the schedule and the runtime disagree.
+        ensure!(self.stash.is_empty(), "stash not drained: {} entries", self.stash.len());
+        ensure!(self.inbox_act.is_empty() && self.inbox_grad.is_empty(), "inbox not drained");
+        ensure!(self.outbox_act.is_empty() && self.outbox_grad.is_empty(), "outbox not drained");
+        Ok(())
+    }
+
+    fn exec(&mut self, iter: usize, giter: usize, instr: &Instr) -> Result<()> {
+        match *instr {
+            Instr::Forward { pipe, stage, mb } => self.forward(iter, giter, pipe, stage, mb),
+            Instr::Backward { pipe, stage, mb } => self.backward(giter, pipe, stage, mb),
+            Instr::SendAct { to, pipe, stage, mb } => {
+                let payload = self
+                    .outbox_act
+                    .remove(&(pipe, stage, mb))
+                    .with_context(|| format!("SendAct: no output for (p{pipe},s{stage},m{mb})"))?;
+                self.counters.p2p_msgs.fetch_add(1, Ordering::Relaxed);
+                self.counters
+                    .p2p_bytes
+                    .fetch_add((payload.len() * 4) as u64, Ordering::Relaxed);
+                self.fabric
+                    .send(to, Tag::act(self.dev, pipe, stage, self.tag_mb(giter, mb)), payload)?;
+                Ok(())
+            }
+            Instr::RecvAct { from, pipe, stage, mb } => {
+                let v = self
+                    .fabric
+                    .recv(self.dev, Tag::act(from, pipe, stage - 1, self.tag_mb(giter, mb)))?;
+                self.inbox_act.insert((pipe, stage, mb), v);
+                Ok(())
+            }
+            Instr::SendGrad { to, pipe, stage, mb } => {
+                let payload = self
+                    .outbox_grad
+                    .remove(&(pipe, stage, mb))
+                    .with_context(|| format!("SendGrad: no grad for (p{pipe},s{stage},m{mb})"))?;
+                self.counters.p2p_msgs.fetch_add(1, Ordering::Relaxed);
+                self.counters
+                    .p2p_bytes
+                    .fetch_add((payload.len() * 4) as u64, Ordering::Relaxed);
+                self.fabric
+                    .send(to, Tag::grad(self.dev, pipe, stage, self.tag_mb(giter, mb)), payload)?;
+                Ok(())
+            }
+            Instr::RecvGrad { from, pipe, stage, mb } => {
+                let v = self
+                    .fabric
+                    .recv(self.dev, Tag::grad(from, pipe, stage + 1, self.tag_mb(giter, mb)))?;
+                self.inbox_grad.insert((pipe, stage, mb), v);
+                Ok(())
+            }
+            Instr::LocalCopyAct { pipe, stage, mb } => {
+                // Producer `stage` output becomes consumer `stage+1` input —
+                // a move, not a copy (the V-shape saving in its purest form).
+                let v = self
+                    .outbox_act
+                    .remove(&(pipe, stage, mb))
+                    .with_context(|| format!("LocalCopyAct: no output (p{pipe},s{stage},m{mb})"))?;
+                self.counters.local_copies.fetch_add(1, Ordering::Relaxed);
+                self.inbox_act.insert((pipe, stage + 1, mb), v);
+                Ok(())
+            }
+            Instr::LocalCopyGrad { pipe, stage, mb } => {
+                let v = self
+                    .outbox_grad
+                    .remove(&(pipe, stage, mb))
+                    .with_context(|| format!("LocalCopyGrad: no grad (p{pipe},s{stage},m{mb})"))?;
+                self.counters.local_copies.fetch_add(1, Ordering::Relaxed);
+                self.inbox_grad.insert((pipe, stage - 1, mb), v);
+                Ok(())
+            }
+            Instr::AllReduceStart { stage } => {
+                let group = self.sched.placement.allreduce_group(stage);
+                if group.len() > 1 {
+                    let chunk = self.local_chunk(stage)?;
+                    exchange_start(&self.fabric, self.dev, &group, stage, giter, &chunk.grad)?;
+                }
+                Ok(())
+            }
+            Instr::AllReduceWait { stage } => {
+                let group = self.sched.placement.allreduce_group(stage);
+                if group.len() > 1 {
+                    let dev = self.dev;
+                    let fabric = self.fabric.clone();
+                    let chunk = self.local_chunk_mut(stage)?;
+                    exchange_wait(&fabric, dev, &group, stage, giter, &mut chunk.grad)?;
+                    self.counters.allreduces.fetch_add(1, Ordering::Relaxed);
+                    let bytes = (self.local_chunk(stage)?.grad.len() * 4) as u64;
+                    self.counters.allreduce_bytes.fetch_add(bytes, Ordering::Relaxed);
+                }
+                Ok(())
+            }
+            Instr::OptimStep { stage } => {
+                let n = self.cfg.n as f32;
+                let chunk = self.local_chunk_mut(stage)?;
+                // grad currently holds the *sum* over all N micro-batches
+                // (local accumulation + cross-replica exchange); normalize
+                // to the mini-batch mean before the update.
+                let scaled: Vec<f32> = chunk.grad.iter().map(|g| g / n).collect();
+                chunk.adam.step(&mut chunk.params, &scaled);
+                chunk.grad.iter_mut().for_each(|g| *g = 0.0);
+                chunk.params_buf = None; // re-stage on next use
+                self.counters.optim_steps.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+        }
+    }
+
+    /// The single local replica of model `stage` (each device hosts a stage
+    /// for at most one pipe — mirrored placements guarantee it for even D).
+    fn local_chunk(&self, stage: StageId) -> Result<&ChunkState> {
+        for p in 0..self.sched.placement.n_pipes {
+            if let Some(c) = self.chunks.get(&(p, stage)) {
+                return Ok(c);
+            }
+        }
+        bail!("device {} holds no replica of stage {stage}", self.dev)
+    }
+
+    fn local_chunk_mut(&mut self, stage: StageId) -> Result<&mut ChunkState> {
+        for p in 0..self.sched.placement.n_pipes {
+            if self.chunks.contains_key(&(p, stage)) {
+                return Ok(self.chunks.get_mut(&(p, stage)).unwrap());
+            }
+        }
+        bail!("device {} holds no replica of stage {stage}", self.dev)
+    }
+
+    /// Ensure the chunk's parameters are staged on device (rebuilt only
+    /// after an optimizer step invalidated the cache). Callers then borrow
+    /// `self.chunks[..].params_buf` directly.
+    fn ensure_params_buf(&mut self, pipe: usize, stage: usize) -> Result<()> {
+        let chunk = self
+            .chunks
+            .get_mut(&(pipe, stage))
+            .with_context(|| format!("no chunk state for (p{pipe},s{stage})"))?;
+        if chunk.params_buf.is_none() {
+            chunk.params_buf = Some(self.rt.buf_f32(&chunk.params, &[chunk.params.len()])?);
+        }
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        iter: usize,
+        giter: usize,
+        pipe: usize,
+        stage: usize,
+        mb: usize,
+    ) -> Result<()> {
+        let (b, s, h) =
+            (self.manifest.batch, self.manifest.seq, self.manifest.hidden);
+        let role = self.manifest.role_of_stage(stage);
+        self.ensure_params_buf(pipe, stage)?;
+
+        match role {
+            "embed" => {
+                let (tokens, _) = self.dataset.batch(giter, mb);
+                let tok = self.rt.buf_i32(&tokens, &[b, s])?;
+                let params = self.chunks[&(pipe, stage)].params_buf.as_ref().unwrap();
+                let out = self.exes["fwd_embed"].run_b(&[&tok, params])?;
+                let act = to_f32_vec(&out[0])?;
+                self.outbox_act.insert((pipe, stage, mb), act);
+                self.stash.insert((pipe, stage, mb), Stash::Tokens(tokens));
+            }
+            "mid" => {
+                let x = self
+                    .inbox_act
+                    .remove(&(pipe, stage, mb))
+                    .with_context(|| format!("no input act for (p{pipe},s{stage},m{mb})"))?;
+                let x_buf = self.rt.buf_f32(&x, &[b, s, h])?;
+                let params = self.chunks[&(pipe, stage)].params_buf.as_ref().unwrap();
+                let out = self.exes["fwd_mid"].run_b(&[&x_buf, params])?;
+                let act = to_f32_vec(&out[0])?;
+                self.outbox_act.insert((pipe, stage, mb), act);
+                self.stash.insert((pipe, stage, mb), Stash::Act(x));
+            }
+            "head" => {
+                let x = self
+                    .inbox_act
+                    .remove(&(pipe, stage, mb))
+                    .with_context(|| format!("no input act for head (p{pipe},m{mb})"))?;
+                let (_, targets) = self.dataset.batch(giter, mb);
+                let x_buf = self.rt.buf_f32(&x, &[b, s, h])?;
+                let t_buf = self.rt.buf_i32(&targets, &[b, s])?;
+                let params = self.chunks[&(pipe, stage)].params_buf.as_ref().unwrap();
+                let out = self.exes["fwd_head"].run_b(&[&x_buf, &t_buf, params])?;
+                let loss = to_f32_vec(&out[0])?[0];
+                self.losses.lock().unwrap().push((iter, loss));
+                self.stash.insert((pipe, stage, mb), Stash::Act(x));
+            }
+            other => bail!("unknown role {other}"),
+        }
+        self.peak_stash = self.peak_stash.max(self.stash.len());
+        self.counters.forwards.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn backward(&mut self, giter: usize, pipe: usize, stage: usize, mb: usize) -> Result<()> {
+        let (b, s, h) =
+            (self.manifest.batch, self.manifest.seq, self.manifest.hidden);
+        let role = self.manifest.role_of_stage(stage);
+        let stashed = self
+            .stash
+            .remove(&(pipe, stage, mb))
+            .with_context(|| format!("no stash for (p{pipe},s{stage},m{mb})"))?;
+        self.ensure_params_buf(pipe, stage)?;
+
+        let (dx, dflat) = match role {
+            "embed" => {
+                let Stash::Tokens(tokens) = stashed else {
+                    bail!("embed stash is not tokens")
+                };
+                let g = self
+                    .inbox_grad
+                    .remove(&(pipe, stage, mb))
+                    .with_context(|| format!("no upstream grad for embed m{mb}"))?;
+                let tok = self.rt.buf_i32(&tokens, &[b, s])?;
+                let g_buf = self.rt.buf_f32(&g, &[b, s, h])?;
+                let params = self.chunks[&(pipe, stage)].params_buf.as_ref().unwrap();
+                let out = self.exes["bwd_embed"].run_b(&[&tok, &g_buf, params])?;
+                (None, to_f32_vec(&out[0])?)
+            }
+            "mid" => {
+                let Stash::Act(x) = stashed else { bail!("mid stash is not an activation") };
+                let g = self
+                    .inbox_grad
+                    .remove(&(pipe, stage, mb))
+                    .with_context(|| format!("no upstream grad for s{stage} m{mb}"))?;
+                let x_buf = self.rt.buf_f32(&x, &[b, s, h])?;
+                let g_buf = self.rt.buf_f32(&g, &[b, s, h])?;
+                let params = self.chunks[&(pipe, stage)].params_buf.as_ref().unwrap();
+                let out = self.exes["bwd_mid"].run_b(&[&x_buf, &g_buf, params])?;
+                (Some(to_f32_vec(&out[0])?), to_f32_vec(&out[1])?)
+            }
+            "head" => {
+                let Stash::Act(x) = stashed else { bail!("head stash is not an activation") };
+                let (_, targets) = self.dataset.batch(giter, mb);
+                let x_buf = self.rt.buf_f32(&x, &[b, s, h])?;
+                let t_buf = self.rt.buf_i32(&targets, &[b, s])?;
+                let params = self.chunks[&(pipe, stage)].params_buf.as_ref().unwrap();
+                let out = self.exes["bwd_head"].run_b(&[&x_buf, &t_buf, params])?;
+                // outputs: (loss, dx, dflat)
+                (Some(to_f32_vec(&out[1])?), to_f32_vec(&out[2])?)
+            }
+            other => bail!("unknown role {other}"),
+        };
+
+        // Accumulate the weight gradient.
+        let chunk = self.chunks.get_mut(&(pipe, stage)).unwrap();
+        ensure!(dflat.len() == chunk.grad.len(), "dflat length mismatch");
+        for (a, g) in chunk.grad.iter_mut().zip(&dflat) {
+            *a += g;
+        }
+
+        // Input gradient flows to stage-1 (unless this is the entry chunk).
+        if let Some(dx) = dx {
+            if stage > 0 {
+                self.outbox_grad.insert((pipe, stage, mb), dx);
+            }
+        }
+        self.counters.backwards.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+/// Read a little-endian f32 binary file into a vector.
+fn read_f32_file(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading init vector {path:?}"))?;
+    ensure!(bytes.len() % 4 == 0, "{path:?}: length {} not a multiple of 4", bytes.len());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tests that execute real artifacts live in rust/tests/e2e_train.rs
+    // (they need `make artifacts`). Here: pure host-side pieces.
+
+    #[test]
+    fn read_f32_roundtrip() {
+        let dir = std::env::temp_dir().join("bitpipe_test_f32");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.bin");
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(read_f32_file(&path).unwrap(), data);
+    }
+
+    #[test]
+    fn read_f32_rejects_ragged() {
+        let dir = std::env::temp_dir().join("bitpipe_test_f32");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8; 7]).unwrap();
+        assert!(read_f32_file(&path).is_err());
+    }
+
+    #[test]
+    fn train_config_defaults() {
+        let cfg = TrainConfig::new("/tmp/a", ScheduleKind::BitPipe, 4, 8);
+        assert_eq!(cfg.v, 2);
+        assert_eq!(cfg.sync, SyncPolicy::Eager);
+        let sc = cfg.schedule_config();
+        assert_eq!(sc.kind, ScheduleKind::BitPipe);
+        assert_eq!(sc.d, 4);
+        assert_eq!(sc.n, 8);
+    }
+
+    #[test]
+    fn missing_artifacts_reported() {
+        let cfg = TrainConfig::new("/nonexistent/dir", ScheduleKind::Dapple, 2, 2);
+        let err = run(&cfg).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("manifest"), "unhelpful error: {msg}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Small shared utilities: a deterministic PRNG (no external `rand`), a
+//! minimal property-testing harness (no external `proptest`), simple
+//! statistics, and table formatting for the eval harness.
+
+mod prng;
+mod prop;
+mod stats;
+mod table;
+
+pub use prng::Prng;
+pub use prop::{forall, usize_in, Gen};
+pub use stats::{mean, percentile, stddev};
+pub use table::Table;

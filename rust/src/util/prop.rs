@@ -1,0 +1,154 @@
+//! Minimal property-testing harness (stand-in for `proptest`, which is not
+//! vendored in this build environment). Supports generators over a PRNG,
+//! a fixed case budget, and greedy shrinking of failing inputs.
+//!
+//! The schedule invariants in `rust/tests/prop_schedule.rs` are the main
+//! client: configurations are drawn at random, validated, and failures are
+//! shrunk to a minimal reproducer before panicking.
+
+use super::prng::Prng;
+
+/// A reusable value generator: draws from a PRNG, and knows how to shrink.
+pub struct Gen<T> {
+    /// Draw a fresh value.
+    pub draw: Box<dyn Fn(&mut Prng) -> T>,
+    /// Candidate smaller values (simplest first). Empty = atomic.
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    /// Generator over explicit choices (shrinks toward the front).
+    pub fn choice(xs: Vec<T>) -> Gen<T>
+    where
+        T: PartialEq,
+    {
+        let xs2 = xs.clone();
+        Gen {
+            draw: Box::new(move |r| r.choose(&xs).clone()),
+            shrink: Box::new(move |v| {
+                let pos = xs2.iter().position(|x| x == v).unwrap_or(0);
+                xs2[..pos].to_vec()
+            }),
+        }
+    }
+
+    /// Map a generator (shrinking maps through).
+    pub fn map<U: Clone + 'static>(
+        self,
+        f: impl Fn(T) -> U + Clone + 'static,
+        unf: impl Fn(&U) -> T + 'static,
+    ) -> Gen<U> {
+        let f2 = f.clone();
+        Gen {
+            draw: Box::new(move |r| f((self.draw)(r))),
+            shrink: Box::new(move |u| (self.shrink)(&unf(u)).into_iter().map(&f2).collect()),
+        }
+    }
+}
+
+/// Integers in `[lo, hi]`, shrinking toward `lo`.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    Gen {
+        draw: Box::new(move |r| r.range(lo, hi + 1)),
+        shrink: Box::new(move |&v| {
+            let mut out = Vec::new();
+            if v > lo {
+                out.push(lo);
+                let mid = lo + (v - lo) / 2;
+                if mid != lo && mid != v {
+                    out.push(mid);
+                }
+                if v - 1 != lo {
+                    out.push(v - 1);
+                }
+            }
+            out
+        }),
+    }
+}
+
+/// Run `cases` random checks of `prop` over values from `gen`; on failure,
+/// shrink to a (locally) minimal counterexample and panic with it.
+///
+/// `prop` returns `Err(reason)` on failure.
+pub fn forall<T: Clone + std::fmt::Debug + 'static>(
+    seed: u64,
+    cases: usize,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Prng::new(seed);
+    for case in 0..cases {
+        let v = (gen.draw)(&mut rng);
+        if let Err(first_err) = prop(&v) {
+            // Greedy shrink.
+            let mut cur = v;
+            let mut err = first_err;
+            let mut budget = 1000;
+            'outer: while budget > 0 {
+                for cand in (gen.shrink)(&cur) {
+                    budget -= 1;
+                    if let Err(e) = prop(&cand) {
+                        cur = cand;
+                        err = e;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed})\n  minimal input: {cur:?}\n  error: {err}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, 200, &usize_in(0, 100), |&x| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        let result = std::panic::catch_unwind(|| {
+            forall(2, 500, &usize_in(0, 1000), |&x| {
+                if x < 50 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            });
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // Greedy shrink should land on exactly the boundary value 50.
+        assert!(msg.contains("minimal input: 50"), "shrink landed elsewhere: {msg}");
+    }
+
+    #[test]
+    fn choice_generator_draws_members() {
+        let g = Gen::choice(vec![2usize, 4, 8]);
+        let mut r = Prng::new(5);
+        for _ in 0..100 {
+            let v = (g.draw)(&mut r);
+            assert!([2, 4, 8].contains(&v));
+        }
+        assert_eq!((g.shrink)(&8), vec![2, 4]);
+        assert!((g.shrink)(&2).is_empty());
+    }
+}

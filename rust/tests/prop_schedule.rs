@@ -1,0 +1,182 @@
+//! Property-based tests over the schedule generators: random
+//! configurations are drawn, built, and checked against the full invariant
+//! suite (`schedule::validate`) plus cross-cutting properties the paper
+//! states. Failures shrink to a minimal reproducer.
+
+use bitpipe::schedule::{
+    self, analysis, build, Costs, ScheduleConfig, ScheduleKind, SyncPolicy,
+};
+use bitpipe::util::{forall, Gen};
+
+/// A randomly drawable schedule configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Draw {
+    kind_idx: usize,
+    d_idx: usize,
+    k_idx: usize,
+    lazy: bool,
+    no_ef: bool,
+}
+
+const DS: [usize; 3] = [2, 4, 8];
+const KS: [usize; 3] = [1, 2, 4]; // N = K * D
+
+fn cfg_of(draw: &Draw) -> ScheduleConfig {
+    let kind = ScheduleKind::ALL[draw.kind_idx];
+    let d = DS[draw.d_idx];
+    let n = KS[draw.k_idx] * d;
+    ScheduleConfig::new(kind, d, n)
+        .with_sync(if draw.lazy { SyncPolicy::Lazy } else { SyncPolicy::Eager })
+        .with_early_forward(!draw.no_ef)
+}
+
+fn gen_draw() -> Gen<Draw> {
+    Gen {
+        draw: Box::new(|r| Draw {
+            kind_idx: r.range(0, ScheduleKind::ALL.len()),
+            d_idx: r.range(0, DS.len()),
+            k_idx: r.range(0, KS.len()),
+            lazy: r.chance(0.3),
+            no_ef: r.chance(0.3),
+        }),
+        shrink: Box::new(|d| {
+            let mut out = Vec::new();
+            // Shrink toward the smallest/simplest config.
+            if d.d_idx > 0 {
+                out.push(Draw { d_idx: d.d_idx - 1, ..*d });
+            }
+            if d.k_idx > 0 {
+                out.push(Draw { k_idx: d.k_idx - 1, ..*d });
+            }
+            if d.lazy {
+                out.push(Draw { lazy: false, ..*d });
+            }
+            if d.no_ef {
+                out.push(Draw { no_ef: false, ..*d });
+            }
+            out
+        }),
+    }
+}
+
+#[test]
+fn random_configs_build_and_validate() {
+    forall(0xB17, 100, &gen_draw(), |draw| {
+        let cfg = cfg_of(draw);
+        match build(&cfg) {
+            Ok(s) => schedule::validate::validate(&s).map_err(|e| format!("{cfg:?}: {e}")),
+            Err(e) => Err(format!("{cfg:?} failed to build: {e}")),
+        }
+    });
+}
+
+#[test]
+fn device_ops_retime_and_simulate() {
+    use bitpipe::config::{ClusterConfig, ParallelConfig, BERT_64};
+    use bitpipe::sim::{simulate_schedule, CostModel};
+    forall(0xCAFE, 40, &gen_draw(), |draw| {
+        let cfg = cfg_of(draw);
+        let s = build(&cfg).map_err(|e| e.to_string())?;
+        let p = ParallelConfig::new(cfg.kind, 1, cfg.d, 1, cfg.n);
+        let cm = CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(cfg.d));
+        let t = simulate_schedule(&s, &cm).map_err(|e| format!("{cfg:?}: sim {e}"))?;
+        if t.makespan <= 0.0 {
+            return Err(format!("{cfg:?}: non-positive makespan"));
+        }
+        // Makespan can never beat the per-device serial compute.
+        for (dev, tr) in t.devices.iter().enumerate() {
+            if tr.compute_busy > t.makespan + 1e-9 {
+                return Err(format!("{cfg:?}: dev {dev} busier than makespan"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bubble_ratio_never_below_formula_floor() {
+    // The closed forms are *lower bounds* for our generators (exact for
+    // the explicit constructions, within tolerance for the fused ones).
+    forall(0xF00D, 60, &gen_draw(), |draw| {
+        let cfg = cfg_of(draw);
+        if cfg.kind == ScheduleKind::Gems {
+            return Ok(()); // GEMS has no closed form in the paper
+        }
+        let s = build(&cfg).map_err(|e| e.to_string())?;
+        let measured = analysis::bubble_ratio_measured(&s, &Costs::default())
+            .map_err(|e| e.to_string())?;
+        let formula =
+            analysis::bubble_ratio_formula(cfg.kind, cfg.d, cfg.n, cfg.early_forward);
+        if measured + 1e-9 < formula * 0.999 {
+            return Err(format!(
+                "{cfg:?}: measured {measured:.4} below the closed-form floor {formula:.4}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn send_recv_pairing_is_total() {
+    // Stronger restatement of comm pairing: per (src,dst) edge, counts of
+    // sends and receives match exactly.
+    use bitpipe::schedule::Instr;
+    use std::collections::HashMap;
+    forall(0xBEEF, 80, &gen_draw(), |draw| {
+        let cfg = cfg_of(draw);
+        let s = build(&cfg).map_err(|e| e.to_string())?;
+        let mut edges: HashMap<(usize, usize), i64> = HashMap::new();
+        for (dev, ops) in s.device_ops.iter().enumerate() {
+            for op in ops {
+                match *op {
+                    Instr::SendAct { to, .. } | Instr::SendGrad { to, .. } => {
+                        *edges.entry((dev, to)).or_default() += 1;
+                    }
+                    Instr::RecvAct { from, .. } | Instr::RecvGrad { from, .. } => {
+                        *edges.entry((from, dev)).or_default() -= 1;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        for (edge, imbalance) in edges {
+            if imbalance != 0 {
+                return Err(format!("{cfg:?}: edge {edge:?} imbalance {imbalance}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn local_copies_only_in_v_family() {
+    forall(0xD00D, 60, &gen_draw(), |draw| {
+        let cfg = cfg_of(draw);
+        let s = build(&cfg).map_err(|e| e.to_string())?;
+        let copies: usize = schedule::comm_pass::local_copy_counts(&s).iter().sum();
+        let is_v = matches!(cfg.kind, ScheduleKind::VShaped | ScheduleKind::BitPipe);
+        if is_v && copies == 0 {
+            return Err(format!("{cfg:?}: V-shaped schedule produced no local copies"));
+        }
+        if !is_v && copies != 0 {
+            return Err(format!("{cfg:?}: non-V schedule produced {copies} local copies"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn weights_per_device_match_table2() {
+    forall(0xABBA, 60, &gen_draw(), |draw| {
+        let cfg = cfg_of(draw);
+        let s = build(&cfg).map_err(|e| e.to_string())?;
+        let weights = analysis::weights_memory_measured(&s);
+        let want = if cfg.kind.bidirectional() { 2.0 } else { 1.0 };
+        for (dev, w) in weights.iter().enumerate() {
+            if (w - want).abs() > 1e-9 {
+                return Err(format!("{cfg:?}: dev {dev} holds {w} x M_theta, want {want}"));
+            }
+        }
+        Ok(())
+    });
+}
