@@ -13,7 +13,10 @@ use bitpipe::collective::ring_allreduce;
 use bitpipe::comm::{Fabric, Tag};
 use bitpipe::config::{ClusterConfig, ParallelConfig, BERT_64};
 use bitpipe::schedule::{self, retime, Costs, ScheduleConfig, ScheduleKind};
-use bitpipe::sim::{simulate_schedule, CostModel};
+use bitpipe::sim::{
+    grid_search, grid_search_serial, simulate_schedule, simulate_schedule_iters, CostModel,
+    GridSpace,
+};
 use bitpipe::train::optim::{Adam, AdamConfig};
 use std::time::{Duration, Instant};
 
@@ -78,6 +81,37 @@ fn main() {
         iters,
         &format!("  [{per_device_step:.0} ns per device-step]"),
     );
+
+    // Multi-iteration run: 4 back-to-back iterations through the
+    // event-queue engine (per-iteration steady-state stats).
+    let (med, iters) = bench(budget, || {
+        let _ = simulate_schedule_iters(&s, &cm, 4).unwrap();
+    });
+    report("simulate_schedule_iters x4 D=8 N=32", med, iters, "");
+
+    // Grid-search sweep (the Table 4 inner loop): serial baseline vs the
+    // scoped-thread fan-out. The speedup is the sweep-layer acceptance
+    // gate — parallel must beat serial wall-clock on multi-core hosts.
+    let space = GridSpace::bert64();
+    let sweep_budget = Duration::from_secs(2);
+    let (med_serial, it_s) = bench(sweep_budget, || {
+        let _ = grid_search_serial(ScheduleKind::BitPipe, &BERT_64, &space, 32, 128).unwrap();
+    });
+    report("grid_search serial BitPipe BERT 32gpu B128", med_serial, it_s, "");
+    let (med_par, it_p) = bench(sweep_budget, || {
+        let _ = grid_search(ScheduleKind::BitPipe, &BERT_64, &space, 32, 128).unwrap();
+    });
+    let speedup = med_serial.as_secs_f64() / med_par.as_secs_f64().max(1e-12);
+    report(
+        "grid_search parallel BitPipe BERT 32gpu B128",
+        med_par,
+        it_p,
+        &format!("  [{speedup:.2}x vs serial]"),
+    );
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if speedup < 1.0 && cores > 1 {
+        println!("  WARNING: parallel grid_search slower than serial on a multi-core host");
+    }
 
     // Mailbox fabric round-trip.
     let fabric = Fabric::new(2);

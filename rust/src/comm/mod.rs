@@ -60,13 +60,26 @@ pub struct Fabric {
 /// hangs (a schedule bug or a died peer would otherwise freeze the run).
 pub const RECV_TIMEOUT: Duration = Duration::from_secs(30);
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CommError {
-    #[error("recv timeout on device {dev} for tag {tag:?} (deadlock or dead peer)")]
+    /// Recv waited past [`RECV_TIMEOUT`] (deadlock or dead peer).
     Timeout { dev: usize, tag: Tag },
-    #[error("device id {0} out of range")]
+    /// Device id outside the fabric.
     BadDevice(usize),
 }
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Timeout { dev, tag } => {
+                write!(f, "recv timeout on device {dev} for tag {tag:?} (deadlock or dead peer)")
+            }
+            CommError::BadDevice(dev) => write!(f, "device id {dev} out of range"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
 
 impl Fabric {
     pub fn new(n_devices: usize) -> Self {
@@ -112,10 +125,7 @@ impl Fabric {
     pub fn try_recv(&self, dev: usize, tag: Tag) -> Result<Option<Vec<f32>>, CommError> {
         let mbox = self.boxes.get(dev).ok_or(CommError::BadDevice(dev))?;
         let mut slots = mbox.slots.lock().unwrap();
-        Ok(slots.get_mut(&tag).and_then(|q| {
-            let p = q.pop();
-            p
-        }))
+        Ok(slots.get_mut(&tag).and_then(|q| q.pop()))
     }
 
     /// Number of undelivered messages at a device (diagnostics).

@@ -1,6 +1,11 @@
 //! Runtime metrics: iteration timing, throughput (the paper's headline
 //! samples/s metric), and communication counters. Lock-free-ish: counters
 //! are plain atomics so the training hot loop never blocks on metrics.
+//!
+//! [`IterStats`] is the shared per-iteration summary used by both the real
+//! runtime's [`IterationTimer`] and the simulator's multi-iteration API
+//! (`crate::sim::simulate_iters`), so measured and simulated steady-state
+//! numbers are reduced identically.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
@@ -78,6 +83,45 @@ impl std::ops::Sub for CountersSnapshot {
     }
 }
 
+/// Summary statistics over per-iteration durations, seconds.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct IterStats {
+    /// Recorded iterations.
+    pub n: usize,
+    /// Mean iteration time.
+    pub mean: f64,
+    /// Population standard deviation.
+    pub stddev: f64,
+    /// Fastest iteration.
+    pub min: f64,
+    /// Slowest iteration.
+    pub max: f64,
+}
+
+impl IterStats {
+    /// Reduce a slice of per-iteration durations (empty slice -> zeros).
+    pub fn from_secs(xs: &[f64]) -> IterStats {
+        if xs.is_empty() {
+            return IterStats::default();
+        }
+        IterStats {
+            n: xs.len(),
+            mean: crate::util::mean(xs),
+            stddev: crate::util::stddev(xs),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    /// Throughput in samples/s for a given per-iteration mini-batch.
+    pub fn throughput(&self, minibatch: usize) -> f64 {
+        if self.mean <= 0.0 {
+            return 0.0;
+        }
+        minibatch as f64 / self.mean
+    }
+}
+
 /// Per-iteration timing with warm-up skipping (the paper records after 100
 /// warm-up iterations; our driver uses a configurable count).
 #[derive(Debug)]
@@ -130,6 +174,12 @@ impl IterationTimer {
     pub fn durations(&self) -> &[Duration] {
         &self.durations
     }
+
+    /// Summary statistics over the recorded (post-warmup) iterations.
+    pub fn stats(&self) -> IterStats {
+        let secs: Vec<f64> = self.durations.iter().map(Duration::as_secs_f64).collect();
+        IterStats::from_secs(&secs)
+    }
 }
 
 #[cfg(test)]
@@ -168,5 +218,19 @@ mod tests {
         let t = IterationTimer::new(0);
         assert_eq!(t.mean(), Duration::ZERO);
         assert_eq!(t.throughput(8), 0.0);
+        assert_eq!(t.stats(), IterStats::default());
+    }
+
+    #[test]
+    fn iter_stats_reduce() {
+        let s = IterStats::from_secs(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!(s.stddev > 0.0);
+        assert!((s.throughput(4) - 2.0).abs() < 1e-12);
+        assert_eq!(IterStats::from_secs(&[]), IterStats::default());
+        assert_eq!(IterStats::default().throughput(8), 0.0);
     }
 }

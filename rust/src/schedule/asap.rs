@@ -135,13 +135,28 @@ pub fn deps_of(op: &CompOp, n_stages: usize) -> Vec<CompOp> {
 }
 
 /// Errors from re-timing.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum AsapError {
-    #[error("schedule deadlock: no device can progress; stuck ops: {0}")]
+    /// No device can progress; the payload lists the stuck ops.
     Deadlock(String),
-    #[error("op {0} appears on device {1} but is placed on device {2}")]
+    /// An op appears on a device other than its placement.
     Misplaced(CompOp, usize, usize),
 }
+
+impl std::fmt::Display for AsapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AsapError::Deadlock(stuck) => {
+                write!(f, "schedule deadlock: no device can progress; stuck ops: {stuck}")
+            }
+            AsapError::Misplaced(op, dev, want) => {
+                write!(f, "op {op} appears on device {dev} but is placed on device {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AsapError {}
 
 /// Compute earliest start times for `order` (per-device op sequences),
 /// respecting both per-device serialization and cross-op dataflow.

@@ -71,9 +71,19 @@ fn pipe_assignment(kind: ScheduleKind, d: usize, n: usize) -> Vec<PipeId> {
 /// Injection cap (in-flight micro-batches per pipe) for BitPipe's
 /// early-forwarding scaling (Appendix B): pulling later units' forwards
 /// into earlier units' bubbles while keeping peak activations at
-/// (3D-3)/2 * M_a per device across both pipes — ~3(D-1)/4 micro-batches
-/// in flight per pipe.
+/// (3D-3)/2 * M_a per device *across both pipes*. Per pipe that is
+/// (3D-3)/4 micro-batches; fractional budget rounds **up** (the schedule
+/// admits the partially-filled slot), so the cap is
+///
+/// ```text
+/// ceil(3(D-1)/4)  ==  (3(D-1) + 3)/4  ==  floor(3D/4)
+/// ```
+///
+/// (the three forms coincide for every D — 3D/4 differs from 3(D-1)/4 by
+/// exactly 3/4, which the ceiling absorbs). D=4 -> 3, D=8 -> 6,
+/// D=16 -> 12, D=32 -> 24; pinned by `early_forward_cap_matches_appendix_b`.
 fn early_forward_cap(d: usize) -> usize {
+    // ceil(3(D-1)/4), written with the usual (a + b - 1)/b idiom.
     (3 * (d - 1) + 3) / 4
 }
 
@@ -429,6 +439,18 @@ mod tests {
                     t.makespan
                 );
             }
+        }
+    }
+
+    #[test]
+    fn early_forward_cap_matches_appendix_b() {
+        // Appendix B: ceil(3(D-1)/4) in-flight micro-batches per pipe keeps
+        // the peak activation stash at (3D-3)/2 x M_a across both pipes.
+        for (d, want) in [(4usize, 3usize), (8, 6), (16, 12), (32, 24)] {
+            assert_eq!(early_forward_cap(d), want, "D={d}");
+            // The closed forms in the doc comment agree: the implemented
+            // ceil(3(D-1)/4) equals floor(3D/4) for every D.
+            assert_eq!(early_forward_cap(d), 3 * d / 4, "floor(3D/4), D={d}");
         }
     }
 

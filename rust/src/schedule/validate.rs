@@ -101,15 +101,26 @@ fn check_comm_pairing(s: &Schedule) -> Result<()> {
                 }
                 Instr::RecvAct { from, pipe, stage, mb } => {
                     // Receiver tags with its own (consumer) stage; the
-                    // producer side used stage-1.
-                    ensure!(stage > 0, "RecvAct for entry stage");
+                    // producer side used stage-1. Stage 0 has no producer —
+                    // rejecting it here keeps the simulator's entry-stage
+                    // guard (`sim::engine`) a dead-stream diagnostic rather
+                    // than a reachable state.
+                    ensure!(
+                        stage > 0,
+                        "device {dev}: RecvAct for entry stage (no producer exists)"
+                    );
                     *sends.entry((from, dev, 0, pipe, stage - 1, mb)).or_default() -= 1;
                 }
                 Instr::SendGrad { to, pipe, stage, mb } => {
                     *sends.entry((dev, to, 1, pipe, stage, mb)).or_default() += 1;
                 }
                 Instr::RecvGrad { from, pipe, stage, mb } => {
-                    // Receiver's stage s consumes grad produced by s+1.
+                    // Receiver's stage s consumes grad produced by s+1; the
+                    // exit stage has no downstream producer.
+                    ensure!(
+                        stage + 1 < p.n_stages(),
+                        "device {dev}: RecvGrad for exit stage (no producer exists)"
+                    );
                     *sends.entry((from, dev, 1, pipe, stage + 1, mb)).or_default() -= 1;
                 }
                 Instr::LocalCopyAct { pipe, stage, mb } => {
@@ -288,6 +299,25 @@ mod tests {
         let op = s.compute_order[1][0];
         s.compute_order[1].push(op);
         assert!(check_completeness(&s).is_err());
+    }
+
+    #[test]
+    fn entry_stage_recv_act_rejected() {
+        // A stage-0 RecvAct has no producer; validation must reject it
+        // (the simulator guards the same hazard as a deadlock report).
+        let mut s = build(&ScheduleConfig::new(ScheduleKind::Dapple, 4, 4)).unwrap();
+        s.device_ops[0].insert(0, Instr::RecvAct { from: 1, pipe: 0, stage: 0, mb: 0 });
+        let e = check_comm_pairing(&s).unwrap_err();
+        assert!(e.to_string().contains("entry stage"), "{e}");
+    }
+
+    #[test]
+    fn exit_stage_recv_grad_rejected() {
+        let mut s = build(&ScheduleConfig::new(ScheduleKind::Dapple, 4, 4)).unwrap();
+        let last = s.placement.n_stages() - 1;
+        s.device_ops[0].insert(0, Instr::RecvGrad { from: 1, pipe: 0, stage: last, mb: 0 });
+        let e = check_comm_pairing(&s).unwrap_err();
+        assert!(e.to_string().contains("exit stage"), "{e}");
     }
 
     #[test]

@@ -32,6 +32,15 @@ pub struct CostModel {
     /// Pipeline-parallel sizes.
     pub d: usize,
     pub w: usize,
+    /// Precomputed P2P times, `[a * d + b]` — the simulator's hottest
+    /// lookup, hoisted out of the per-message path.
+    p2p: Vec<f64>,
+    /// Precomputed local-copy time.
+    local_copy: f64,
+    /// Precomputed per-stage all-reduce time (stage-independent today).
+    allreduce: f64,
+    /// Precomputed optimizer-step time.
+    optim: f64,
 }
 
 impl CostModel {
@@ -69,7 +78,7 @@ impl CostModel {
             }
         };
 
-        CostModel {
+        let mut cm = CostModel {
             chunk_fwd,
             chunk_bwd,
             msg_bytes,
@@ -79,7 +88,27 @@ impl CostModel {
             cluster: *cluster,
             d: parallel.d,
             w: parallel.w,
+            p2p: Vec::new(),
+            local_copy: 0.0,
+            allreduce: 0.0,
+            optim: 0.0,
+        };
+        // Precompute the per-instruction tables once; the event-queue
+        // engine and the grid-search sweep hit these on every message.
+        let d = cm.d;
+        let mut p2p = vec![0.0f64; d * d];
+        for a in 0..d {
+            for b in 0..d {
+                let (pa, pb) = (cm.physical(a), cm.physical(b));
+                p2p[a * d + b] = cm.cluster.xfer_time(pa, pb, cm.msg_bytes);
+            }
         }
+        cm.p2p = p2p;
+        cm.local_copy = cm.cluster.lat(LinkKind::Local)
+            + cm.msg_bytes as f64 / cm.cluster.bw(LinkKind::Local);
+        cm.allreduce = cm.compute_allreduce_time();
+        cm.optim = cm.grad_bytes as f64 * 7.0 / cm.cluster.bw(LinkKind::Local);
+        cm
     }
 
     /// Physical device of pipeline-device `dev` in the simulated group
@@ -88,20 +117,25 @@ impl CostModel {
         self.cluster.physical_device(self.cluster.mapping, 0, dev, self.w.max(1), self.d)
     }
 
-    /// P2P transfer time between pipeline devices `a` and `b`.
+    /// P2P transfer time between pipeline devices `a` and `b`
+    /// (precomputed table lookup).
     pub fn p2p_time(&self, a: DeviceId, b: DeviceId) -> f64 {
-        let (pa, pb) = (self.physical(a), self.physical(b));
-        self.cluster.xfer_time(pa, pb, self.msg_bytes)
+        self.p2p[a * self.d + b]
     }
 
-    /// Local copy time (same device HBM->HBM).
+    /// Local copy time (same device HBM->HBM; precomputed).
     pub fn local_copy_time(&self) -> f64 {
-        self.cluster.lat(LinkKind::Local)
-            + self.msg_bytes as f64 / self.cluster.bw(LinkKind::Local)
+        self.local_copy
     }
 
-    /// Ring all-reduce time for one stage's gradients.
+    /// Ring all-reduce time for one stage's gradients (precomputed; the
+    /// per-stage gradient volume is uniform today, so the stage id is
+    /// accepted for future heterogeneous chunks but unused).
     pub fn allreduce_time(&self, _stage: StageId) -> f64 {
+        self.allreduce
+    }
+
+    fn compute_allreduce_time(&self) -> f64 {
         let g = self.allreduce_group as f64;
         if self.allreduce_group <= 1 {
             return 0.0;
@@ -113,10 +147,10 @@ impl CostModel {
     }
 
     /// Optimizer step time: elementwise update over the chunk's params,
-    /// modeled at HBM bandwidth (read grad+param+2 Adam moments, write 3).
+    /// modeled at HBM bandwidth (read grad+param+2 Adam moments, write 3;
+    /// precomputed).
     pub fn optim_time(&self) -> f64 {
-        let bytes = self.grad_bytes as f64 * 7.0;
-        bytes / self.cluster.bw(LinkKind::Local)
+        self.optim
     }
 
     /// Whether the P2P link between two pipeline devices crosses nodes.
@@ -180,6 +214,20 @@ mod tests {
         let t8 = c8.allreduce_time(0);
         assert!(t8 > t2);
         assert!(t8 < 2.0 * t2, "ring should scale ~(g-1)/g: {t2} vs {t8}");
+    }
+
+    #[test]
+    fn p2p_table_matches_direct_xfer() {
+        // The precomputed table must be bit-identical to the direct path.
+        let c = model_costs(ScheduleKind::BitPipe, 2, 8);
+        for a in 0..8 {
+            for b in 0..8 {
+                let want = c.cluster.xfer_time(c.physical(a), c.physical(b), c.msg_bytes);
+                assert_eq!(c.p2p_time(a, b).to_bits(), want.to_bits(), "({a},{b})");
+            }
+        }
+        assert!(c.local_copy_time() > 0.0);
+        assert!(c.optim_time() > 0.0);
     }
 
     #[test]

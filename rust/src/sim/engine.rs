@@ -1,23 +1,65 @@
-//! Event-driven executor: runs `Schedule::device_ops` under a [`CostModel`]
+//! Event-queue executor: runs `Schedule::device_ops` under a [`CostModel`]
 //! in virtual time.
 //!
-//! Semantics (matching the real runtime in `crate::train`):
+//! # Execution model
+//!
+//! The engine is a discrete-event simulator. Each device is a sequential
+//! executor with its own virtual clock; a [`BinaryHeap`] of ready events
+//! decides which device runs next. A popped device executes instructions
+//! and advances its clock until it either finishes its stream or *blocks*
+//! (a receive whose message has not been sent yet, or an `AllReduceWait`
+//! whose collective has not completed). Blocked devices leave the heap
+//! entirely; the action that unblocks them (the matching send, the last
+//! group member's `AllReduceStart`) pushes a wake event at the virtual
+//! time the dependency resolves. When the heap drains with instructions
+//! outstanding, the streams have deadlocked and [`SimError`] reports every
+//! stuck device. The heap is ordered by `(time, device)` — a total,
+//! deterministic tie-break — so repeated runs produce bit-identical traces.
+//!
+//! # Instruction semantics (matching the real runtime in `crate::train`)
 //!
 //! * compute ops occupy the device for their full duration;
 //! * sends are asynchronous (NCCL-style): the sender pays a negligible
-//!   launch cost, the message arrives `xfer_time` later;
-//! * receives block until the matching message arrived;
+//!   launch cost, the message arrives `xfer_time` later. In-flight
+//!   messages with the same tag queue **FIFO** (a `VecDeque` per
+//!   [`MsgKey`]), so duplicate tags — e.g. the same (pipe, stage, mb)
+//!   re-sent on a later iteration — pair with receives in send order
+//!   instead of silently clobbering each other;
+//! * receives block until the matching message arrived. A malformed
+//!   entry-stage `RecvAct` (stage 0 has no producer) parks the device and
+//!   is reported as a deadlock — never an arithmetic panic;
 //! * `AllReduceStart` is asynchronous; the collective begins once every
 //!   group member has launched it and completes `allreduce_time` later;
 //!   `AllReduceWait` blocks until completion — eager launches therefore
-//!   hide the collective inside pipeline bubbles (paper Fig 5);
+//!   hide the collective inside pipeline bubbles (paper Fig 5). Collective
+//!   state is keyed by **(stage, round)**, where each device counts its own
+//!   starts/waits per stage, so multiple simulated iterations reuse stages
+//!   without state collisions;
+//! * concurrent collectives sharing a device serialize on its comm engine
+//!   (`comm_free`); each collective is priced when its last member's start
+//!   executes, so back-to-back launches queue behind one another;
 //! * local copies and optimizer steps occupy the device briefly.
+//!
+//! # Multi-iteration runs
+//!
+//! [`simulate_schedule_iters`] executes the same per-device streams
+//! back-to-back `iters` times with no global barrier: a device may begin
+//! iteration `k+1` while others still finish `k`, exactly like the
+//! threaded runtime. [`MultiIterTrace::iter_times`] yields per-iteration
+//! wall times for warmup/steady-state analysis (see
+//! [`crate::sim::simulate_iters`]).
+//!
+//! The pre-event-queue spin-loop executor is kept as
+//! [`simulate_schedule_reference`] for differential testing; the property
+//! suite asserts makespan equivalence across every schedule family.
 
 use super::cost::CostModel;
 use crate::schedule::{Instr, Schedule, StageId};
-use std::collections::HashMap;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::fmt;
 
-/// Per-device accounting from a simulated iteration.
+/// Per-device accounting from a simulated run.
 #[derive(Debug, Clone, Default)]
 pub struct DeviceTrace {
     /// Device-local completion time of its last instruction.
@@ -42,20 +84,376 @@ pub struct SimTrace {
     pub makespan: f64,
 }
 
+/// Multi-iteration trace from [`simulate_schedule_iters`].
+#[derive(Debug, Clone)]
+pub struct MultiIterTrace {
+    /// Aggregate per-device accounting over the whole run.
+    pub devices: Vec<DeviceTrace>,
+    /// Completion time of each iteration: max across devices of the finish
+    /// time of that iteration's last instruction.
+    pub iter_finish: Vec<f64>,
+    /// Total virtual time of the run (`iter_finish.last()`).
+    pub makespan: f64,
+}
+
+impl MultiIterTrace {
+    /// Per-iteration wall times (differences of [`Self::iter_finish`]).
+    /// Iterations overlap at the boundary — a device may enter iteration
+    /// `k+1` while a peer still drains `k` — so entry `k` measures the
+    /// *completion-to-completion* interval, the paper's per-iteration time.
+    pub fn iter_times(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.iter_finish.len());
+        let mut prev = 0.0;
+        for &t in &self.iter_finish {
+            out.push(t - prev);
+            prev = t;
+        }
+        out
+    }
+}
+
 /// Simulation failure: the instruction streams deadlocked (a recv whose
-/// send never happens, or an all-reduce a member never launches).
-#[derive(Debug, thiserror::Error)]
-#[error("simulation deadlock at {stuck:?}")]
+/// send never happens, an all-reduce a member never launches, or a
+/// malformed entry-stage receive).
+#[derive(Debug)]
 pub struct SimError {
-    /// (device, instruction index, instruction) for every stuck device.
+    /// (device, instruction index within the iteration, instruction) for
+    /// every stuck device.
     pub stuck: Vec<(usize, usize, String)>,
 }
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "simulation deadlock at {:?}", self.stuck)
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// Message key: (from, to, is_grad, pipe, producer_stage, mb).
 type MsgKey = (usize, usize, bool, usize, usize, usize);
 
-/// Run the instruction streams to completion in virtual time.
+/// Launch overhead for async ops (kernel/NCCL enqueue).
+const LAUNCH: f64 = 1.0e-6;
+
+/// A device ready to run at a virtual time. Min-heap order by
+/// `(time, dev)` — the deterministic tie-break that makes traces
+/// reproducible (virtual times are always finite, so the `partial_cmp`
+/// below is total in practice).
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    time: f64,
+    dev: usize,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.dev == other.dev
+    }
+}
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.dev.cmp(&self.dev))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Per-(stage, round) collective state.
+#[derive(Debug, Default)]
+struct ArState {
+    /// (device, launch time) per group member that has started.
+    launched: Vec<(usize, f64)>,
+    /// Completion time, once every member launched.
+    done: Option<f64>,
+    /// Devices parked in `AllReduceWait` on this round.
+    waiters: Vec<usize>,
+}
+
+struct Engine<'a> {
+    s: &'a Schedule,
+    costs: &'a CostModel,
+    iters: usize,
+    /// Pre-resolved all-reduce groups per model stage.
+    groups: Vec<Vec<usize>>,
+
+    now: Vec<f64>,
+    trace: Vec<DeviceTrace>,
+    /// Current iteration per device.
+    it: Vec<usize>,
+    /// Instruction cursor within the current iteration per device.
+    ix: Vec<usize>,
+
+    /// In-flight messages: FIFO arrival-time queue per key.
+    msgs: HashMap<MsgKey, VecDeque<f64>>,
+    /// Device parked on a message key (the key's `to` field — one waiter).
+    msg_waiters: HashMap<MsgKey, usize>,
+
+    /// Collective state per (stage, round).
+    ar: HashMap<(StageId, usize), ArState>,
+    /// Rounds of `AllReduceStart{stage}` executed, per (device, stage).
+    ar_started: HashMap<(usize, StageId), usize>,
+    /// Rounds of `AllReduceWait{stage}` completed, per (device, stage).
+    ar_waited: HashMap<(usize, StageId), usize>,
+    /// Per-device collective engine (NCCL comm stream): concurrent
+    /// collectives sharing a device serialize on it. This is what makes
+    /// eager launches (paper Fig 5b) pay off — early collectives drain the
+    /// engine while compute continues; lazy launches queue at the end.
+    comm_free: Vec<f64>,
+
+    heap: BinaryHeap<Event>,
+    remaining: usize,
+    iter_finish: Vec<f64>,
+}
+
+impl<'a> Engine<'a> {
+    fn new(s: &'a Schedule, costs: &'a CostModel, iters: usize) -> Engine<'a> {
+        let d = s.n_devices();
+        let per_iter: usize = s.device_ops.iter().map(|o| o.len()).sum();
+        let groups =
+            (0..s.placement.n_stages()).map(|st| s.placement.allreduce_group(st)).collect();
+        Engine {
+            s,
+            costs,
+            iters,
+            groups,
+            now: vec![0.0; d],
+            trace: vec![DeviceTrace::default(); d],
+            it: vec![0; d],
+            ix: vec![0; d],
+            msgs: HashMap::new(),
+            msg_waiters: HashMap::new(),
+            ar: HashMap::new(),
+            ar_started: HashMap::new(),
+            ar_waited: HashMap::new(),
+            comm_free: vec![0.0; d],
+            heap: BinaryHeap::new(),
+            remaining: per_iter * iters,
+            iter_finish: vec![0.0; iters],
+        }
+    }
+
+    fn wake(&mut self, dev: usize, at: f64) {
+        self.heap.push(Event { time: at.max(self.now[dev]), dev });
+    }
+
+    /// Try to consume the head of `key`'s FIFO; on miss, park the device.
+    fn try_recv(&mut self, dev: usize, key: MsgKey) -> bool {
+        let popped = self.msgs.get_mut(&key).map(|q| {
+            let arrival = q.pop_front().expect("message queues are never left empty");
+            (arrival, q.is_empty())
+        });
+        let Some((arrival, emptied)) = popped else {
+            self.msg_waiters.insert(key, dev);
+            return false;
+        };
+        if emptied {
+            self.msgs.remove(&key);
+        }
+        if arrival > self.now[dev] {
+            self.trace[dev].recv_blocked += arrival - self.now[dev];
+            self.now[dev] = arrival;
+        }
+        true
+    }
+
+    /// Async send: enqueue the arrival and wake a parked receiver.
+    fn send(&mut self, dev: usize, to: usize, key: MsgKey) {
+        self.now[dev] += LAUNCH;
+        let arrival = self.now[dev] + self.costs.p2p_time(dev, to);
+        self.msgs.entry(key).or_default().push_back(arrival);
+        self.trace[dev].sends += 1;
+        if let Some(waiter) = self.msg_waiters.remove(&key) {
+            self.wake(waiter, arrival);
+        }
+    }
+
+    /// Record an `AllReduceStart`; on the last member, price the collective
+    /// and wake the parked waiters.
+    fn allreduce_start(&mut self, dev: usize, stage: StageId) {
+        self.now[dev] += LAUNCH;
+        let round = {
+            let r = self.ar_started.entry((dev, stage)).or_insert(0);
+            let cur = *r;
+            *r += 1;
+            cur
+        };
+        let group = &self.groups[stage];
+        if !group.contains(&dev) {
+            return; // malformed stream: a non-member start never completes anything
+        }
+        let launch_t = self.now[dev];
+        let st = self.ar.entry((stage, round)).or_default();
+        // A device starts each (stage, round) at most once: `ar_started`
+        // advances the round on every start, so entries here are unique.
+        debug_assert!(st.launched.iter().all(|&(g, _)| g != dev));
+        st.launched.push((dev, launch_t));
+        if st.launched.len() < group.len() {
+            return;
+        }
+        let launched = st.launched.iter().map(|&(_, t)| t).fold(0.0f64, f64::max);
+        let waiters = std::mem::take(&mut st.waiters);
+        let engine = group.iter().map(|&g| self.comm_free[g]).fold(0.0f64, f64::max);
+        let done = launched.max(engine) + self.costs.allreduce_time(stage);
+        for &g in group {
+            self.comm_free[g] = done;
+        }
+        self.ar
+            .get_mut(&(stage, round))
+            .expect("state just inserted")
+            .done = Some(done);
+        for w in waiters {
+            self.heap.push(Event { time: done.max(self.now[w]), dev: w });
+        }
+    }
+
+    /// Run device `dev` until it blocks or finishes all iterations.
+    fn run_device(&mut self, dev: usize) {
+        let s = self.s;
+        let ops: &[Instr] = &s.device_ops[dev];
+        loop {
+            if self.ix[dev] == ops.len() {
+                let k = self.it[dev];
+                if self.iter_finish[k] < self.now[dev] {
+                    self.iter_finish[k] = self.now[dev];
+                }
+                self.it[dev] += 1;
+                self.ix[dev] = 0;
+                if self.it[dev] == self.iters {
+                    self.trace[dev].finish = self.now[dev];
+                    return;
+                }
+                continue;
+            }
+            match ops[self.ix[dev]] {
+                Instr::Forward { .. } => {
+                    self.now[dev] += self.costs.chunk_fwd;
+                    self.trace[dev].compute_busy += self.costs.chunk_fwd;
+                }
+                Instr::Backward { .. } => {
+                    self.now[dev] += self.costs.chunk_bwd;
+                    self.trace[dev].compute_busy += self.costs.chunk_bwd;
+                }
+                Instr::SendAct { to, pipe, stage, mb } => {
+                    self.send(dev, to, (dev, to, false, pipe, stage, mb));
+                }
+                Instr::SendGrad { to, pipe, stage, mb } => {
+                    self.send(dev, to, (dev, to, true, pipe, stage, mb));
+                }
+                Instr::RecvAct { from, pipe, stage, mb } => {
+                    // The producer tagged the message with stage-1; a
+                    // stage-0 RecvAct has no producer — park the device so
+                    // the run ends in a deadlock report, not a panic.
+                    let Some(producer) = stage.checked_sub(1) else { return };
+                    if !self.try_recv(dev, (from, dev, false, pipe, producer, mb)) {
+                        return;
+                    }
+                }
+                Instr::RecvGrad { from, pipe, stage, mb } => {
+                    if !self.try_recv(dev, (from, dev, true, pipe, stage + 1, mb)) {
+                        return;
+                    }
+                }
+                Instr::LocalCopyAct { .. } | Instr::LocalCopyGrad { .. } => {
+                    self.now[dev] += self.costs.local_copy_time();
+                    self.trace[dev].local_copies += 1;
+                }
+                Instr::AllReduceStart { stage } => {
+                    self.allreduce_start(dev, stage);
+                }
+                Instr::AllReduceWait { stage } => {
+                    let round = *self.ar_waited.get(&(dev, stage)).unwrap_or(&0);
+                    match self.ar.get(&(stage, round)).and_then(|st| st.done) {
+                        Some(t) => {
+                            *self.ar_waited.entry((dev, stage)).or_insert(0) += 1;
+                            if t > self.now[dev] {
+                                self.trace[dev].allreduce_blocked += t - self.now[dev];
+                                self.now[dev] = t;
+                            }
+                        }
+                        None => {
+                            self.ar.entry((stage, round)).or_default().waiters.push(dev);
+                            return;
+                        }
+                    }
+                }
+                Instr::OptimStep { .. } => {
+                    self.now[dev] += self.costs.optim_time();
+                }
+            }
+            self.ix[dev] += 1;
+            self.remaining -= 1;
+        }
+    }
+
+    fn run(mut self) -> Result<MultiIterTrace, SimError> {
+        let d = self.s.n_devices();
+        for dev in 0..d {
+            self.heap.push(Event { time: 0.0, dev });
+        }
+        while let Some(ev) = self.heap.pop() {
+            self.run_device(ev.dev);
+        }
+        if self.remaining > 0 {
+            let stuck = (0..d)
+                .filter(|&dv| self.it[dv] < self.iters)
+                .map(|dv| {
+                    (dv, self.ix[dv], self.s.device_ops[dv][self.ix[dv]].to_string())
+                })
+                .collect();
+            return Err(SimError { stuck });
+        }
+        let makespan = self.iter_finish.last().copied().unwrap_or(0.0);
+        Ok(MultiIterTrace { devices: self.trace, iter_finish: self.iter_finish, makespan })
+    }
+}
+
+/// Run the instruction streams to completion in virtual time (one
+/// iteration).
 pub fn simulate_schedule(s: &Schedule, costs: &CostModel) -> Result<SimTrace, SimError> {
+    let t = simulate_schedule_iters(s, costs, 1)?;
+    Ok(SimTrace { devices: t.devices, makespan: t.makespan })
+}
+
+/// Run the instruction streams `iters` times back-to-back with no global
+/// barrier between iterations (devices free-run into the next iteration,
+/// like the threaded runtime). Message tags and collective rounds are
+/// disambiguated across iterations by FIFO pairing and (stage, round)
+/// keying respectively.
+pub fn simulate_schedule_iters(
+    s: &Schedule,
+    costs: &CostModel,
+    iters: usize,
+) -> Result<MultiIterTrace, SimError> {
+    assert!(iters >= 1, "need at least one iteration");
+    assert!(
+        !s.device_ops.is_empty(),
+        "schedule has no device_ops; run comm_pass first"
+    );
+    Engine::new(s, costs, iters).run()
+}
+
+/// The pre-event-queue executor: an O(D × total_ops) round-robin spin loop,
+/// kept verbatim (modulo the entry-stage underflow guard) as the reference
+/// semantics for differential tests. Single-iteration only — its
+/// `HashMap<MsgKey, f64>` message store drops duplicate in-flight tags and
+/// its per-stage `ar_done` map is single-shot, the two hazards the
+/// event-queue engine exists to fix.
+pub fn simulate_schedule_reference(
+    s: &Schedule,
+    costs: &CostModel,
+) -> Result<SimTrace, SimError> {
     let d = s.n_devices();
     let ops = &s.device_ops;
     assert!(!ops.is_empty(), "schedule has no device_ops; run comm_pass first");
@@ -64,23 +462,16 @@ pub fn simulate_schedule(s: &Schedule, costs: &CostModel) -> Result<SimTrace, Si
     let mut now = vec![0.0f64; d];
     let mut trace = vec![DeviceTrace::default(); d];
 
-    // In-flight messages: key -> arrival time.
+    // In-flight messages: key -> arrival time (duplicates clobber!).
     let mut msgs: HashMap<MsgKey, f64> = HashMap::new();
     // All-reduce state per stage: device -> launch time.
     let mut ar_started: HashMap<StageId, HashMap<usize, f64>> = HashMap::new();
-    // Completed all-reduces: stage -> completion time.
+    // Completed all-reduces: stage -> completion time (single-shot!).
     let mut ar_done: HashMap<StageId, f64> = HashMap::new();
-    // Per-device collective engine (NCCL comm stream): concurrent
-    // collectives sharing a device serialize on it. This is what makes
-    // eager launches (paper Fig 5b) pay off — early collectives drain the
-    // engine while compute continues; lazy launches queue at the end.
     let mut comm_free = vec![0.0f64; d];
 
     let total: usize = ops.iter().map(|o| o.len()).sum();
     let mut done_ops = 0usize;
-
-    // Launch overhead for async ops (kernel/NCCL enqueue).
-    const LAUNCH: f64 = 1.0e-6;
 
     while done_ops < total {
         let mut progressed = false;
@@ -110,15 +501,18 @@ pub fn simulate_schedule(s: &Schedule, costs: &CostModel) -> Result<SimTrace, Si
                         trace[dev].sends += 1;
                     }
                     Instr::RecvAct { from, pipe, stage, mb } => {
-                        // Producer tagged with stage-1.
-                        let key = (from, dev, false, pipe, stage - 1, mb);
-                        match msgs.get(&key) {
-                            Some(&arrival) => {
+                        // Producer tagged with stage-1 (guarded: a stage-0
+                        // RecvAct can never match and reports as deadlock).
+                        let key = stage
+                            .checked_sub(1)
+                            .map(|producer| (from, dev, false, pipe, producer, mb));
+                        match key.and_then(|k| msgs.get(&k).copied().map(|a| (k, a))) {
+                            Some((k, arrival)) => {
                                 if arrival > now[dev] {
                                     trace[dev].recv_blocked += arrival - now[dev];
                                     now[dev] = arrival;
                                 }
-                                msgs.remove(&key);
+                                msgs.remove(&k);
                             }
                             None => advance = false,
                         }
@@ -146,8 +540,6 @@ pub fn simulate_schedule(s: &Schedule, costs: &CostModel) -> Result<SimTrace, Si
                         entry.insert(dev, now[dev]);
                         let group = s.placement.allreduce_group(stage);
                         if group.iter().all(|g| entry.contains_key(g)) {
-                            // Ready once every member launched; starts when
-                            // every member's comm engine is free.
                             let launched =
                                 group.iter().map(|g| entry[g]).fold(0.0f64, f64::max);
                             let engine =
@@ -201,7 +593,9 @@ pub fn simulate_schedule(s: &Schedule, costs: &CostModel) -> Result<SimTrace, Si
 mod tests {
     use super::*;
     use crate::config::{ClusterConfig, ParallelConfig, BERT_64};
-    use crate::schedule::{build, ScheduleConfig, ScheduleKind, SyncPolicy};
+    use crate::schedule::{
+        build, placement_for, ScheduleConfig, ScheduleKind, SyncPolicy,
+    };
     use crate::sim::CostModel;
 
     fn costs(kind: ScheduleKind, d: usize, n: usize) -> CostModel {
@@ -297,5 +691,141 @@ mod tests {
         s.device_ops[0].remove(idx);
         let e = simulate_schedule(&s, &costs(kind, 4, 4)).unwrap_err();
         assert!(!e.stuck.is_empty());
+    }
+
+    /// Hand-built two-device schedule sending the same tag twice.
+    fn duplicate_send_schedule() -> Schedule {
+        let placement = placement_for(ScheduleKind::Dapple, 2, 1);
+        let cfg = ScheduleConfig::new(ScheduleKind::Dapple, 2, 2);
+        let device_ops = vec![
+            vec![
+                Instr::SendAct { to: 1, pipe: 0, stage: 0, mb: 0 },
+                Instr::SendAct { to: 1, pipe: 0, stage: 0, mb: 0 },
+            ],
+            vec![
+                Instr::RecvAct { from: 0, pipe: 0, stage: 1, mb: 0 },
+                Instr::RecvAct { from: 0, pipe: 0, stage: 1, mb: 0 },
+            ],
+        ];
+        Schedule {
+            cfg,
+            placement,
+            compute_order: vec![Vec::new(), Vec::new()],
+            device_ops,
+            pipe_of_mb: vec![0, 0],
+        }
+    }
+
+    #[test]
+    fn duplicate_sends_pair_fifo() {
+        // Two in-flight messages under one tag: the FIFO engine pairs both
+        // with their receives in send order; the reference executor's
+        // HashMap clobbers the first arrival and deadlocks the second recv.
+        let s = duplicate_send_schedule();
+        let c = costs(ScheduleKind::Dapple, 2, 2);
+        let t = simulate_schedule(&s, &c).unwrap();
+        // Receiver consumed both; its finish is at least the second
+        // message's arrival (two launches + transfer).
+        assert_eq!(t.devices[0].sends, 2);
+        assert!(t.devices[1].finish >= 2.0 * LAUNCH + c.p2p_time(0, 1));
+        let e = simulate_schedule_reference(&s, &c).unwrap_err();
+        assert!(!e.stuck.is_empty(), "reference should drop the duplicate and deadlock");
+    }
+
+    #[test]
+    fn entry_stage_recv_reports_deadlock_not_panic() {
+        // A malformed stage-0 RecvAct must surface as SimError (debug
+        // builds used to panic on the stage-1 underflow).
+        let placement = placement_for(ScheduleKind::Dapple, 2, 1);
+        let cfg = ScheduleConfig::new(ScheduleKind::Dapple, 2, 2);
+        let s = Schedule {
+            cfg,
+            placement,
+            compute_order: vec![Vec::new(), Vec::new()],
+            device_ops: vec![
+                vec![Instr::RecvAct { from: 1, pipe: 0, stage: 0, mb: 0 }],
+                Vec::new(),
+            ],
+            pipe_of_mb: vec![0, 0],
+        };
+        let c = costs(ScheduleKind::Dapple, 2, 2);
+        for result in [simulate_schedule(&s, &c), simulate_schedule_reference(&s, &c)] {
+            let e = result.unwrap_err();
+            assert_eq!(e.stuck.len(), 1);
+            assert_eq!(e.stuck[0].0, 0);
+        }
+    }
+
+    #[test]
+    fn two_iterations_reuse_allreduce_state() {
+        // The per-(stage, round) collective state must keep later
+        // iterations' AllReduceWait honest instead of matching the first
+        // iteration's completion. Lazy sync over an expensive IB collective
+        // puts the full allreduce on every iteration's critical path, so a
+        // stale (single-shot) completion would make iteration 2+ visibly
+        // cheaper than iteration 1.
+        let kind = ScheduleKind::BitPipe;
+        let s = build(&ScheduleConfig::new(kind, 4, 4).with_sync(SyncPolicy::Lazy)).unwrap();
+        let p = ParallelConfig::new(kind, 4, 4, 4, 4);
+        let mut cluster = ClusterConfig::paper_testbed(16);
+        cluster.mapping = crate::config::MappingPolicy::PipesTogether; // allreduce on IB
+        let c = CostModel::new(&BERT_64, &p, &cluster);
+        let one = simulate_schedule(&s, &c).unwrap();
+        let multi = simulate_schedule_iters(&s, &c, 3).unwrap();
+        assert_eq!(multi.iter_finish.len(), 3);
+        let times = multi.iter_times();
+        for (k, &t) in times.iter().enumerate().skip(1) {
+            assert!(
+                t >= 0.9 * times[0] && t <= 1.1 * times[0],
+                "iteration {k} time {t} vs first {}",
+                times[0]
+            );
+        }
+        assert!(
+            multi.makespan > 2.5 * one.makespan,
+            "3-iteration makespan {} vs single {}",
+            multi.makespan,
+            one.makespan
+        );
+        // Aggregate accounting covers all iterations.
+        let blocked: f64 = multi.devices.iter().map(|d| d.allreduce_blocked).sum();
+        let blocked_one: f64 = one.devices.iter().map(|d| d.allreduce_blocked).sum();
+        assert!(
+            blocked > 2.0 * blocked_one,
+            "multi-iter allreduce blocking {blocked} vs single {blocked_one}"
+        );
+    }
+
+    #[test]
+    fn repeated_runs_are_bit_identical() {
+        let kind = ScheduleKind::BitPipe;
+        let s = build(&ScheduleConfig::new(kind, 8, 16)).unwrap();
+        let c = costs(kind, 8, 16);
+        let a = simulate_schedule(&s, &c).unwrap();
+        let b = simulate_schedule(&s, &c).unwrap();
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        for (da, db) in a.devices.iter().zip(&b.devices) {
+            assert_eq!(da.finish.to_bits(), db.finish.to_bits());
+            assert_eq!(da.recv_blocked.to_bits(), db.recv_blocked.to_bits());
+            assert_eq!(da.allreduce_blocked.to_bits(), db.allreduce_blocked.to_bits());
+        }
+    }
+
+    #[test]
+    fn matches_reference_executor_on_valid_schedules() {
+        for kind in ScheduleKind::ALL {
+            for n in [4usize, 8] {
+                let s = build(&ScheduleConfig::new(kind, 4, n)).unwrap();
+                let c = costs(kind, 4, n);
+                let new = simulate_schedule(&s, &c).unwrap();
+                let old = simulate_schedule_reference(&s, &c).unwrap();
+                assert!(
+                    (new.makespan - old.makespan).abs() <= 1e-9 * old.makespan.max(1e-12),
+                    "{kind} N={n}: event-queue {} vs reference {}",
+                    new.makespan,
+                    old.makespan
+                );
+            }
+        }
     }
 }

@@ -2,11 +2,23 @@
 //! device count P and schedule, sweep the parameter space, drop layouts
 //! that do not fit in device memory, and report the best-throughput
 //! configuration.
+//!
+//! The sweep is embarrassingly parallel — every grid point builds and
+//! simulates its own schedule — so [`grid_search`] fans the candidate list
+//! out over scoped worker threads (an atomic work-stealing cursor; no
+//! external thread pool). Candidate enumeration and the
+//! `ClusterConfig::paper_testbed` construction are hoisted out of the
+//! simulation loop. Results are deterministic: workers tag each point with
+//! its candidate index, and the final ordering is a stable
+//! descending-throughput sort over that canonical order, identical to the
+//! serial baseline ([`grid_search_serial`], kept for benchmarking and
+//! differential tests).
 
 use super::{simulate, SimConfig, SimResult};
 use crate::config::{ClusterConfig, ModelConfig, ParallelConfig};
 use crate::schedule::ScheduleKind;
 use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// The search space (paper Table 4 "Considered Values").
 #[derive(Debug, Clone)]
@@ -35,20 +47,15 @@ pub struct GridPoint {
     pub result: SimResult,
 }
 
-/// Sweep the space for one schedule on `n_devices` total devices with a
-/// fixed mini-batch size `minibatch` (the paper holds B-hat fixed per GPU
-/// count and model; N is derived as minibatch / (B*W), floored to a
-/// multiple of D as the paper's N=D-default requires).
-///
-/// Returns all feasible points sorted by descending throughput.
-pub fn grid_search(
+/// Enumerate the feasible-by-arithmetic candidates of the sweep (the cheap
+/// filters: device count, mini-batch divisibility, N >= D, validation).
+fn candidates(
     kind: ScheduleKind,
-    model: &ModelConfig,
     space: &GridSpace,
     n_devices: usize,
     minibatch: usize,
-) -> Result<Vec<GridPoint>> {
-    let mut points = Vec::new();
+) -> Vec<ParallelConfig> {
+    let mut out = Vec::new();
     for &w in &space.w {
         for &d in &space.d {
             if w * d != n_devices {
@@ -67,19 +74,117 @@ pub fn grid_search(
                 if parallel.validate().is_err() {
                     continue;
                 }
-                let cluster = ClusterConfig::paper_testbed(n_devices);
-                let cfg = SimConfig { model: *model, parallel, cluster };
-                let Ok(result) = simulate(&cfg) else { continue };
-                if !result.fits(&cluster) {
-                    continue; // OOM — the paper's grid search drops these
-                }
-                points.push(GridPoint { parallel, result });
+                out.push(parallel);
             }
         }
     }
+    out
+}
+
+/// Simulate one candidate; `None` for layouts that fail to simulate or do
+/// not fit in device memory (the paper's grid search drops these).
+fn evaluate(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    parallel: ParallelConfig,
+) -> Option<GridPoint> {
+    let cfg = SimConfig { model: *model, parallel, cluster: *cluster };
+    let result = simulate(&cfg).ok()?;
+    if !result.fits(cluster) {
+        return None;
+    }
+    Some(GridPoint { parallel, result })
+}
+
+/// Stable descending-throughput order (candidate order breaks ties, so the
+/// result is deterministic).
+fn sort_points(points: &mut [GridPoint]) {
     points.sort_by(|a, b| {
-        b.result.throughput.partial_cmp(&a.result.throughput).unwrap()
+        b.result
+            .throughput
+            .partial_cmp(&a.result.throughput)
+            .expect("throughputs are finite")
     });
+}
+
+/// Sweep the space for one schedule on `n_devices` total devices with a
+/// fixed mini-batch size `minibatch` (the paper holds B-hat fixed per GPU
+/// count and model; N is derived as minibatch / (B*W), floored to a
+/// multiple of D as the paper's N=D-default requires).
+///
+/// Returns all feasible points sorted by descending throughput. Grid
+/// points are simulated concurrently on scoped threads.
+pub fn grid_search(
+    kind: ScheduleKind,
+    model: &ModelConfig,
+    space: &GridSpace,
+    n_devices: usize,
+    minibatch: usize,
+) -> Result<Vec<GridPoint>> {
+    let cands = candidates(kind, space, n_devices, minibatch);
+    let cluster = ClusterConfig::paper_testbed(n_devices);
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(cands.len().max(1));
+    if threads <= 1 || cands.len() <= 1 {
+        let mut points: Vec<GridPoint> =
+            cands.into_iter().filter_map(|p| evaluate(model, &cluster, p)).collect();
+        sort_points(&mut points);
+        return Ok(points);
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut indexed: Vec<(usize, GridPoint)> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let next = &next;
+            let cands = &cands;
+            let cluster = &cluster;
+            handles.push(scope.spawn(move || {
+                let mut found: Vec<(usize, GridPoint)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cands.len() {
+                        break;
+                    }
+                    if let Some(point) = evaluate(model, cluster, cands[i]) {
+                        found.push((i, point));
+                    }
+                }
+                found
+            }));
+        }
+        let mut all = Vec::new();
+        for h in handles {
+            all.extend(h.join().expect("grid-search worker panicked"));
+        }
+        all
+    });
+
+    // Canonical candidate order first, then the stable throughput sort —
+    // byte-for-byte the serial result.
+    indexed.sort_by_key(|&(i, _)| i);
+    let mut points: Vec<GridPoint> = indexed.into_iter().map(|(_, p)| p).collect();
+    sort_points(&mut points);
+    Ok(points)
+}
+
+/// The single-threaded sweep — the pre-parallelization baseline, kept for
+/// `benches/hotpath.rs` speedup measurements and differential tests.
+pub fn grid_search_serial(
+    kind: ScheduleKind,
+    model: &ModelConfig,
+    space: &GridSpace,
+    n_devices: usize,
+    minibatch: usize,
+) -> Result<Vec<GridPoint>> {
+    let cluster = ClusterConfig::paper_testbed(n_devices);
+    let mut points: Vec<GridPoint> = candidates(kind, space, n_devices, minibatch)
+        .into_iter()
+        .filter_map(|p| evaluate(model, &cluster, p))
+        .collect();
+    sort_points(&mut points);
     Ok(points)
 }
 
@@ -119,5 +224,22 @@ mod tests {
             grid_search(ScheduleKind::BitPipe, &BERT_64, &GridSpace::bert64(), 32, 128).unwrap();
         let best = &pts[0];
         assert_eq!(best.parallel.d, 8, "best D {} (throughput {})", best.parallel.d, best.result.throughput);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial() {
+        // Same points, same order, bit-identical throughputs.
+        let par =
+            grid_search(ScheduleKind::BitPipe, &BERT_64, &GridSpace::bert64(), 16, 64).unwrap();
+        let ser = grid_search_serial(ScheduleKind::BitPipe, &BERT_64, &GridSpace::bert64(), 16, 64)
+            .unwrap();
+        assert_eq!(par.len(), ser.len());
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(
+                (a.parallel.w, a.parallel.d, a.parallel.b, a.parallel.n),
+                (b.parallel.w, b.parallel.d, b.parallel.b, b.parallel.n)
+            );
+            assert_eq!(a.result.throughput.to_bits(), b.result.throughput.to_bits());
+        }
     }
 }

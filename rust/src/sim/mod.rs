@@ -20,13 +20,17 @@ mod gridsearch;
 mod memory;
 
 pub use cost::CostModel;
-pub use engine::{simulate_schedule, DeviceTrace, SimError, SimTrace};
-pub use gridsearch::{grid_search, GridPoint, GridSpace};
+pub use engine::{
+    simulate_schedule, simulate_schedule_iters, simulate_schedule_reference, DeviceTrace,
+    MultiIterTrace, SimError, SimTrace,
+};
+pub use gridsearch::{grid_search, grid_search_serial, GridPoint, GridSpace};
 pub use memory::{memory_footprint, MemoryFootprint};
 
 use crate::config::{ClusterConfig, ModelConfig, ParallelConfig};
+use crate::metrics::IterStats;
 use crate::schedule::{self, Schedule};
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 /// Everything needed for one simulated run.
 #[derive(Debug, Clone, Copy)]
@@ -98,6 +102,56 @@ pub fn simulate(cfg: &SimConfig) -> Result<SimResult> {
         allreduce_block_time,
         bubble_fraction,
         memory,
+    })
+}
+
+/// Multi-iteration simulation output: warmup + steady-state statistics.
+///
+/// The engine free-runs the instruction streams back-to-back (no global
+/// barrier), so iteration `k+1`'s warmup forwards overlap iteration `k`'s
+/// drain exactly like the threaded runtime; per-iteration times are
+/// completion-to-completion intervals.
+#[derive(Debug, Clone)]
+pub struct MultiIterResult {
+    /// Iterations simulated (>= 1).
+    pub iters: usize,
+    /// Leading iterations excluded from the steady-state stats.
+    pub warmup: usize,
+    /// Per-iteration wall time, seconds (`iters` entries).
+    pub iter_times: Vec<f64>,
+    /// Statistics over the post-warmup iterations.
+    pub steady: IterStats,
+    /// Steady-state throughput, samples/s (mini-batch / mean steady
+    /// iteration time).
+    pub steady_throughput: f64,
+    /// Total virtual time of the whole run, seconds.
+    pub total_time: f64,
+}
+
+/// Build the schedule for `cfg` and simulate `iters` training iterations,
+/// reporting per-iteration and steady-state (post-`warmup`) timings.
+pub fn simulate_iters(cfg: &SimConfig, iters: usize, warmup: usize) -> Result<MultiIterResult> {
+    ensure!(iters >= 1, "need at least one iteration (got {iters})");
+    ensure!(
+        warmup < iters,
+        "warmup ({warmup}) must leave at least one recorded iteration (iters {iters})"
+    );
+    cfg.parallel.validate()?;
+    cfg.cluster.validate()?;
+    cfg.model.validate()?;
+    let sched: Schedule = schedule::build(&cfg.parallel.schedule())?;
+    let costs = CostModel::new(&cfg.model, &cfg.parallel, &cfg.cluster);
+    let trace = simulate_schedule_iters(&sched, &costs, iters)?;
+    let iter_times = trace.iter_times();
+    let steady = IterStats::from_secs(&iter_times[warmup..]);
+    let steady_throughput = steady.throughput(cfg.parallel.minibatch_size());
+    Ok(MultiIterResult {
+        iters,
+        warmup,
+        iter_times,
+        steady,
+        steady_throughput,
+        total_time: trace.makespan,
     })
 }
 
@@ -183,5 +237,41 @@ mod tests {
         // Paper's B=4 BERT-64 setting fits in 80 GB.
         let r = sim(ScheduleKind::BitPipe, 1, 8, 4, 8);
         assert!(r.fits(&ClusterConfig::paper_testbed(8)), "peak {}", r.peak_memory());
+    }
+
+    #[test]
+    fn multi_iteration_steady_state() {
+        let cfg = SimConfig {
+            model: BERT_64,
+            parallel: ParallelConfig::new(ScheduleKind::BitPipe, 1, 8, 4, 8),
+            cluster: ClusterConfig::paper_testbed(8),
+        };
+        let one = simulate(&cfg).unwrap();
+        let r = simulate_iters(&cfg, 4, 1).unwrap();
+        assert_eq!(r.iter_times.len(), 4);
+        assert_eq!(r.steady.n, 3);
+        assert!(r.iter_times.iter().all(|&t| t > 0.0));
+        // Synchronous training: the steady-state iteration is close to the
+        // single-shot makespan (iterations overlap only at the boundary).
+        assert!(
+            r.steady.mean >= 0.5 * one.iter_time && r.steady.mean <= 1.5 * one.iter_time,
+            "steady {} vs single-shot {}",
+            r.steady.mean,
+            one.iter_time
+        );
+        assert!(r.steady_throughput > 0.0);
+        let sum: f64 = r.iter_times.iter().sum();
+        assert!((sum - r.total_time).abs() < 1e-9 * r.total_time.max(1e-12));
+    }
+
+    #[test]
+    fn multi_iteration_rejects_bad_warmup() {
+        let cfg = SimConfig {
+            model: BERT_64,
+            parallel: ParallelConfig::new(ScheduleKind::Dapple, 1, 4, 4, 4),
+            cluster: ClusterConfig::paper_testbed(4),
+        };
+        assert!(simulate_iters(&cfg, 2, 2).is_err());
+        assert!(simulate_iters(&cfg, 0, 0).is_err());
     }
 }

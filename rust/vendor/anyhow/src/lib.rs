@@ -1,0 +1,205 @@
+//! Vendored minimal stand-in for the `anyhow` crate.
+//!
+//! This build environment is hermetic (no crates.io access), so the subset
+//! of `anyhow` the repository actually uses is implemented here with the
+//! same names and semantics:
+//!
+//! * [`Error`] — a context-chain error value; `Display` shows the outermost
+//!   context, `{:#}` joins the whole chain with `": "`, `Debug` renders an
+//!   anyhow-style "Caused by:" listing.
+//! * [`Result<T>`] — `Result<T, Error>` with the usual default parameter.
+//! * [`Context`] — `.context(..)` / `.with_context(|| ..)` on both
+//!   `Result<T, E>` (any `E: Into<Error>`) and `Option<T>`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — format-style constructors.
+//! * `From<E> for Error` for every `E: std::error::Error + Send + Sync`,
+//!   so `?` works on io/parse/domain errors, preserving the source chain.
+
+use std::fmt;
+
+/// Context-chain error value. The outermost context is entry 0; the root
+/// cause is the last entry.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result<T>` alias with the conventional default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from a displayable message (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`, exactly like
+// the real anyhow: that is what makes this blanket conversion coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `.context(..)` / `.with_context(|| ..)` on fallible values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`anyhow!`] error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/file").map(|_| ()).context("reading config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let err = io_fail().unwrap_err();
+        assert_eq!(format!("{err}"), "reading config");
+        let full = format!("{err:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        let err = none.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(err.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out ({})", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out (3)");
+        let e = anyhow!("plain");
+        assert_eq!(e.root_cause(), "plain");
+    }
+
+    #[test]
+    fn parse_errors_convert() {
+        fn g(s: &str) -> Result<usize> {
+            let v = s.parse::<usize>().with_context(|| format!("bad int {s:?}"))?;
+            Ok(v)
+        }
+        assert_eq!(g("4").unwrap(), 4);
+        let full = format!("{:#}", g("nope").unwrap_err());
+        assert!(full.contains("bad int") && full.contains("invalid digit"), "{full}");
+    }
+}

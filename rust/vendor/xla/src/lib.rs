@@ -1,0 +1,207 @@
+//! Vendored stub of the `xla` PJRT bindings.
+//!
+//! The real backend (xla_extension + PJRT CPU client) is an optional,
+//! machine-specific install; this build environment does not ship it. The
+//! coordinator only needs the *types* to compile — every run that would
+//! actually execute an XLA artifact first loads `artifacts/manifest.txt`,
+//! and the e2e tests skip when that directory is absent.
+//!
+//! Host-side [`Literal`] construction/inspection is implemented for real
+//! (it is pure data plumbing and is unit-tested in `bitpipe::runtime`);
+//! device-side entry points ([`PjRtClient::cpu`],
+//! [`PjRtLoadedExecutable::execute`], ...) return a descriptive error.
+
+use std::fmt;
+
+/// Stub error: carries the operation that needed the missing backend.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: the XLA/PJRT backend is not available in this build \
+         (vendored stub; install xla_extension and swap the real bindings in)"
+    ))
+}
+
+/// Element storage for host literals (f32 tensors and i32 token ids —
+/// the only dtypes the coordinator moves across the boundary).
+#[derive(Debug, Clone)]
+enum Elems {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host-side tensor literal: elements + shape.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    elems: Elems,
+    dims: Vec<i64>,
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + 'static {
+    #[doc(hidden)]
+    fn lit_from(data: &[Self]) -> Literal;
+    #[doc(hidden)]
+    fn lit_to(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn lit_from(data: &[Self]) -> Literal {
+        Literal { elems: Elems::F32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+    fn lit_to(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.elems {
+            Elems::F32(v) => Ok(v.clone()),
+            Elems::I32(_) => Err(Error("literal holds i32, asked for f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn lit_from(data: &[Self]) -> Literal {
+        Literal { elems: Elems::I32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+    fn lit_to(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.elems {
+            Elems::I32(v) => Ok(v.clone()),
+            Elems::F32(_) => Err(Error("literal holds f32, asked for i32".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::lit_from(data)
+    }
+
+    /// Same elements, new shape (element counts must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { elems: self.elems.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.elems {
+            Elems::F32(v) => v.len(),
+            Elems::I32(v) => v.len(),
+        }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy the elements back to the host.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::lit_to(self)
+    }
+
+    /// Flatten a tuple literal (device results only; stub never holds one).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation handle (opaque in the stub).
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// PJRT device buffer handle (opaque in the stub).
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (opaque in the stub).
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client handle; construction reports the missing backend.
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn device_paths_report_missing_backend() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("not available"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
