@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
             let mut cluster = ClusterConfig::paper_testbed(8);
             cluster.ib_bw = ib_gbps * 1e9 / 8.0;
             let parallel = ParallelConfig::new(kind, 1, 8, b, n);
-            let r = simulate(&SimConfig { model, parallel, cluster })?;
+            let r = simulate(&SimConfig::new(model, parallel, cluster))?;
             row.push(format!("{:.2}", r.throughput));
         }
         t.row(row);
@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
             let mut cluster = ClusterConfig::paper_testbed(gpus);
             cluster.ib_bw = ib_gbps * 1e9 / 8.0;
             let parallel = ParallelConfig::new(kind, w, 8, b, 8);
-            let r = simulate(&SimConfig { model, parallel, cluster })?;
+            let r = simulate(&SimConfig::new(model, parallel, cluster))?;
             row.push(format!("{:.2}", r.throughput));
         }
         t.row(row);

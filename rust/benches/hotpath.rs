@@ -6,24 +6,34 @@
 //! failures, so hardware variance does not break `make bench`).
 //!
 //! ```bash
-//! cargo bench --bench hotpath
+//! cargo bench --bench hotpath            # timed runs
+//! cargo bench --bench hotpath -- --test  # CI smoke: one run per case
 //! ```
+//!
+//! `--test` runs every case exactly once with no timing budget — a cheap
+//! compile-and-execute gate that keeps the benches from rotting without
+//! spending CI minutes on stable numbers.
 
 use bitpipe::collective::ring_allreduce;
 use bitpipe::comm::{Fabric, Tag};
 use bitpipe::config::{ClusterConfig, ParallelConfig, BERT_64};
 use bitpipe::schedule::{self, retime, Costs, ScheduleConfig, ScheduleKind};
 use bitpipe::sim::{
-    grid_search, grid_search_serial, simulate_schedule, simulate_schedule_iters, CostModel,
-    GridSpace,
+    grid_search, grid_search_serial, simulate_schedule, simulate_schedule_iters,
+    simulate_schedule_with, CostModel, GridSpace,
 };
 use bitpipe::train::optim::{Adam, AdamConfig};
 use std::time::{Duration, Instant};
 
-/// Run `f` repeatedly for ~`budget`, returning (median, iters).
+/// Run `f` repeatedly for ~`budget`, returning (median, iters). A zero
+/// budget (smoke mode) runs `f` exactly once and reports that single time.
 fn bench<F: FnMut()>(budget: Duration, mut f: F) -> (Duration, usize) {
-    // Warmup.
+    // Warmup (and the only execution in smoke mode).
+    let t_warm = Instant::now();
     f();
+    if budget.is_zero() {
+        return (t_warm.elapsed(), 1);
+    }
     let mut samples = Vec::new();
     let t_start = Instant::now();
     while t_start.elapsed() < budget || samples.len() < 3 {
@@ -43,8 +53,15 @@ fn report(name: &str, med: Duration, iters: usize, note: &str) {
 }
 
 fn main() {
-    let budget = Duration::from_millis(600);
-    println!("== L3 hot paths (median wall time) ==\n");
+    // `cargo bench ... -- --test` => smoke mode: every case once, no timing.
+    let smoke = std::env::args().any(|a| a == "--test");
+    let scaled = |d: Duration| if smoke { Duration::ZERO } else { d };
+    let budget = scaled(Duration::from_millis(600));
+    if smoke {
+        println!("== L3 hot paths (smoke mode: one run per case) ==\n");
+    } else {
+        println!("== L3 hot paths (median wall time) ==\n");
+    }
 
     // Schedule generation (the eval harness's inner loop).
     for (kind, d, n) in [
@@ -82,6 +99,13 @@ fn main() {
         &format!("  [{per_device_step:.0} ns per device-step]"),
     );
 
+    // Same iteration with flow-level link contention: the fair-share
+    // network adds transfer start/completion events and re-projections.
+    let (med, iters) = bench(budget, || {
+        let _ = simulate_schedule_with(&s, &cm, true).unwrap();
+    });
+    report("simulate_schedule D=8 N=32 (contention)", med, iters, "");
+
     // Multi-iteration run: 4 back-to-back iterations through the
     // event-queue engine (per-iteration steady-state stats).
     let (med, iters) = bench(budget, || {
@@ -93,7 +117,7 @@ fn main() {
     // scoped-thread fan-out. The speedup is the sweep-layer acceptance
     // gate — parallel must beat serial wall-clock on multi-core hosts.
     let space = GridSpace::bert64();
-    let sweep_budget = Duration::from_secs(2);
+    let sweep_budget = scaled(Duration::from_secs(2));
     let (med_serial, it_s) = bench(sweep_budget, || {
         let _ = grid_search_serial(ScheduleKind::BitPipe, &BERT_64, &space, 32, 128).unwrap();
     });
@@ -128,7 +152,7 @@ fn main() {
 
     // Ring all-reduce bandwidth (2 threads, 4 MiB vectors).
     let n = 1 << 20;
-    let (med, iters) = bench(Duration::from_secs(2), || {
+    let (med, iters) = bench(scaled(Duration::from_secs(2)), || {
         let fabric = Fabric::new(2);
         std::thread::scope(|scope| {
             for dev in 0..2usize {
@@ -154,7 +178,7 @@ fn main() {
     let mut adam = Adam::new(AdamConfig::default(), n);
     let mut params = vec![0.1f32; n];
     let grads = vec![0.01f32; n];
-    let (med, iters) = bench(Duration::from_secs(1), || {
+    let (med, iters) = bench(scaled(Duration::from_secs(1)), || {
         adam.step(&mut params, &grads);
     });
     let gbs = (n as f64 * 4.0) / med.as_secs_f64() / 1e9;
@@ -168,7 +192,7 @@ fn main() {
     // Gradient accumulation (axpy) — the backward hot loop.
     let mut acc = vec![0.0f32; n];
     let g = vec![0.5f32; n];
-    let (med, iters) = bench(Duration::from_millis(800), || {
+    let (med, iters) = bench(scaled(Duration::from_millis(800)), || {
         for (a, b) in acc.iter_mut().zip(&g) {
             *a += b;
         }

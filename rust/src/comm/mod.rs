@@ -12,9 +12,11 @@
 //!
 //! Implementation: one mailbox per device, `Mutex<HashMap<Tag, queue>>`
 //! plus a `Condvar`. Payloads are boxed `Vec<f32>` (activation/gradient
-//! tensors) moved, never copied.
+//! tensors) moved, never copied. Messages queued under the *same* tag are
+//! delivered FIFO (a `VecDeque` per slot), mirroring the simulator's
+//! in-order pairing of duplicate tags.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -43,26 +45,33 @@ pub enum MsgClass {
     Control,
 }
 
-/// One device's mailbox.
+/// One device's mailbox. Per-tag slots are FIFO queues: duplicate tags —
+/// e.g. the same (pipe, stage, mb) re-sent on a later iteration — pair
+/// with receives in send order instead of last-in-first-out.
 #[derive(Debug, Default)]
 struct Mailbox {
-    slots: Mutex<HashMap<Tag, Vec<Vec<f32>>>>,
+    slots: Mutex<HashMap<Tag, VecDeque<Vec<f32>>>>,
     bell: Condvar,
 }
 
-/// The full-cluster fabric: `D` mailboxes. Cloneable handle.
+/// The full-cluster fabric: `D` mailboxes. Cloneable handle; clones share
+/// the mailboxes and the receive timeout.
 #[derive(Debug, Clone)]
 pub struct Fabric {
     boxes: Arc<Vec<Mailbox>>,
+    /// How long a `recv` waits before reporting a deadlock.
+    timeout: Duration,
 }
 
-/// Receive timeout — converts schedule deadlocks into errors instead of
-/// hangs (a schedule bug or a died peer would otherwise freeze the run).
+/// Default receive timeout — converts schedule deadlocks into errors
+/// instead of hangs (a schedule bug or a died peer would otherwise freeze
+/// the run). Tests that want to fail fast build the fabric with
+/// [`Fabric::with_timeout`].
 pub const RECV_TIMEOUT: Duration = Duration::from_secs(30);
 
 #[derive(Debug)]
 pub enum CommError {
-    /// Recv waited past [`RECV_TIMEOUT`] (deadlock or dead peer).
+    /// Recv waited past the fabric's timeout (deadlock or dead peer).
     Timeout { dev: usize, tag: Tag },
     /// Device id outside the fabric.
     BadDevice(usize),
@@ -83,7 +92,17 @@ impl std::error::Error for CommError {}
 
 impl Fabric {
     pub fn new(n_devices: usize) -> Self {
-        Fabric { boxes: Arc::new((0..n_devices).map(|_| Mailbox::default()).collect()) }
+        Fabric::with_timeout(n_devices, RECV_TIMEOUT)
+    }
+
+    /// Fabric whose `recv` reports a deadlock after `timeout` instead of
+    /// the default [`RECV_TIMEOUT`] — e2e tests use a few seconds so a
+    /// schedule deadlock fails the suite fast.
+    pub fn with_timeout(n_devices: usize, timeout: Duration) -> Self {
+        Fabric {
+            boxes: Arc::new((0..n_devices).map(|_| Mailbox::default()).collect()),
+            timeout,
+        }
     }
 
     pub fn n_devices(&self) -> usize {
@@ -94,26 +113,26 @@ impl Fabric {
     pub fn send(&self, to: usize, tag: Tag, payload: Vec<f32>) -> Result<(), CommError> {
         let mbox = self.boxes.get(to).ok_or(CommError::BadDevice(to))?;
         let mut slots = mbox.slots.lock().unwrap();
-        slots.entry(tag).or_default().push(payload);
+        slots.entry(tag).or_default().push_back(payload);
         mbox.bell.notify_all();
         Ok(())
     }
 
     /// Block until a message under `tag` is available at device `dev`;
-    /// removes and returns it.
+    /// removes and returns it (FIFO among same-tag messages).
     pub fn recv(&self, dev: usize, tag: Tag) -> Result<Vec<f32>, CommError> {
         let mbox = self.boxes.get(dev).ok_or(CommError::BadDevice(dev))?;
         let mut slots = mbox.slots.lock().unwrap();
         loop {
             if let Some(q) = slots.get_mut(&tag) {
-                if let Some(payload) = q.pop() {
+                if let Some(payload) = q.pop_front() {
                     if q.is_empty() {
                         slots.remove(&tag);
                     }
                     return Ok(payload);
                 }
             }
-            let (guard, timeout) = mbox.bell.wait_timeout(slots, RECV_TIMEOUT).unwrap();
+            let (guard, timeout) = mbox.bell.wait_timeout(slots, self.timeout).unwrap();
             slots = guard;
             if timeout.timed_out() {
                 return Err(CommError::Timeout { dev, tag });
@@ -121,11 +140,11 @@ impl Fabric {
         }
     }
 
-    /// Non-blocking receive.
+    /// Non-blocking receive (FIFO among same-tag messages).
     pub fn try_recv(&self, dev: usize, tag: Tag) -> Result<Option<Vec<f32>>, CommError> {
         let mbox = self.boxes.get(dev).ok_or(CommError::BadDevice(dev))?;
         let mut slots = mbox.slots.lock().unwrap();
-        Ok(slots.get_mut(&tag).and_then(|q| q.pop()))
+        Ok(slots.get_mut(&tag).and_then(|q| q.pop_front()))
     }
 
     /// Number of undelivered messages at a device (diagnostics).
@@ -171,6 +190,36 @@ mod tests {
         f.send(1, Tag::act(0, 0, 0, 1), vec![1.0]).unwrap();
         assert_eq!(f.recv(1, Tag::act(0, 0, 0, 1)).unwrap(), vec![1.0]);
         assert_eq!(f.recv(1, Tag::act(0, 0, 0, 0)).unwrap(), vec![0.0]);
+    }
+
+    #[test]
+    fn same_tag_messages_deliver_fifo() {
+        // Regression: the slot queues used to be a Vec popped from the
+        // back, so two payloads under one tag came out LIFO — the opposite
+        // of the simulator's FIFO pairing of duplicate tags.
+        let f = Fabric::new(2);
+        let tag = Tag::act(0, 0, 0, 0);
+        f.send(1, tag, vec![1.0]).unwrap();
+        f.send(1, tag, vec![2.0]).unwrap();
+        assert_eq!(f.recv(1, tag).unwrap(), vec![1.0], "first in, first out");
+        assert_eq!(f.recv(1, tag).unwrap(), vec![2.0]);
+        // Same order through the non-blocking path.
+        f.send(1, tag, vec![3.0]).unwrap();
+        f.send(1, tag, vec![4.0]).unwrap();
+        assert_eq!(f.try_recv(1, tag).unwrap().unwrap(), vec![3.0]);
+        assert_eq!(f.try_recv(1, tag).unwrap().unwrap(), vec![4.0]);
+    }
+
+    #[test]
+    fn custom_timeout_fails_fast() {
+        let f = Fabric::with_timeout(1, Duration::from_millis(30));
+        let t0 = std::time::Instant::now();
+        let e = f.recv(0, Tag::act(0, 0, 0, 0)).unwrap_err();
+        assert!(matches!(e, CommError::Timeout { dev: 0, .. }));
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "timeout did not honour the configured duration"
+        );
     }
 
     #[test]

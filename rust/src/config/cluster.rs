@@ -6,7 +6,7 @@
 use anyhow::{ensure, Result};
 
 /// Interconnect class between two devices.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LinkKind {
     /// Same device (local copy).
     Local,
@@ -14,6 +14,27 @@ pub enum LinkKind {
     NvLink,
     /// Across nodes (Infiniband).
     InfiniBand,
+}
+
+/// Identity of one *directed* physical pipe: concurrent transfers with the
+/// same `LinkId` share its bandwidth (flow-level contention model). Links
+/// are full-duplex, so the two directions of a pair are distinct pipes.
+///
+/// Endpoint granularity follows the hardware that actually serializes the
+/// traffic:
+///
+/// * `Local`/`NvLink` — endpoints are *devices*: each directed device pair
+///   has its own NVLink path (NVSwitch-style full bisection inside a node).
+/// * `InfiniBand` — endpoints are *nodes*: every transfer between the same
+///   node pair funnels through the same NIC-to-NIC pipe, which is exactly
+///   where BitPipe's twin pipes contend under the Fig 6 mappings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LinkId {
+    pub kind: LinkKind,
+    /// Source endpoint (device id for Local/NvLink, node id for IB).
+    pub src: usize,
+    /// Destination endpoint (device id for Local/NvLink, node id for IB).
+    pub dst: usize,
 }
 
 /// How pipeline stages map onto physical devices (paper Fig 6).
@@ -104,6 +125,19 @@ impl ClusterConfig {
         }
     }
 
+    /// Identity of the directed physical pipe carrying traffic from
+    /// physical device `a` to physical device `b` — the shared-resource key
+    /// of the contention model (see [`LinkId`] for endpoint granularity).
+    pub fn link_id(&self, a: usize, b: usize) -> LinkId {
+        let kind = self.link(a, b);
+        match kind {
+            LinkKind::Local | LinkKind::NvLink => LinkId { kind, src: a, dst: b },
+            LinkKind::InfiniBand => {
+                LinkId { kind, src: self.node_of(a), dst: self.node_of(b) }
+            }
+        }
+    }
+
     /// Bandwidth of a link class, bytes/s. Local copies are modeled at
     /// HBM copy bandwidth (fast but not free).
     pub fn bw(&self, kind: LinkKind) -> f64 {
@@ -172,6 +206,28 @@ mod tests {
         assert_eq!(c.link(0, 0), LinkKind::Local);
         assert_eq!(c.link(0, 7), LinkKind::NvLink);
         assert_eq!(c.link(0, 8), LinkKind::InfiniBand);
+    }
+
+    #[test]
+    fn link_ids_identify_shared_pipes() {
+        let c = ClusterConfig::paper_testbed(16);
+        // Intra-node: each directed device pair is its own NVLink pipe.
+        assert_eq!(
+            c.link_id(0, 1),
+            LinkId { kind: LinkKind::NvLink, src: 0, dst: 1 }
+        );
+        assert_ne!(c.link_id(0, 1), c.link_id(1, 0), "full duplex: directions distinct");
+        assert_ne!(c.link_id(0, 1), c.link_id(0, 2));
+        // Inter-node: all device pairs crossing the same node pair share
+        // one directed IB pipe.
+        assert_eq!(c.link_id(0, 8), c.link_id(1, 9));
+        assert_eq!(
+            c.link_id(0, 8),
+            LinkId { kind: LinkKind::InfiniBand, src: 0, dst: 1 }
+        );
+        assert_ne!(c.link_id(0, 8), c.link_id(8, 0), "IB directions distinct");
+        // Local copies stay per-device.
+        assert_eq!(c.link_id(3, 3), LinkId { kind: LinkKind::Local, src: 3, dst: 3 });
     }
 
     #[test]

@@ -201,26 +201,35 @@ pub fn fig5() -> Result<EvalOutput> {
 /// Fig 6: device mapping — replicas-together (allreduce on NVLink) vs
 /// pipes-together (allreduce on IB).
 pub fn fig6() -> Result<EvalOutput> {
-    let mut t = Table::new(vec!["mapping", "model", "W", "D", "throughput (samples/s)"]);
+    let mut t = Table::new(vec![
+        "mapping", "model", "W", "D", "throughput", "contended", "penalty",
+    ]);
     for model in [&BERT_64, &GPT_96] {
         for map in [MappingPolicy::ReplicasTogether, MappingPolicy::PipesTogether] {
             let b = if model.name == "bert-64" { 4 } else { 1 };
             let parallel = ParallelConfig::new(ScheduleKind::BitPipe, 2, 8, b, 8);
             let mut cluster = ClusterConfig::paper_testbed(16);
             cluster.mapping = map;
-            let r = sim::simulate(&SimConfig { model: *model, parallel, cluster })?;
+            let cfg = SimConfig::new(*model, parallel, cluster);
+            let r = sim::simulate(&cfg)?;
+            let rc = sim::simulate(&cfg.with_contention(true))?;
             t.row(vec![
                 format!("{map:?}"),
                 model.name.to_string(),
                 "2".to_string(),
                 "8".to_string(),
                 format!("{:.2}", r.throughput),
+                format!("{:.2}", rc.throughput),
+                format!("{:.1}%", (1.0 - rc.throughput / r.throughput) * 100.0),
             ]);
         }
     }
     let body = format!(
         "{}\nReplicasTogether keeps the heavy gradient allreduce on NVLink and pushes only the\n\
-         small activation messages onto Infiniband (paper Fig 6's recommended mapping).\n",
+         small activation messages onto Infiniband (paper Fig 6's recommended mapping).\n\
+         The contended columns re-price each mapping with flow-level link sharing\n\
+         (--contention): concurrent transfers funnelled onto one inter-node pipe split\n\
+         its bandwidth, so mappings that concentrate P2P on IB pay the larger penalty.\n",
         t.render()
     );
     Ok(EvalOutput { id: "fig6", title: "Device mapping for bidirectional pipelines", body })
@@ -251,11 +260,11 @@ pub fn fig7() -> Result<EvalOutput> {
         // Priced steady state: 4 simulated iterations, first discarded —
         // successive iterations overlap at the boundary, so the steady
         // per-iteration time sits at or below the cold first iteration.
-        let sim_cfg = SimConfig {
-            model: BERT_64,
-            parallel: ParallelConfig::new(ScheduleKind::BitPipe, 1, d, 4, n),
-            cluster: ClusterConfig::paper_testbed(d),
-        };
+        let sim_cfg = SimConfig::new(
+            BERT_64,
+            ParallelConfig::new(ScheduleKind::BitPipe, 1, d, 4, n),
+            ClusterConfig::paper_testbed(d),
+        );
         let mr = sim::simulate_iters(&sim_cfg, 4, 1)?;
         t.row(vec![
             n.to_string(),
@@ -294,7 +303,7 @@ pub fn fig8() -> Result<EvalOutput> {
         ] {
             let parallel = ParallelConfig::new(kind, 1, 8, b, 8);
             let cluster = ClusterConfig::paper_testbed(8);
-            let r = sim::simulate(&SimConfig { model: *model, parallel, cluster })?;
+            let r = sim::simulate(&SimConfig::new(*model, parallel, cluster))?;
             let totals = r.memory.total_peak();
             let gib = |x: u64| x as f64 / (1u64 << 30) as f64;
             let min = totals.iter().copied().min().unwrap_or(0);
@@ -319,7 +328,7 @@ pub fn fig8() -> Result<EvalOutput> {
     ] {
         let parallel = ParallelConfig::new(kind, w, d, b, d);
         let cluster = ClusterConfig::paper_testbed(32);
-        let r = sim::simulate(&SimConfig { model: BERT_64, parallel, cluster })?;
+        let r = sim::simulate(&SimConfig::new(BERT_64, parallel, cluster))?;
         let totals = r.memory.total_peak();
         let gib = |x: u64| x as f64 / (1u64 << 30) as f64;
         t.row(vec![
@@ -352,7 +361,7 @@ fn throughput(
 ) -> Result<f64> {
     let parallel = ParallelConfig::new(kind, w, d, b, n);
     let cluster = ClusterConfig::paper_testbed(devices);
-    Ok(sim::simulate(&SimConfig { model: *model, parallel, cluster })?.throughput)
+    Ok(sim::simulate(&SimConfig::new(*model, parallel, cluster))?.throughput)
 }
 
 /// Fig 9: throughput, pipeline parallelism only, 8 GPUs.

@@ -5,6 +5,7 @@
 //!                    [--csv] [--ticks-per-col T] [--stage-ids]
 //! bitpipe simulate   --kind bitpipe --model bert-64 --w 1 --d 8 --b 4 --n 8
 //!                    [--gpus P] [--mapping replicas|pipes] [--single-node]
+//!                    [--iters N [--warmup K]] [--contention]
 //! bitpipe eval-paper [--only table2,fig9,...] (default: all)
 //! bitpipe train      --artifacts DIR --kind bitpipe --d 4 --n 8 --steps 50
 //!                    [--dataset synthetic|corpus] [--lr 1e-3] [--seed 42]
@@ -181,14 +182,42 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
             other => bail!("--mapping must be replicas|pipes, got {other:?}"),
         };
     }
+    let contention = flags.contains_key("contention");
 
-    let r = sim::simulate(&SimConfig { model, parallel, cluster })?;
+    let cfg = SimConfig::new(model, parallel, cluster).with_contention(contention);
     println!(
-        "model={} kind={} W={w} D={d} B={b} N={n} (mini-batch {})",
+        "model={} kind={} W={w} D={d} B={b} N={n} (mini-batch {}){}",
         model.name,
         kind,
-        parallel.minibatch_size()
+        parallel.minibatch_size(),
+        if contention { " [link contention]" } else { "" },
     );
+
+    let iters = get_usize(flags, "iters", 1)?;
+    if iters == 0 {
+        bail!("--iters must be >= 1");
+    }
+    if iters == 1 && flags.contains_key("warmup") {
+        bail!("--warmup only applies with --iters > 1");
+    }
+    if iters > 1 {
+        // Multi-iteration run: per-iteration times + steady-state stats.
+        let warmup = get_usize(flags, "warmup", 1.min(iters - 1))?;
+        let mr = sim::simulate_iters(&cfg, iters, warmup)?;
+        for (k, t) in mr.iter_times.iter().enumerate() {
+            let label = if k < warmup { " (warmup)" } else { "" };
+            println!("  iter {k}: {:.4} s{label}", t);
+        }
+        println!(
+            "steady state ({} iters): mean {:.4} s, min {:.4} s, max {:.4} s",
+            mr.steady.n, mr.steady.mean, mr.steady.min, mr.steady.max
+        );
+        println!("steady throughput: {:.2} samples/s", mr.steady_throughput);
+        println!("total time:        {:.4} s", mr.total_time);
+        return Ok(());
+    }
+
+    let r = sim::simulate(&cfg)?;
     println!("iteration time: {:.4} s", r.iter_time);
     println!("throughput:     {:.2} samples/s", r.throughput);
     println!("bubble frac:    {:.4}", r.bubble_fraction);

@@ -9,8 +9,44 @@
 //!   where the group spans the bidirectional twin and the W data-parallel
 //!   replicas; the bottleneck link depends on the Fig 6 mapping policy.
 
-use crate::config::{ClusterConfig, LinkKind, MappingPolicy, ModelConfig, ParallelConfig};
+use crate::config::{ClusterConfig, LinkId, LinkKind, MappingPolicy, ModelConfig, ParallelConfig};
 use crate::schedule::{DeviceId, Placement, StageId};
+
+/// One P2P edge of the simulated pipeline group: the payload and the
+/// physical pipe it travels on, rather than a precomputed scalar time.
+/// This is what the contention-aware engine consumes — it needs to know
+/// *which* transfers share a pipe ([`LinkId`]) and how much work each one
+/// is (`bytes` at `bw`, plus `lat` once), so it can split bandwidth among
+/// concurrent flows.
+#[derive(Debug, Clone, Copy)]
+pub struct P2pEdge {
+    /// Message payload, bytes.
+    pub bytes: u64,
+    /// Wire latency, seconds.
+    pub lat: f64,
+    /// Full link bandwidth, bytes/s (shared under contention).
+    pub bw: f64,
+    /// Identity of the shared physical pipe.
+    pub link: LinkId,
+    /// Data-parallel multiplicity (>= 1): how many of the W pipeline
+    /// groups' *identical, synchronized* copies of this transfer land on
+    /// the same physical pipe. The simulator executes one group
+    /// (`crate::sim` module docs); under contention the other groups'
+    /// symmetric traffic is priced by scaling this flow's work — m
+    /// synchronized copies sharing one pipe each run at 1/m, which is
+    /// exactly work x m for the copy we track.
+    pub dp_copies: u32,
+}
+
+impl P2pEdge {
+    /// Transfer time with the pipe to itself (no contention) — identical,
+    /// operation for operation, to [`ClusterConfig::xfer_time`] so the
+    /// contended engine degrades bit-for-bit to the fixed-duration model
+    /// when a transfer never shares its link.
+    pub fn solo_time(&self) -> f64 {
+        self.lat + self.bytes as f64 / self.bw
+    }
+}
 
 /// Per-instruction costs in seconds for one simulated pipeline group.
 #[derive(Debug, Clone)]
@@ -21,7 +57,9 @@ pub struct CostModel {
     pub chunk_bwd: f64,
     /// Activation / gradient message bytes.
     pub msg_bytes: u64,
-    /// Gradient bytes per *stage* all-reduce (one chunk's parameters).
+    /// Gradient bytes per *body* chunk's all-reduce (its transformer
+    /// layers; entry/exit chunks add embedding/head bytes on top — see
+    /// [`CostModel::allreduce_time`]).
     pub grad_bytes: u64,
     /// All-reduce group size g (bidirectional twins x W replicas).
     pub allreduce_group: usize,
@@ -32,15 +70,26 @@ pub struct CostModel {
     /// Pipeline-parallel sizes.
     pub d: usize,
     pub w: usize,
-    /// Precomputed P2P times, `[a * d + b]` — the simulator's hottest
-    /// lookup, hoisted out of the per-message path.
-    p2p: Vec<f64>,
+    /// Precomputed P2P edges (bytes + link identity), `[a * d + b]` — the
+    /// simulator's hottest lookup, hoisted out of the per-message path.
+    /// The single source of truth for P2P pricing: the fixed-duration
+    /// engine reads [`P2pEdge::solo_time`], the contended engine the full
+    /// edge.
+    edges: Vec<P2pEdge>,
     /// Precomputed local-copy time.
     local_copy: f64,
-    /// Precomputed per-stage all-reduce time (stage-independent today).
-    allreduce: f64,
-    /// Precomputed optimizer-step time.
-    optim: f64,
+    /// Precomputed per-stage all-reduce times. Entry and exit chunks carry
+    /// the embedding / LM-head parameters on top of their transformer
+    /// layers, so their gradient volume (and ring time) is heavier than a
+    /// body chunk's.
+    allreduce: Vec<f64>,
+    /// Stages per pipeline replica (v * d), sizing `allreduce` and `optim`.
+    n_stages: usize,
+    /// Precomputed per-stage optimizer-step times (entry/exit chunks
+    /// update embedding/LM-head parameters on top of their layers).
+    optim: Vec<f64>,
+    /// Body-chunk optimizer time, for out-of-range stages.
+    optim_body: f64,
 }
 
 impl CostModel {
@@ -88,27 +137,66 @@ impl CostModel {
             cluster: *cluster,
             d: parallel.d,
             w: parallel.w,
-            p2p: Vec::new(),
+            edges: Vec::new(),
             local_copy: 0.0,
-            allreduce: 0.0,
-            optim: 0.0,
+            allreduce: Vec::new(),
+            n_stages: parallel.v * parallel.d,
+            optim: Vec::new(),
+            optim_body: 0.0,
         };
         // Precompute the per-instruction tables once; the event-queue
         // engine and the grid-search sweep hit these on every message.
         let d = cm.d;
-        let mut p2p = vec![0.0f64; d * d];
+        let w_groups = cm.w.max(1);
+        let mut edges = Vec::with_capacity(d * d);
         for a in 0..d {
             for b in 0..d {
                 let (pa, pb) = (cm.physical(a), cm.physical(b));
-                p2p[a * d + b] = cm.cluster.xfer_time(pa, pb, cm.msg_bytes);
+                let kind = cm.cluster.link(pa, pb);
+                let link = cm.cluster.link_id(pa, pb);
+                // Every pipeline group sends this message at the same
+                // virtual time; count the groups whose copy shares this
+                // physical pipe (always >= 1: group 0 itself).
+                let dp_copies = (0..w_groups)
+                    .filter(|&g| {
+                        let ga = cm.cluster.physical_device(cm.cluster.mapping, g, a, w_groups, d);
+                        let gb = cm.cluster.physical_device(cm.cluster.mapping, g, b, w_groups, d);
+                        cm.cluster.link_id(ga, gb) == link
+                    })
+                    .count() as u32;
+                edges.push(P2pEdge {
+                    bytes: cm.msg_bytes,
+                    lat: cm.cluster.lat(kind),
+                    bw: cm.cluster.bw(kind),
+                    link,
+                    dp_copies,
+                });
             }
         }
-        cm.p2p = p2p;
+        cm.edges = edges;
         cm.local_copy = cm.cluster.lat(LinkKind::Local)
             + cm.msg_bytes as f64 / cm.cluster.bw(LinkKind::Local);
-        cm.allreduce = cm.compute_allreduce_time();
-        cm.optim = cm.grad_bytes as f64 * 7.0 / cm.cluster.bw(LinkKind::Local);
+        // Heterogeneous per-stage gradient volumes: the entry chunk carries
+        // the token/position embeddings, the exit chunk its own LM-head
+        // projection copy — both all-reduce more bytes than a body chunk.
+        let embed_bytes = model.embedding_params() * model.dtype_bytes as u64;
+        cm.allreduce = (0..cm.n_stages)
+            .map(|stage| cm.ring_time(cm.grad_bytes_of(stage, embed_bytes)))
+            .collect();
+        let hbm_bw = cm.cluster.bw(LinkKind::Local);
+        let optim_of = move |bytes: u64| bytes as f64 * 7.0 / hbm_bw;
+        cm.optim = (0..cm.n_stages)
+            .map(|stage| optim_of(cm.grad_bytes_of(stage, embed_bytes)))
+            .collect();
+        cm.optim_body = optim_of(cm.grad_bytes);
         cm
+    }
+
+    /// Gradient bytes all-reduced for `stage`: a body chunk's transformer
+    /// layers, plus the embedding (entry) or LM-head (exit) parameters.
+    fn grad_bytes_of(&self, stage: StageId, embed_bytes: u64) -> u64 {
+        let extra = if stage == 0 || stage + 1 == self.n_stages { embed_bytes } else { 0 };
+        self.grad_bytes + extra
     }
 
     /// Physical device of pipeline-device `dev` in the simulated group
@@ -117,10 +205,17 @@ impl CostModel {
         self.cluster.physical_device(self.cluster.mapping, 0, dev, self.w.max(1), self.d)
     }
 
-    /// P2P transfer time between pipeline devices `a` and `b`
-    /// (precomputed table lookup).
+    /// P2P transfer time between pipeline devices `a` and `b` — the edge's
+    /// solo time (operation-for-operation [`ClusterConfig::xfer_time`]).
     pub fn p2p_time(&self, a: DeviceId, b: DeviceId) -> f64 {
-        self.p2p[a * self.d + b]
+        self.edges[a * self.d + b].solo_time()
+    }
+
+    /// P2P edge between pipeline devices `a` and `b`: payload bytes plus
+    /// the physical pipe identity — the contention-aware engine's view
+    /// (precomputed table lookup).
+    pub fn p2p_edge(&self, a: DeviceId, b: DeviceId) -> P2pEdge {
+        self.edges[a * self.d + b]
     }
 
     /// Local copy time (same device HBM->HBM; precomputed).
@@ -128,14 +223,19 @@ impl CostModel {
         self.local_copy
     }
 
-    /// Ring all-reduce time for one stage's gradients (precomputed; the
-    /// per-stage gradient volume is uniform today, so the stage id is
-    /// accepted for future heterogeneous chunks but unused).
-    pub fn allreduce_time(&self, _stage: StageId) -> f64 {
-        self.allreduce
+    /// Ring all-reduce time for one stage's gradients (precomputed).
+    /// Volumes are heterogeneous: the entry chunk (embeddings) and the
+    /// exit chunk (LM head) are heavier than body chunks. Out-of-range
+    /// stages (hand-built streams) price as a body chunk.
+    pub fn allreduce_time(&self, stage: StageId) -> f64 {
+        match self.allreduce.get(stage) {
+            Some(&t) => t,
+            None => self.ring_time(self.grad_bytes),
+        }
     }
 
-    fn compute_allreduce_time(&self) -> f64 {
+    /// Ring all-reduce time over `bytes` on the mapped bottleneck link.
+    fn ring_time(&self, bytes: u64) -> f64 {
         let g = self.allreduce_group as f64;
         if self.allreduce_group <= 1 {
             return 0.0;
@@ -143,14 +243,19 @@ impl CostModel {
         let bw = self.cluster.bw(self.allreduce_link);
         let lat = self.cluster.lat(self.allreduce_link);
         // Ring: 2(g-1) steps, each moving bytes/g.
-        2.0 * (g - 1.0) * (self.grad_bytes as f64 / g / bw + lat)
+        2.0 * (g - 1.0) * (bytes as f64 / g / bw + lat)
     }
 
-    /// Optimizer step time: elementwise update over the chunk's params,
-    /// modeled at HBM bandwidth (read grad+param+2 Adam moments, write 3;
-    /// precomputed).
-    pub fn optim_time(&self) -> f64 {
-        self.optim
+    /// Optimizer step time for `stage`: elementwise update over the
+    /// chunk's params, modeled at HBM bandwidth (read grad+param+2 Adam
+    /// moments, write 3; precomputed). Heterogeneous like the all-reduce:
+    /// entry/exit chunks also update their embedding/LM-head parameters;
+    /// out-of-range stages price as a body chunk.
+    pub fn optim_time(&self, stage: StageId) -> f64 {
+        match self.optim.get(stage) {
+            Some(&t) => t,
+            None => self.optim_body,
+        }
     }
 
     /// Whether the P2P link between two pipeline devices crosses nodes.
@@ -217,6 +322,72 @@ mod tests {
     }
 
     #[test]
+    fn allreduce_volumes_are_heterogeneous() {
+        // Entry (embeddings) and exit (LM head) chunks all-reduce more
+        // bytes than body chunks; body chunks are uniform.
+        let c = model_costs(ScheduleKind::BitPipe, 4, 8); // 16 stages, group 8
+        let body = c.allreduce_time(1);
+        assert!(body > 0.0);
+        for stage in 2..15 {
+            assert_eq!(c.allreduce_time(stage).to_bits(), body.to_bits(), "stage {stage}");
+        }
+        assert!(c.allreduce_time(0) > body, "entry chunk should be heavier");
+        assert!(c.allreduce_time(15) > body, "exit chunk should be heavier");
+        // Out-of-range stages (hand-built streams) price as body chunks.
+        assert_eq!(c.allreduce_time(99).to_bits(), body.to_bits());
+        // The optimizer step is heterogeneous the same way: entry/exit
+        // chunks also update their embedding/LM-head parameters.
+        let optim_body = c.optim_time(1);
+        assert!(optim_body > 0.0);
+        assert!(c.optim_time(0) > optim_body);
+        assert!(c.optim_time(15) > optim_body);
+        assert_eq!(c.optim_time(99).to_bits(), optim_body.to_bits());
+        // No collective at all => every stage's all-reduce is free, but
+        // the optimizer still pays.
+        let c1 = model_costs(ScheduleKind::Dapple, 1, 8);
+        for stage in [0usize, 3, 7] {
+            assert_eq!(c1.allreduce_time(stage), 0.0);
+            assert!(c1.optim_time(stage) > 0.0);
+        }
+    }
+
+    #[test]
+    fn p2p_edges_key_the_right_pipes() {
+        // W=2 ReplicasTogether: replica 1's copy of every cross-node hop
+        // funnels onto the same node-pair IB pipe as replica 0's
+        // (dp_copies = 2); NVLink hops use distinct device pairs
+        // (dp_copies = 1).
+        let c = model_costs(ScheduleKind::BitPipe, 2, 8);
+        let mut shared = 0;
+        for a in 0..8 {
+            for b in 0..8 {
+                let e = c.p2p_edge(a, b);
+                assert_eq!(e.bytes, c.msg_bytes);
+                assert_eq!(
+                    e.link,
+                    c.cluster.link_id(c.physical(a), c.physical(b)),
+                    "({a},{b})"
+                );
+                match e.link.kind {
+                    LinkKind::InfiniBand => {
+                        assert_eq!(e.dp_copies, 2, "({a},{b})");
+                        shared += 1;
+                    }
+                    _ => assert_eq!(e.dp_copies, 1, "({a},{b})"),
+                }
+            }
+        }
+        assert!(shared > 0, "expected cross-node edges under ReplicasTogether");
+        // W=1: nothing to share with.
+        let c1 = model_costs(ScheduleKind::BitPipe, 1, 8);
+        for a in 0..8 {
+            for b in 0..8 {
+                assert_eq!(c1.p2p_edge(a, b).dp_copies, 1);
+            }
+        }
+    }
+
+    #[test]
     fn p2p_table_matches_direct_xfer() {
         // The precomputed table must be bit-identical to the direct path.
         let c = model_costs(ScheduleKind::BitPipe, 2, 8);
@@ -227,7 +398,7 @@ mod tests {
             }
         }
         assert!(c.local_copy_time() > 0.0);
-        assert!(c.optim_time() > 0.0);
+        assert!(c.optim_time(0) > 0.0);
     }
 
     #[test]

@@ -49,11 +49,52 @@
 //! wall times for warmup/steady-state analysis (see
 //! [`crate::sim::simulate_iters`]).
 //!
+//! # Link contention (flow-level fair share)
+//!
+//! With `contention` on ([`simulate_schedule_with`] /
+//! [`simulate_schedule_iters_with`]), links are shared resources instead
+//! of infinite pipes. Every P2P message becomes a *flow* on the directed
+//! physical link the cost model assigns it ([`crate::config::LinkId`]:
+//! per-device-pair NVLink paths, per-node-pair Infiniband pipes). The `k`
+//! concurrent flows on one link each progress at `1/k` of the link rate —
+//! the standard progress-tracking fair-share model — and every flow
+//! start/finish *re-projects* the completion times of the flows still in
+//! flight. Re-projection is implemented with versioned completion events:
+//! stale events (superseded by a later re-projection) pop and are
+//! discarded. A flow's work is its solo transfer time (latency +
+//! bytes/bandwidth), so a flow that never shares its link completes at
+//! exactly the fixed-duration engine's arrival time, bit for bit, and a
+//! shared flow only ever finishes later — contended makespans are
+//! therefore bounded below by uncontended ones for the same schedule.
+//! All-reduce collectives stay priced by the scalar ring model
+//! (serialized per device on `comm_free`); only P2P flows contend.
+//!
+//! Two deliberate modeling choices, documented because they differ from a
+//! textbook flow-level model:
+//!
+//! * The simulator executes one of the W data-parallel pipeline groups;
+//!   the other groups' identical, synchronized transfers are priced by
+//!   scaling each flow's work by `P2pEdge::dp_copies` (the number of
+//!   group copies landing on the same pipe) — exact for lock-step
+//!   replicas, which identical instruction streams are.
+//! * A flow's work is its full solo time, *including* the wire latency,
+//!   so k sharers each pay ~k x latency. Strict flow models share only
+//!   the bytes/bandwidth term; folding the (micro-second) latency in
+//!   keeps the solo-flow bit-equality guarantee and errs pessimistic by
+//!   at most (k-1) x latency per transfer.
+//!
+//! Transfer starts are enqueued as heap events at their virtual send time
+//! rather than applied immediately: a device may locally run far ahead of
+//! its peers, and bandwidth sharing is only correct if the network
+//! observes flow starts/finishes in global time order. Sends stay
+//! asynchronous for the *sender* either way.
+//!
 //! The pre-event-queue spin-loop executor is kept as
 //! [`simulate_schedule_reference`] for differential testing; the property
 //! suite asserts makespan equivalence across every schedule family.
 
 use super::cost::CostModel;
+use crate::config::LinkId;
 use crate::schedule::{Instr, Schedule, StageId};
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -136,19 +177,47 @@ type MsgKey = (usize, usize, bool, usize, usize, usize);
 /// Launch overhead for async ops (kernel/NCCL enqueue).
 const LAUNCH: f64 = 1.0e-6;
 
-/// A device ready to run at a virtual time. Min-heap order by
-/// `(time, dev)` — the deterministic tie-break that makes traces
-/// reproducible (virtual times are always finite, so the `partial_cmp`
-/// below is total in practice).
+/// What a heap event does when it fires.
+#[derive(Debug, Clone, Copy)]
+enum EvKind {
+    /// A transfer's projected completion (contended mode). Carries the
+    /// projection version; stale events are discarded on pop.
+    XferDone { id: usize, version: u64 },
+    /// A transfer enters its link (contended mode). Deferred to the heap
+    /// so the network sees flow starts in global time order even when the
+    /// sending device has locally run ahead.
+    XferStart { id: usize },
+    /// A device ready to run.
+    Dev(usize),
+}
+
+impl EvKind {
+    /// Total tie-break order at equal times: deliver completions first
+    /// (messages become visible before devices resume), then flow starts,
+    /// then devices in ascending id — the same device order the
+    /// pre-contention engine used, keeping uncontended traces bit-stable.
+    fn rank(&self) -> (u8, usize, u64) {
+        match *self {
+            EvKind::XferDone { id, version } => (0, id, version),
+            EvKind::XferStart { id } => (1, id, 0),
+            EvKind::Dev(dev) => (2, dev, 0),
+        }
+    }
+}
+
+/// A scheduled simulator event. Min-heap order by `(time, kind rank)` — a
+/// total, deterministic tie-break that makes traces reproducible (virtual
+/// times are always finite, so the `partial_cmp` below is total in
+/// practice).
 #[derive(Debug, Clone, Copy)]
 struct Event {
     time: f64,
-    dev: usize,
+    kind: EvKind,
 }
 
 impl PartialEq for Event {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.dev == other.dev
+        self.cmp(other) == Ordering::Equal
     }
 }
 impl Eq for Event {}
@@ -160,13 +229,82 @@ impl Ord for Event {
             .time
             .partial_cmp(&self.time)
             .unwrap_or(Ordering::Equal)
-            .then_with(|| other.dev.cmp(&self.dev))
+            .then_with(|| other.kind.rank().cmp(&self.kind.rank()))
     }
 }
 
 impl PartialOrd for Event {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
+    }
+}
+
+/// One in-flight P2P flow (contended mode).
+#[derive(Debug, Clone, Copy)]
+struct Xfer {
+    key: MsgKey,
+    link: LinkId,
+    /// Remaining work in *solo seconds* — the time the rest of the
+    /// transfer would take alone on its link (latency + bytes/bandwidth).
+    /// `k` concurrent flows drain at `1/k` solo-seconds per wall second,
+    /// so a never-shared flow reproduces the fixed-duration arrival
+    /// bit for bit.
+    remaining: f64,
+    /// Projection version; completion events carry the version they were
+    /// projected under and are discarded if it has moved on.
+    version: u64,
+    done: bool,
+}
+
+/// Flows currently sharing one directed physical link.
+#[derive(Debug, Default)]
+struct LinkState {
+    /// Active transfer ids, in deterministic start order.
+    active: Vec<usize>,
+    /// Virtual time progress was last settled at.
+    last: f64,
+}
+
+/// The shared-link network: progress-tracking fair-share bandwidth.
+#[derive(Debug, Default)]
+struct Network {
+    xfers: Vec<Xfer>,
+    links: HashMap<LinkId, LinkState>,
+}
+
+impl Network {
+    /// Advance every active flow on `link` from the last settle point to
+    /// `t` at the current fair share (1/k of the link each).
+    fn settle(&mut self, link: &LinkId, t: f64) {
+        let Some(ls) = self.links.get_mut(link) else { return };
+        let k = ls.active.len();
+        if k > 0 {
+            let dt = t - ls.last;
+            if dt > 0.0 {
+                let each = dt / k as f64;
+                for &id in &ls.active {
+                    let x = &mut self.xfers[id];
+                    x.remaining = (x.remaining - each).max(0.0);
+                }
+            }
+        }
+        ls.last = t;
+    }
+
+    /// Re-project the completion of every active flow on `link` under the
+    /// new share count, bumping versions so older projections go stale.
+    /// Fresh completion events are appended to `out`.
+    fn reproject(&mut self, link: &LinkId, t: f64, out: &mut Vec<Event>) {
+        let Some(ls) = self.links.get(link) else { return };
+        let k = ls.active.len() as f64;
+        for &id in &ls.active {
+            let x = &mut self.xfers[id];
+            x.version += 1;
+            out.push(Event {
+                time: t + x.remaining * k,
+                kind: EvKind::XferDone { id, version: x.version },
+            });
+        }
     }
 }
 
@@ -211,6 +349,9 @@ struct Engine<'a> {
     /// eager launches (paper Fig 5b) pay off — early collectives drain the
     /// engine while compute continues; lazy launches queue at the end.
     comm_free: Vec<f64>,
+    /// Shared-link bandwidth model; `None` = fixed-duration transfers
+    /// (the bit-stable legacy behaviour).
+    net: Option<Network>,
 
     heap: BinaryHeap<Event>,
     remaining: usize,
@@ -218,7 +359,12 @@ struct Engine<'a> {
 }
 
 impl<'a> Engine<'a> {
-    fn new(s: &'a Schedule, costs: &'a CostModel, iters: usize) -> Engine<'a> {
+    fn new(
+        s: &'a Schedule,
+        costs: &'a CostModel,
+        iters: usize,
+        contention: bool,
+    ) -> Engine<'a> {
         let d = s.n_devices();
         let per_iter: usize = s.device_ops.iter().map(|o| o.len()).sum();
         let groups =
@@ -238,6 +384,7 @@ impl<'a> Engine<'a> {
             ar_started: HashMap::new(),
             ar_waited: HashMap::new(),
             comm_free: vec![0.0; d],
+            net: contention.then(Network::default),
             heap: BinaryHeap::new(),
             remaining: per_iter * iters,
             iter_finish: vec![0.0; iters],
@@ -245,7 +392,7 @@ impl<'a> Engine<'a> {
     }
 
     fn wake(&mut self, dev: usize, at: f64) {
-        self.heap.push(Event { time: at.max(self.now[dev]), dev });
+        self.heap.push(Event { time: at.max(self.now[dev]), kind: EvKind::Dev(dev) });
     }
 
     /// Try to consume the head of `key`'s FIFO; on miss, park the device.
@@ -268,14 +415,80 @@ impl<'a> Engine<'a> {
         true
     }
 
-    /// Async send: enqueue the arrival and wake a parked receiver.
+    /// Async send: fixed-duration or contended, depending on mode. The
+    /// sender pays `LAUNCH` either way and never blocks.
     fn send(&mut self, dev: usize, to: usize, key: MsgKey) {
         self.now[dev] += LAUNCH;
+        self.trace[dev].sends += 1;
+        if self.net.is_some() {
+            self.send_contended(dev, to, key);
+            return;
+        }
         let arrival = self.now[dev] + self.costs.p2p_time(dev, to);
         self.msgs.entry(key).or_default().push_back(arrival);
-        self.trace[dev].sends += 1;
         if let Some(waiter) = self.msg_waiters.remove(&key) {
             self.wake(waiter, arrival);
+        }
+    }
+
+    /// Contended send: register the flow and defer its link entry to the
+    /// heap, so the network observes starts in global time order. The
+    /// message is delivered (and any parked receiver woken) only when the
+    /// flow's completion event fires.
+    fn send_contended(&mut self, dev: usize, to: usize, key: MsgKey) {
+        let edge = self.costs.p2p_edge(dev, to);
+        let net = self.net.as_mut().expect("contended send without a network");
+        let id = net.xfers.len();
+        net.xfers.push(Xfer {
+            key,
+            link: edge.link,
+            // The other W-1 data-parallel groups send identical messages at
+            // the same virtual time; `dp_copies` of them share this pipe,
+            // so the tracked copy carries dp_copies x its solo work
+            // (multiplying by 1.0 is exact, preserving the solo-flow
+            // bit-equality guarantee whenever no replica shares the pipe).
+            remaining: edge.solo_time() * f64::from(edge.dp_copies),
+            version: 0,
+            done: false,
+        });
+        self.heap.push(Event { time: self.now[dev], kind: EvKind::XferStart { id } });
+    }
+
+    /// A flow enters its link at time `t`: settle in-flight progress, add
+    /// it to the share set, and re-project everyone's completions.
+    fn on_xfer_start(&mut self, id: usize, t: f64) {
+        let mut fresh = Vec::new();
+        let net = self.net.as_mut().expect("transfer event without a network");
+        let link = net.xfers[id].link;
+        net.settle(&link, t);
+        let ls = net.links.entry(link).or_default();
+        ls.last = t;
+        ls.active.push(id);
+        net.reproject(&link, t, &mut fresh);
+        self.heap.extend(fresh);
+    }
+
+    /// A flow's projected completion fires at time `t`. Stale projections
+    /// (version moved on, or already done) are ignored; a current one
+    /// removes the flow from its link, re-projects the remaining sharers,
+    /// and delivers the message.
+    fn on_xfer_done(&mut self, id: usize, version: u64, t: f64) {
+        let mut fresh = Vec::new();
+        let net = self.net.as_mut().expect("transfer event without a network");
+        let x = net.xfers[id];
+        if x.done || x.version != version {
+            return;
+        }
+        net.settle(&x.link, t);
+        net.xfers[id].done = true;
+        if let Some(ls) = net.links.get_mut(&x.link) {
+            ls.active.retain(|&i| i != id);
+        }
+        net.reproject(&x.link, t, &mut fresh);
+        self.heap.extend(fresh);
+        self.msgs.entry(x.key).or_default().push_back(t);
+        if let Some(waiter) = self.msg_waiters.remove(&x.key) {
+            self.wake(waiter, t);
         }
     }
 
@@ -314,7 +527,7 @@ impl<'a> Engine<'a> {
             .expect("state just inserted")
             .done = Some(done);
         for w in waiters {
-            self.heap.push(Event { time: done.max(self.now[w]), dev: w });
+            self.heap.push(Event { time: done.max(self.now[w]), kind: EvKind::Dev(w) });
         }
     }
 
@@ -388,8 +601,8 @@ impl<'a> Engine<'a> {
                         }
                     }
                 }
-                Instr::OptimStep { .. } => {
-                    self.now[dev] += self.costs.optim_time();
+                Instr::OptimStep { stage } => {
+                    self.now[dev] += self.costs.optim_time(stage);
                 }
             }
             self.ix[dev] += 1;
@@ -400,10 +613,14 @@ impl<'a> Engine<'a> {
     fn run(mut self) -> Result<MultiIterTrace, SimError> {
         let d = self.s.n_devices();
         for dev in 0..d {
-            self.heap.push(Event { time: 0.0, dev });
+            self.heap.push(Event { time: 0.0, kind: EvKind::Dev(dev) });
         }
         while let Some(ev) = self.heap.pop() {
-            self.run_device(ev.dev);
+            match ev.kind {
+                EvKind::Dev(dev) => self.run_device(dev),
+                EvKind::XferStart { id } => self.on_xfer_start(id, ev.time),
+                EvKind::XferDone { id, version } => self.on_xfer_done(id, version, ev.time),
+            }
         }
         if self.remaining > 0 {
             let stuck = (0..d)
@@ -420,9 +637,21 @@ impl<'a> Engine<'a> {
 }
 
 /// Run the instruction streams to completion in virtual time (one
-/// iteration).
+/// iteration, fixed-duration transfers).
 pub fn simulate_schedule(s: &Schedule, costs: &CostModel) -> Result<SimTrace, SimError> {
-    let t = simulate_schedule_iters(s, costs, 1)?;
+    simulate_schedule_with(s, costs, false)
+}
+
+/// Single-iteration run with an explicit contention mode: `contention`
+/// true prices concurrent transfers on one physical link at a fair share
+/// of its bandwidth (see the module docs), false reproduces the
+/// fixed-duration engine bit for bit.
+pub fn simulate_schedule_with(
+    s: &Schedule,
+    costs: &CostModel,
+    contention: bool,
+) -> Result<SimTrace, SimError> {
+    let t = simulate_schedule_iters_with(s, costs, 1, contention)?;
     Ok(SimTrace { devices: t.devices, makespan: t.makespan })
 }
 
@@ -430,18 +659,29 @@ pub fn simulate_schedule(s: &Schedule, costs: &CostModel) -> Result<SimTrace, Si
 /// barrier between iterations (devices free-run into the next iteration,
 /// like the threaded runtime). Message tags and collective rounds are
 /// disambiguated across iterations by FIFO pairing and (stage, round)
-/// keying respectively.
+/// keying respectively. Fixed-duration transfers.
 pub fn simulate_schedule_iters(
     s: &Schedule,
     costs: &CostModel,
     iters: usize,
+) -> Result<MultiIterTrace, SimError> {
+    simulate_schedule_iters_with(s, costs, iters, false)
+}
+
+/// Multi-iteration run with an explicit contention mode (see
+/// [`simulate_schedule_with`]).
+pub fn simulate_schedule_iters_with(
+    s: &Schedule,
+    costs: &CostModel,
+    iters: usize,
+    contention: bool,
 ) -> Result<MultiIterTrace, SimError> {
     assert!(iters >= 1, "need at least one iteration");
     assert!(
         !s.device_ops.is_empty(),
         "schedule has no device_ops; run comm_pass first"
     );
-    Engine::new(s, costs, iters).run()
+    Engine::new(s, costs, iters, contention).run()
 }
 
 /// The pre-event-queue executor: an O(D × total_ops) round-robin spin loop,
@@ -561,8 +801,8 @@ pub fn simulate_schedule_reference(
                         }
                         None => advance = false,
                     },
-                    Instr::OptimStep { .. } => {
-                        now[dev] += costs.optim_time();
+                    Instr::OptimStep { stage } => {
+                        now[dev] += costs.optim_time(stage);
                     }
                 }
                 if !advance {
@@ -730,6 +970,38 @@ mod tests {
         assert!(t.devices[1].finish >= 2.0 * LAUNCH + c.p2p_time(0, 1));
         let e = simulate_schedule_reference(&s, &c).unwrap_err();
         assert!(!e.stuck.is_empty(), "reference should drop the duplicate and deadlock");
+    }
+
+    #[test]
+    fn solo_transfer_contended_matches_fixed_duration_bitwise() {
+        // A flow that never shares its link must complete at exactly the
+        // fixed-duration arrival — the degradation guarantee the
+        // differential suite relies on. (The bandwidth-*sharing* scenarios
+        // live in rust/tests/contention.rs.)
+        let placement = placement_for(ScheduleKind::Dapple, 4, 1);
+        let cfg = ScheduleConfig::new(ScheduleKind::Dapple, 4, 4);
+        let s = Schedule {
+            cfg,
+            placement,
+            compute_order: vec![Vec::new(); 4],
+            device_ops: vec![
+                vec![Instr::SendAct { to: 2, pipe: 0, stage: 0, mb: 0 }],
+                Vec::new(),
+                vec![Instr::RecvAct { from: 0, pipe: 0, stage: 1, mb: 0 }],
+                Vec::new(),
+            ],
+            pipe_of_mb: vec![0, 0, 0, 0],
+        };
+        let p = ParallelConfig::new(ScheduleKind::Dapple, 1, 4, 4, 4);
+        let cluster = ClusterConfig { n_devices: 4, devices_per_node: 2, ..Default::default() };
+        let c = CostModel::new(&BERT_64, &p, &cluster);
+        let off = simulate_schedule(&s, &c).unwrap();
+        let on = simulate_schedule_with(&s, &c, true).unwrap();
+        assert_eq!(on.makespan.to_bits(), off.makespan.to_bits());
+        for (a, b) in on.devices.iter().zip(&off.devices) {
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+            assert_eq!(a.recv_blocked.to_bits(), b.recv_blocked.to_bits());
+        }
     }
 
     #[test]

@@ -87,8 +87,9 @@ fn evaluate(
     model: &ModelConfig,
     cluster: &ClusterConfig,
     parallel: ParallelConfig,
+    contention: bool,
 ) -> Option<GridPoint> {
-    let cfg = SimConfig { model: *model, parallel, cluster: *cluster };
+    let cfg = SimConfig::new(*model, parallel, *cluster).with_contention(contention);
     let result = simulate(&cfg).ok()?;
     if !result.fits(cluster) {
         return None;
@@ -121,6 +122,21 @@ pub fn grid_search(
     n_devices: usize,
     minibatch: usize,
 ) -> Result<Vec<GridPoint>> {
+    grid_search_opts(kind, model, space, n_devices, minibatch, false)
+}
+
+/// [`grid_search`] with an explicit contention mode: `contention` true
+/// prices every candidate under the flow-level link-sharing model (see
+/// `sim::engine`), ranking layouts by their contended throughput — the
+/// fidelity the Fig 6 mapping tradeoffs need.
+pub fn grid_search_opts(
+    kind: ScheduleKind,
+    model: &ModelConfig,
+    space: &GridSpace,
+    n_devices: usize,
+    minibatch: usize,
+    contention: bool,
+) -> Result<Vec<GridPoint>> {
     let cands = candidates(kind, space, n_devices, minibatch);
     let cluster = ClusterConfig::paper_testbed(n_devices);
     let threads = std::thread::available_parallelism()
@@ -128,8 +144,10 @@ pub fn grid_search(
         .unwrap_or(1)
         .min(cands.len().max(1));
     if threads <= 1 || cands.len() <= 1 {
-        let mut points: Vec<GridPoint> =
-            cands.into_iter().filter_map(|p| evaluate(model, &cluster, p)).collect();
+        let mut points: Vec<GridPoint> = cands
+            .into_iter()
+            .filter_map(|p| evaluate(model, &cluster, p, contention))
+            .collect();
         sort_points(&mut points);
         return Ok(points);
     }
@@ -148,7 +166,7 @@ pub fn grid_search(
                     if i >= cands.len() {
                         break;
                     }
-                    if let Some(point) = evaluate(model, cluster, cands[i]) {
+                    if let Some(point) = evaluate(model, cluster, cands[i], contention) {
                         found.push((i, point));
                     }
                 }
@@ -182,7 +200,7 @@ pub fn grid_search_serial(
     let cluster = ClusterConfig::paper_testbed(n_devices);
     let mut points: Vec<GridPoint> = candidates(kind, space, n_devices, minibatch)
         .into_iter()
-        .filter_map(|p| evaluate(model, &cluster, p))
+        .filter_map(|p| evaluate(model, &cluster, p, false))
         .collect();
     sort_points(&mut points);
     Ok(points)
@@ -224,6 +242,38 @@ mod tests {
             grid_search(ScheduleKind::BitPipe, &BERT_64, &GridSpace::bert64(), 32, 128).unwrap();
         let best = &pts[0];
         assert_eq!(best.parallel.d, 8, "best D {} (throughput {})", best.parallel.d, best.result.throughput);
+    }
+
+    #[test]
+    fn contended_sweep_covers_same_points_never_faster() {
+        // Contention re-prices every layout but drops none (memory and
+        // feasibility are unchanged), and no layout gets faster.
+        let off = grid_search(ScheduleKind::BitPipe, &BERT_64, &GridSpace::bert64(), 16, 64)
+            .unwrap();
+        let on = grid_search_opts(
+            ScheduleKind::BitPipe,
+            &BERT_64,
+            &GridSpace::bert64(),
+            16,
+            64,
+            true,
+        )
+        .unwrap();
+        assert_eq!(off.len(), on.len());
+        assert!(!off.is_empty());
+        for a in &on {
+            let key = (a.parallel.w, a.parallel.d, a.parallel.b, a.parallel.n);
+            let b = off
+                .iter()
+                .find(|p| (p.parallel.w, p.parallel.d, p.parallel.b, p.parallel.n) == key)
+                .expect("point missing from uncontended sweep");
+            assert!(
+                a.result.throughput <= b.result.throughput + 1e-9,
+                "{key:?}: contended {} > uncontended {}",
+                a.result.throughput,
+                b.result.throughput
+            );
+        }
     }
 
     #[test]

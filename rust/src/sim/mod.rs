@@ -13,18 +13,36 @@
 //! size (W replicas x bidirectional twins) and link class (paper Fig 6
 //! mapping policies). P2P never crosses groups; iteration time is
 //! identical across groups.
+//!
+//! # Link contention
+//!
+//! By default transfers are fixed-duration (a link carries any number of
+//! concurrent messages at full bandwidth) — fast, and bit-stable against
+//! the legacy reference executor. Setting [`SimConfig::contention`] (CLI:
+//! `bitpipe simulate --contention`) switches the engine to a flow-level
+//! fair-share model: concurrent transfers on the same directed physical
+//! pipe ([`crate::config::LinkId`] — per-device-pair NVLink paths,
+//! per-node-pair Infiniband pipes) split its bandwidth, and in-flight
+//! completion times are re-projected whenever a flow starts or ends. This
+//! prices exactly the traffic BitPipe's V-shaped twin pipes concentrate on
+//! the inter-node links at the fold, where the fixed-duration model
+//! systematically underestimates communication time. Contended makespans
+//! are deterministic and never below the uncontended makespan for the
+//! same schedule (a solo flow reproduces the fixed-duration arrival bit
+//! for bit). See `sim::engine`'s module docs for the mechanics.
 
 mod cost;
 mod engine;
 mod gridsearch;
 mod memory;
 
-pub use cost::CostModel;
+pub use cost::{CostModel, P2pEdge};
 pub use engine::{
-    simulate_schedule, simulate_schedule_iters, simulate_schedule_reference, DeviceTrace,
-    MultiIterTrace, SimError, SimTrace,
+    simulate_schedule, simulate_schedule_iters, simulate_schedule_iters_with,
+    simulate_schedule_reference, simulate_schedule_with, DeviceTrace, MultiIterTrace, SimError,
+    SimTrace,
 };
-pub use gridsearch::{grid_search, grid_search_serial, GridPoint, GridSpace};
+pub use gridsearch::{grid_search, grid_search_opts, grid_search_serial, GridPoint, GridSpace};
 pub use memory::{memory_footprint, MemoryFootprint};
 
 use crate::config::{ClusterConfig, ModelConfig, ParallelConfig};
@@ -38,6 +56,23 @@ pub struct SimConfig {
     pub model: ModelConfig,
     pub parallel: ParallelConfig,
     pub cluster: ClusterConfig,
+    /// Price link contention (flow-level fair-share bandwidth sharing).
+    /// Off by default: the fixed-duration engine is faster and bit-stable
+    /// against `simulate_schedule_reference`.
+    pub contention: bool,
+}
+
+impl SimConfig {
+    /// Fixed-duration (no-contention) configuration.
+    pub fn new(model: ModelConfig, parallel: ParallelConfig, cluster: ClusterConfig) -> Self {
+        SimConfig { model, parallel, cluster, contention: false }
+    }
+
+    /// Toggle the flow-level link-contention model.
+    pub fn with_contention(mut self, contention: bool) -> Self {
+        self.contention = contention;
+        self
+    }
 }
 
 /// Simulation output for one training iteration.
@@ -78,7 +113,7 @@ pub fn simulate(cfg: &SimConfig) -> Result<SimResult> {
     cfg.model.validate()?;
     let sched: Schedule = schedule::build(&cfg.parallel.schedule())?;
     let costs = CostModel::new(&cfg.model, &cfg.parallel, &cfg.cluster);
-    let trace = simulate_schedule(&sched, &costs)?;
+    let trace = simulate_schedule_with(&sched, &costs, cfg.contention)?;
     let memory = memory_footprint(&sched, &cfg.model, &cfg.parallel);
 
     let iter_time = trace.makespan;
@@ -141,7 +176,7 @@ pub fn simulate_iters(cfg: &SimConfig, iters: usize, warmup: usize) -> Result<Mu
     cfg.model.validate()?;
     let sched: Schedule = schedule::build(&cfg.parallel.schedule())?;
     let costs = CostModel::new(&cfg.model, &cfg.parallel, &cfg.cluster);
-    let trace = simulate_schedule_iters(&sched, &costs, iters)?;
+    let trace = simulate_schedule_iters_with(&sched, &costs, iters, cfg.contention)?;
     let iter_times = trace.iter_times();
     let steady = IterStats::from_secs(&iter_times[warmup..]);
     let steady_throughput = steady.throughput(cfg.parallel.minibatch_size());
@@ -162,11 +197,11 @@ mod tests {
     use crate::schedule::ScheduleKind;
 
     fn sim(kind: ScheduleKind, w: usize, d: usize, b: usize, n: usize) -> SimResult {
-        let cfg = SimConfig {
-            model: BERT_64,
-            parallel: ParallelConfig::new(kind, w, d, b, n),
-            cluster: ClusterConfig::paper_testbed(w * d),
-        };
+        let cfg = SimConfig::new(
+            BERT_64,
+            ParallelConfig::new(kind, w, d, b, n),
+            ClusterConfig::paper_testbed(w * d),
+        );
         simulate(&cfg).unwrap()
     }
 
@@ -197,11 +232,11 @@ mod tests {
 
     #[test]
     fn gpt96_runs_and_orders_sanely() {
-        let cfg = SimConfig {
-            model: GPT_96,
-            parallel: ParallelConfig::new(ScheduleKind::BitPipe, 1, 8, 1, 8),
-            cluster: ClusterConfig::paper_testbed(8),
-        };
+        let cfg = SimConfig::new(
+            GPT_96,
+            ParallelConfig::new(ScheduleKind::BitPipe, 1, 8, 1, 8),
+            ClusterConfig::paper_testbed(8),
+        );
         let bit = simulate(&cfg).unwrap();
         let cfg2 = SimConfig {
             parallel: ParallelConfig::new(ScheduleKind::Dapple, 1, 8, 1, 8),
@@ -223,7 +258,7 @@ mod tests {
         let mut cluster = ClusterConfig::single_node(8);
         cluster.nvlink_bw = 1e15; // effectively free comm
         cluster.nvlink_lat = 0.0;
-        let r = simulate(&SimConfig { model, parallel, cluster }).unwrap();
+        let r = simulate(&SimConfig::new(model, parallel, cluster)).unwrap();
         let want = bubble_ratio_formula(ScheduleKind::Dapple, 8, 8, true);
         assert!(
             (r.bubble_fraction - want).abs() < 0.03,
@@ -240,12 +275,34 @@ mod tests {
     }
 
     #[test]
+    fn contention_mode_never_speeds_up_an_iteration() {
+        for kind in [ScheduleKind::Dapple, ScheduleKind::BitPipe] {
+            let cfg = SimConfig::new(
+                BERT_64,
+                ParallelConfig::new(kind, 2, 8, 4, 16),
+                ClusterConfig::paper_testbed(16),
+            );
+            let off = simulate(&cfg).unwrap();
+            let on = simulate(&cfg.with_contention(true)).unwrap();
+            assert!(
+                on.iter_time >= off.iter_time - 1e-12,
+                "{kind}: contended {} < uncontended {}",
+                on.iter_time,
+                off.iter_time
+            );
+            // Deterministic: a second contended run is bit-identical.
+            let on2 = simulate(&cfg.with_contention(true)).unwrap();
+            assert_eq!(on.iter_time.to_bits(), on2.iter_time.to_bits());
+        }
+    }
+
+    #[test]
     fn multi_iteration_steady_state() {
-        let cfg = SimConfig {
-            model: BERT_64,
-            parallel: ParallelConfig::new(ScheduleKind::BitPipe, 1, 8, 4, 8),
-            cluster: ClusterConfig::paper_testbed(8),
-        };
+        let cfg = SimConfig::new(
+            BERT_64,
+            ParallelConfig::new(ScheduleKind::BitPipe, 1, 8, 4, 8),
+            ClusterConfig::paper_testbed(8),
+        );
         let one = simulate(&cfg).unwrap();
         let r = simulate_iters(&cfg, 4, 1).unwrap();
         assert_eq!(r.iter_times.len(), 4);
@@ -266,11 +323,11 @@ mod tests {
 
     #[test]
     fn multi_iteration_rejects_bad_warmup() {
-        let cfg = SimConfig {
-            model: BERT_64,
-            parallel: ParallelConfig::new(ScheduleKind::Dapple, 1, 4, 4, 4),
-            cluster: ClusterConfig::paper_testbed(4),
-        };
+        let cfg = SimConfig::new(
+            BERT_64,
+            ParallelConfig::new(ScheduleKind::Dapple, 1, 4, 4, 4),
+            ClusterConfig::paper_testbed(4),
+        );
         assert!(simulate_iters(&cfg, 2, 2).is_err());
         assert!(simulate_iters(&cfg, 0, 0).is_err());
     }

@@ -78,6 +78,10 @@ pub struct TrainConfig {
     pub save_to: Option<PathBuf>,
     /// Resume parameters + optimizer state from this checkpoint.
     pub resume_from: Option<PathBuf>,
+    /// P2P receive timeout: how long a worker waits on the fabric before a
+    /// schedule deadlock is reported as an error. Tests shrink this to a
+    /// few seconds so a deadlock fails fast instead of hanging 30 s.
+    pub recv_timeout: std::time::Duration,
 }
 
 impl TrainConfig {
@@ -97,6 +101,7 @@ impl TrainConfig {
             log_every: 0,
             save_to: None,
             resume_from: None,
+            recv_timeout: crate::comm::RECV_TIMEOUT,
         }
     }
 
@@ -186,7 +191,7 @@ pub fn run(cfg: &TrainConfig) -> Result<TrainReport> {
         }
     };
 
-    let fabric = Fabric::new(cfg.d);
+    let fabric = Fabric::with_timeout(cfg.d, cfg.recv_timeout);
     let counters = Arc::new(Counters::new());
     let losses: Arc<Mutex<Vec<(usize, f32)>>> = Arc::new(Mutex::new(Vec::new()));
     let iter_times: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));

@@ -22,6 +22,8 @@ fn base_cfg(kind: ScheduleKind, d: usize, n: usize, steps: usize) -> Option<Trai
     let mut cfg = TrainConfig::new(dir, kind, d, n);
     cfg.steps = steps;
     cfg.dataset = DatasetKind::Synthetic;
+    // Fail fast on schedule deadlocks: seconds, not the default 30 s.
+    cfg.recv_timeout = std::time::Duration::from_secs(5);
     Some(cfg)
 }
 

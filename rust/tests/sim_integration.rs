@@ -8,7 +8,7 @@ use bitpipe::sim::{grid_search, simulate, GridSpace, SimConfig};
 fn thr(kind: ScheduleKind, w: usize, d: usize, b: usize, n: usize, gpus: usize) -> f64 {
     let parallel = ParallelConfig::new(kind, w, d, b, n);
     let cluster = ClusterConfig::paper_testbed(gpus);
-    simulate(&SimConfig { model: BERT_64, parallel, cluster }).unwrap().throughput
+    simulate(&SimConfig::new(BERT_64, parallel, cluster)).unwrap().throughput
 }
 
 #[test]
@@ -69,7 +69,7 @@ fn fig8_bitpipe_memory_narrowest_spread() {
     let spread = |kind: ScheduleKind| {
         let parallel = ParallelConfig::new(kind, 1, 8, 4, 8);
         let cluster = ClusterConfig::paper_testbed(8);
-        simulate(&SimConfig { model: BERT_64, parallel, cluster }).unwrap().memory.spread()
+        simulate(&SimConfig::new(BERT_64, parallel, cluster)).unwrap().memory.spread()
     };
     let bit = spread(ScheduleKind::BitPipe);
     for kind in [ScheduleKind::Dapple, ScheduleKind::Interleaved] {
@@ -101,12 +101,8 @@ fn gpt96_fits_and_bitpipe_wins() {
     // GPT-96 (11B) at D=8 B=1 must fit in 80 GB and BitPipe must lead.
     let cluster = ClusterConfig::paper_testbed(8);
     let mk = |kind| {
-        simulate(&SimConfig {
-            model: GPT_96,
-            parallel: ParallelConfig::new(kind, 1, 8, 1, 8),
-            cluster,
-        })
-        .unwrap()
+        simulate(&SimConfig::new(GPT_96, ParallelConfig::new(kind, 1, 8, 1, 8), cluster))
+            .unwrap()
     };
     let bit = mk(ScheduleKind::BitPipe);
     assert!(bit.fits(&cluster), "GPT-96 OOM: {} GiB", bit.peak_memory() >> 30);
@@ -123,7 +119,7 @@ fn table5_ablation_ordering() {
         let mut parallel = ParallelConfig::new(kind, 1, 8, 4, 16);
         parallel.sync = sync;
         let cluster = ClusterConfig::single_node(8);
-        simulate(&SimConfig { model: BERT_64, parallel, cluster }).unwrap().throughput
+        simulate(&SimConfig::new(BERT_64, parallel, cluster)).unwrap().throughput
     };
     let full = run(ScheduleKind::BitPipe, SyncPolicy::Eager);
     let no_v = run(ScheduleKind::BitPipeNoV, SyncPolicy::Eager);
