@@ -5,7 +5,7 @@
 use super::EvalOutput;
 use crate::config::{ClusterConfig, ParallelConfig, BERT_64, GPT_96};
 use crate::schedule::{self, analysis, Costs, ScheduleConfig, ScheduleKind, SyncPolicy};
-use crate::sim::{self, grid_search, GridSpace, SimConfig};
+use crate::sim::{self, GridSpace, SimConfig};
 use crate::util::Table;
 use anyhow::Result;
 use std::fmt::Write as _;
@@ -93,6 +93,10 @@ pub fn table6() -> Result<EvalOutput> {
 /// Table 4: grid search over (W, D, B) per approach and GPU count.
 pub fn table4() -> Result<EvalOutput> {
     let mut body = String::new();
+    // One compile-once/re-cost-many cache across all 24 sweeps: the same
+    // (kind, D, N) structures recur across GPU counts and models, so later
+    // sweeps skip both schedule generation and DAG lowering.
+    let mut cache = sim::DagCache::new();
     for (model, space, bhat_per8) in [
         (&BERT_64, GridSpace::bert64(), 32usize),
         (&GPT_96, GridSpace::gpt96(), 8usize),
@@ -108,7 +112,8 @@ pub fn table4() -> Result<EvalOutput> {
                 ScheduleKind::MixPipe,
                 ScheduleKind::BitPipe,
             ] {
-                let points = grid_search(kind, model, &space, gpus, minibatch)?;
+                let points =
+                    sim::grid_search_cached(kind, model, &space, gpus, minibatch, &mut cache)?;
                 if let Some(best) = points.first() {
                     t.row(vec![
                         gpus.to_string(),

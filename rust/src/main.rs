@@ -6,6 +6,7 @@
 //! bitpipe simulate   --kind bitpipe --model bert-64 --w 1 --d 8 --b 4 --n 8
 //!                    [--gpus P] [--mapping replicas|pipes] [--single-node]
 //!                    [--iters N [--warmup K]] [--contention]
+//!                    [--engine auto|event|dag]
 //! bitpipe eval-paper [--only table2,fig9,...] (default: all)
 //! bitpipe train      --artifacts DIR --kind bitpipe --d 4 --n 8 --steps 50
 //!                    [--dataset synthetic|corpus] [--lr 1e-3] [--seed 42]
@@ -20,7 +21,7 @@
 use anyhow::{bail, Context, Result};
 use bitpipe::config::{ClusterConfig, MappingPolicy, ModelConfig, ParallelConfig};
 use bitpipe::schedule::{self, timeline, Costs, ScheduleConfig, ScheduleKind, SyncPolicy};
-use bitpipe::sim::{self, SimConfig};
+use bitpipe::sim::{self, Engine, SimConfig};
 use bitpipe::train::{self, DatasetKind, TrainConfig};
 use std::collections::HashMap;
 
@@ -183,14 +184,27 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         };
     }
     let contention = flags.contains_key("contention");
+    let engine = match get(flags, "engine").unwrap_or("auto") {
+        "auto" => Engine::Auto,
+        "event" => Engine::Event,
+        "dag" => Engine::Dag,
+        other => bail!("--engine must be auto|event|dag, got {other:?}"),
+    };
 
-    let cfg = SimConfig::new(model, parallel, cluster).with_contention(contention);
+    let cfg = SimConfig::new(model, parallel, cluster)
+        .with_contention(contention)
+        .with_engine(engine);
     println!(
-        "model={} kind={} W={w} D={d} B={b} N={n} (mini-batch {}){}",
+        "model={} kind={} W={w} D={d} B={b} N={n} (mini-batch {}){}{}",
         model.name,
         kind,
         parallel.minibatch_size(),
         if contention { " [link contention]" } else { "" },
+        match engine {
+            Engine::Auto => "",
+            Engine::Event => " [event engine]",
+            Engine::Dag => " [dag engine]",
+        },
     );
 
     let iters = get_usize(flags, "iters", 1)?;

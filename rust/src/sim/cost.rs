@@ -48,6 +48,54 @@ impl P2pEdge {
     }
 }
 
+/// The (W, D, cluster)-dependent part of the P2P edge tables — link
+/// classes, physical pipe identities, and data-parallel copy counts —
+/// which is independent of the model and of B. Building it walks the
+/// W x D² physical-device mapping, the most expensive piece of
+/// [`CostModel`] construction; `grid_search` hoists one instance per
+/// (W, D) and re-uses it across every B candidate.
+#[derive(Debug, Clone)]
+pub struct LinkTopology {
+    w: usize,
+    d: usize,
+    /// Cluster fingerprint (device count, node width, mapping) — the
+    /// inputs the pipe identities actually depend on — so a topology
+    /// cannot silently be reused against a different cluster.
+    cluster_key: (usize, usize, MappingPolicy),
+    /// Per directed pipeline-device pair `[a * d + b]`.
+    entries: Vec<(LinkKind, LinkId, u32)>,
+}
+
+impl LinkTopology {
+    fn cluster_key(cluster: &ClusterConfig) -> (usize, usize, MappingPolicy) {
+        (cluster.n_devices, cluster.devices_per_node, cluster.mapping)
+    }
+
+    /// Enumerate the physical pipes of one simulated pipeline group of
+    /// depth `d` among `w` data-parallel replicas on `cluster`.
+    pub fn new(cluster: &ClusterConfig, w: usize, d: usize) -> Self {
+        let w_groups = w.max(1);
+        let physical =
+            |g: usize, dev: usize| cluster.physical_device(cluster.mapping, g, dev, w_groups, d);
+        let mut entries = Vec::with_capacity(d * d);
+        for a in 0..d {
+            for b in 0..d {
+                let (pa, pb) = (physical(0, a), physical(0, b));
+                let kind = cluster.link(pa, pb);
+                let link = cluster.link_id(pa, pb);
+                // Every pipeline group sends this message at the same
+                // virtual time; count the groups whose copy shares this
+                // physical pipe (always >= 1: group 0 itself).
+                let dp_copies = (0..w_groups)
+                    .filter(|&g| cluster.link_id(physical(g, a), physical(g, b)) == link)
+                    .count() as u32;
+                entries.push((kind, link, dp_copies));
+            }
+        }
+        LinkTopology { w: w_groups, d, cluster_key: Self::cluster_key(cluster), entries }
+    }
+}
+
 /// Per-instruction costs in seconds for one simulated pipeline group.
 #[derive(Debug, Clone)]
 pub struct CostModel {
@@ -94,6 +142,31 @@ pub struct CostModel {
 
 impl CostModel {
     pub fn new(model: &ModelConfig, parallel: &ParallelConfig, cluster: &ClusterConfig) -> Self {
+        let topo = LinkTopology::new(cluster, parallel.w, parallel.d);
+        Self::with_topology(model, parallel, cluster, &topo)
+    }
+
+    /// [`CostModel::new`] with the (W, D, cluster)-dependent link tables
+    /// precomputed — bit-identical output, used by `grid_search` to share
+    /// one [`LinkTopology`] across all B candidates of a (W, D) point.
+    /// `topo` must have been built for the same `cluster`, `parallel.w`
+    /// and `parallel.d`.
+    pub fn with_topology(
+        model: &ModelConfig,
+        parallel: &ParallelConfig,
+        cluster: &ClusterConfig,
+        topo: &LinkTopology,
+    ) -> Self {
+        assert_eq!(
+            (topo.w, topo.d),
+            (parallel.w.max(1), parallel.d),
+            "link topology built for a different (W, D)"
+        );
+        assert_eq!(
+            topo.cluster_key,
+            LinkTopology::cluster_key(cluster),
+            "link topology built for a different cluster"
+        );
         let chunks = parallel.v * parallel.d;
         // Layers per chunk (at least one; tiny models on deep pipelines
         // saturate at 1 layer per chunk).
@@ -146,34 +219,19 @@ impl CostModel {
         };
         // Precompute the per-instruction tables once; the event-queue
         // engine and the grid-search sweep hit these on every message.
-        let d = cm.d;
-        let w_groups = cm.w.max(1);
-        let mut edges = Vec::with_capacity(d * d);
-        for a in 0..d {
-            for b in 0..d {
-                let (pa, pb) = (cm.physical(a), cm.physical(b));
-                let kind = cm.cluster.link(pa, pb);
-                let link = cm.cluster.link_id(pa, pb);
-                // Every pipeline group sends this message at the same
-                // virtual time; count the groups whose copy shares this
-                // physical pipe (always >= 1: group 0 itself).
-                let dp_copies = (0..w_groups)
-                    .filter(|&g| {
-                        let ga = cm.cluster.physical_device(cm.cluster.mapping, g, a, w_groups, d);
-                        let gb = cm.cluster.physical_device(cm.cluster.mapping, g, b, w_groups, d);
-                        cm.cluster.link_id(ga, gb) == link
-                    })
-                    .count() as u32;
-                edges.push(P2pEdge {
-                    bytes: cm.msg_bytes,
-                    lat: cm.cluster.lat(kind),
-                    bw: cm.cluster.bw(kind),
-                    link,
-                    dp_copies,
-                });
-            }
-        }
-        cm.edges = edges;
+        // Link identities and DP copy counts come from the hoisted
+        // topology; only the payload/lat/bw pricing is (model, B)-bound.
+        cm.edges = topo
+            .entries
+            .iter()
+            .map(|&(kind, link, dp_copies)| P2pEdge {
+                bytes: cm.msg_bytes,
+                lat: cm.cluster.lat(kind),
+                bw: cm.cluster.bw(kind),
+                link,
+                dp_copies,
+            })
+            .collect();
         cm.local_copy = cm.cluster.lat(LinkKind::Local)
             + cm.msg_bytes as f64 / cm.cluster.bw(LinkKind::Local);
         // Heterogeneous per-stage gradient volumes: the entry chunk carries
@@ -383,6 +441,35 @@ mod tests {
         for a in 0..8 {
             for b in 0..8 {
                 assert_eq!(c1.p2p_edge(a, b).dp_copies, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn hoisted_topology_is_bit_identical() {
+        // grid_search shares one LinkTopology across all B candidates of a
+        // (W, D) point; the resulting models must match ::new exactly.
+        let cluster = ClusterConfig::paper_testbed(16);
+        let topo = LinkTopology::new(&cluster, 2, 8);
+        for b in [1usize, 2, 4, 8] {
+            let p = ParallelConfig::new(ScheduleKind::BitPipe, 2, 8, b, 8);
+            let fresh = CostModel::new(&BERT_64, &p, &cluster);
+            let hoisted = CostModel::with_topology(&BERT_64, &p, &cluster, &topo);
+            assert_eq!(fresh.chunk_fwd.to_bits(), hoisted.chunk_fwd.to_bits());
+            for a in 0..8 {
+                for c in 0..8 {
+                    let (x, y) = (fresh.p2p_edge(a, c), hoisted.p2p_edge(a, c));
+                    assert_eq!(x.link, y.link);
+                    assert_eq!(x.dp_copies, y.dp_copies);
+                    assert_eq!(x.solo_time().to_bits(), y.solo_time().to_bits());
+                }
+            }
+            for st in 0..16 {
+                assert_eq!(
+                    fresh.allreduce_time(st).to_bits(),
+                    hoisted.allreduce_time(st).to_bits()
+                );
+                assert_eq!(fresh.optim_time(st).to_bits(), hoisted.optim_time(st).to_bits());
             }
         }
     }

@@ -1,0 +1,821 @@
+//! Schedule compiler: lowers a [`Schedule`] into a flat, arena-indexed
+//! dependence DAG evaluated by a weighted longest-path pass — the fast
+//! uncontended backend behind [`crate::sim::Engine::Dag`].
+//!
+//! # Structure / weight split
+//!
+//! The compiled graph separates what depends on the *schedule* from what
+//! depends on the *cost model*:
+//!
+//! * **Structure** — nodes (one per instruction, plus one synthetic
+//!   barrier node per collective round), edges (intra-device program
+//!   order, send→recv message edges paired FIFO per tag, member-start →
+//!   barrier → wait edges, and per-device comm-engine chains between
+//!   successive barriers), and one precomputed topological order. This
+//!   depends only on the schedule shape (kind, D, N, v, sync,
+//!   early-forward) — never on W, B, or the cluster.
+//! * **Weights** — a small table ([`DagWeights`], `3 + D² + 2·stages`
+//!   entries) holding per-class costs read from a [`CostModel`]. Each node
+//!   carries a class index into this table.
+//!
+//! `grid_search` exploits the split with a compile-once/re-cost-many
+//! cache: grid points (and whole sweeps) sharing a structure borrow the
+//! same [`CompiledDag`] and pay only a table rebuild plus one linear
+//! evaluation pass — no `BinaryHeap`, no hashing, no per-message
+//! allocation.
+//!
+//! # Exact equivalence with the event engine
+//!
+//! With `contention: false` the event engine is deterministic dataflow:
+//! every instruction's completion time is a max/+ function of its
+//! predecessors' times. Evaluating the nodes in *any* topological order
+//! with the same primitive operations therefore reproduces the engine's
+//! virtual times **bit for bit** (`f64` max is exact; the per-device add
+//! chains are replayed in program order). `rust/tests/dag_equiv.rs` pins
+//! this across every schedule family, single- and multi-iteration.
+//!
+//! Collective serialization is the one place the engine's semantics are
+//! order-sensitive: concurrent collectives sharing a device queue on its
+//! comm engine in the order they are *priced*. For `comm_pass`-generated
+//! streams that order coincides with per-device program order of the
+//! `AllReduceStart`s (both existing executors agree on it — the
+//! `engine_equiv` differential suite would catch a divergence), so the
+//! compiler serializes barriers with per-device chain edges. If a
+//! hand-built schedule orders starts inconsistently across devices the
+//! chain edges form a cycle; the compiler detects this and returns
+//! [`DagUnsupported`] so callers can fall back to the event engine
+//! instead of reporting a false deadlock.
+//!
+//! # Multi-iteration unrolling
+//!
+//! `k` iterations evaluate as `k` passes over the *same* node arena: all
+//! cross-iteration dependencies funnel through carried per-device state
+//! (the device clock and the comm-engine chain), because message tags
+//! pair within their own iteration and collective rounds restart each
+//! iteration. This requires every message tag to have equal send/recv
+//! counts per iteration (true for all generated schedules);
+//! [`CompiledDag::multi_iter_safe`] reports whether the precondition
+//! holds so callers can fall back otherwise.
+
+use super::cost::CostModel;
+use super::engine::{DeviceTrace, MultiIterTrace, SimError, LAUNCH};
+use crate::schedule::{Instr, Schedule};
+use std::fmt;
+
+/// Message key, identical to the event engine's FIFO tag:
+/// (from, to, is_grad, pipe, producer_stage, mb).
+type MsgKey = (usize, usize, bool, usize, usize, usize);
+
+/// The schedule's structure cannot be expressed as a static DAG (devices
+/// disagree on the serialization order of shared collectives). Fall back
+/// to the event engine; never produced for `comm_pass`-generated streams.
+#[derive(Debug)]
+pub struct DagUnsupported(pub String);
+
+impl fmt::Display for DagUnsupported {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "schedule not DAG-compilable: {}", self.0)
+    }
+}
+
+impl std::error::Error for DagUnsupported {}
+
+/// Node semantics; cost classes live in the parallel `wclass` array.
+#[derive(Debug, Clone, Copy)]
+enum NodeOp {
+    /// Forward/Backward: busy time, counted as compute.
+    Compute,
+    /// Local HBM copy: busy time, counted in `local_copies`.
+    LocalCopy,
+    /// Optimizer step: busy time.
+    Optim,
+    /// Async send: pay `LAUNCH`, deposit arrival into `msg` slot.
+    Send { msg: u32 },
+    /// Receive: clock joins the matched arrival slot.
+    Recv { msg: u32 },
+    /// Non-member `AllReduceStart`: pays `LAUNCH` only (engine parity).
+    Launch,
+    /// Member `AllReduceStart`: pays `LAUNCH`, records its launch time.
+    ArStart { coll: u32 },
+    /// Synthetic pricing node: fires once all member starts (and the
+    /// members' previous barriers) evaluated; computes the completion.
+    Barrier { coll: u32 },
+    /// `AllReduceWait`: clock joins the collective's completion.
+    ArWait { coll: u32 },
+}
+
+/// A schedule lowered to a dependence DAG: structure only — re-costable
+/// against any [`CostModel`] via [`CompiledDag::weights`].
+#[derive(Debug, Clone)]
+pub struct CompiledDag {
+    d: usize,
+    n_stages: usize,
+    /// Per-node device (real nodes only; barriers hold `u32::MAX`).
+    dev: Vec<u32>,
+    op: Vec<NodeOp>,
+    /// Per-node index into the weight table.
+    wclass: Vec<u32>,
+    /// Complete topological order (empty when `stuck` is non-empty).
+    topo: Vec<u32>,
+    /// Collective member devices, flattened (`members_off` delimits).
+    members: Vec<u32>,
+    members_off: Vec<u32>,
+    n_msgs: usize,
+    n_colls: usize,
+    n_wclasses: usize,
+    /// Stages of `OptimStep`s beyond `n_stages` (hand-built streams);
+    /// their costs append to the weight table after the fixed layout.
+    extra_optim: Vec<usize>,
+    /// Deadlocked (device, instruction index, instruction) triples — the
+    /// schedule can never complete; evaluation reports them as the event
+    /// engine would.
+    stuck: Vec<(usize, usize, String)>,
+    /// Every message tag has equal send/recv counts per iteration, the
+    /// precondition for multi-iteration unrolling.
+    multi_iter_safe: bool,
+    /// Chunks held per device (memory re-costing without the `Schedule`).
+    held_chunks: Vec<u32>,
+    /// Peak activation-stash depth per device, in chunk units.
+    peak_stash: Vec<u32>,
+}
+
+/// Weight-table layout offsets.
+const W_FWD: u32 = 0;
+const W_BWD: u32 = 1;
+const W_COPY: u32 = 2;
+const W_P2P: u32 = 3;
+
+/// Per-class costs for one (model, parallel, cluster) point, read by the
+/// evaluation pass. Rebuilding this table is the *entire* cost of
+/// re-pricing a borrowed [`CompiledDag`] for a new grid point.
+#[derive(Debug, Clone)]
+pub struct DagWeights {
+    tab: Vec<f64>,
+}
+
+/// Transient per-collective info gathered while walking the streams.
+struct CollBuild {
+    stage: usize,
+    starts: Vec<u32>,
+    waits: Vec<u32>,
+}
+
+/// Collective id for (stage, round), creating rounds densely on demand.
+fn coll_id(
+    colls: &mut Vec<CollBuild>,
+    coll_of: &mut [Vec<u32>],
+    stage: usize,
+    round: usize,
+) -> u32 {
+    while coll_of[stage].len() <= round {
+        coll_of[stage].push(colls.len() as u32);
+        colls.push(CollBuild { stage, starts: Vec::new(), waits: Vec::new() });
+    }
+    coll_of[stage][round]
+}
+
+impl CompiledDag {
+    /// Lower `s` into a dependence DAG. Errors only when the collective
+    /// serialization order is inconsistent across devices (impossible for
+    /// `comm_pass` output) — callers should fall back to the event
+    /// engine. Genuine deadlocks (an unmatched receive, a collective a
+    /// member never starts) compile fine and surface from
+    /// [`CompiledDag::evaluate`] exactly like the event engine.
+    pub fn compile(s: &Schedule) -> Result<CompiledDag, DagUnsupported> {
+        let d = s.n_devices();
+        assert!(!s.device_ops.is_empty(), "schedule has no device_ops; run comm_pass first");
+        let n_stages = s.placement.n_stages();
+        let groups: Vec<Vec<usize>> =
+            (0..n_stages).map(|st| s.placement.allreduce_group(st)).collect();
+
+        // Arena layout: device streams back to back, barriers appended.
+        let mut base = vec![0u32; d + 1];
+        for dv in 0..d {
+            base[dv + 1] = base[dv] + s.device_ops[dv].len() as u32;
+        }
+        let n_real = base[d] as usize;
+
+        let mut dev = vec![u32::MAX; n_real];
+        let mut op = Vec::with_capacity(n_real);
+        let mut wclass = vec![0u32; n_real];
+        let w_optim_base = W_P2P + (d * d) as u32;
+        let w_ar_base = w_optim_base + n_stages as u32;
+        let w_extra_base = w_ar_base + n_stages as u32;
+        let mut extra_optim: Vec<usize> = Vec::new();
+
+        let mut sends: Vec<(MsgKey, u32)> = Vec::new();
+        let mut recvs: Vec<(MsgKey, u32)> = Vec::new();
+        // Nodes that can never fire (entry-stage RecvAct, oversized-stage
+        // waits, unmatched receives): carry a permanent extra indegree.
+        let mut extra_indeg = vec![0u32; n_real];
+
+        let mut colls: Vec<CollBuild> = Vec::new();
+        let mut coll_of: Vec<Vec<u32>> = vec![Vec::new(); n_stages];
+        let mut start_round = vec![0u32; d * n_stages];
+        let mut wait_round = vec![0u32; d * n_stages];
+        // Per-device comm-engine chains: successive member-start colls.
+        let mut chain_prev: Vec<Option<u32>> = vec![None; d];
+        let mut chains: Vec<(u32, u32)> = Vec::new();
+
+        for dv in 0..d {
+            for (ix, ins) in s.device_ops[dv].iter().enumerate() {
+                let id = base[dv] + ix as u32;
+                dev[id as usize] = dv as u32;
+                let node = match *ins {
+                    Instr::Forward { .. } => {
+                        wclass[id as usize] = W_FWD;
+                        NodeOp::Compute
+                    }
+                    Instr::Backward { .. } => {
+                        wclass[id as usize] = W_BWD;
+                        NodeOp::Compute
+                    }
+                    Instr::LocalCopyAct { .. } | Instr::LocalCopyGrad { .. } => {
+                        wclass[id as usize] = W_COPY;
+                        NodeOp::LocalCopy
+                    }
+                    Instr::SendAct { to, pipe, stage, mb } => {
+                        sends.push(((dv, to, false, pipe, stage, mb), id));
+                        wclass[id as usize] = W_P2P + (dv * d + to) as u32;
+                        NodeOp::Send { msg: u32::MAX }
+                    }
+                    Instr::SendGrad { to, pipe, stage, mb } => {
+                        sends.push(((dv, to, true, pipe, stage, mb), id));
+                        wclass[id as usize] = W_P2P + (dv * d + to) as u32;
+                        NodeOp::Send { msg: u32::MAX }
+                    }
+                    Instr::RecvAct { from, pipe, stage, mb } => {
+                        // Producer tagged with stage-1; a stage-0 RecvAct
+                        // has no producer and parks forever (engine parity).
+                        match stage.checked_sub(1) {
+                            Some(p) => recvs.push(((from, dv, false, pipe, p, mb), id)),
+                            None => extra_indeg[id as usize] += 1,
+                        }
+                        NodeOp::Recv { msg: u32::MAX }
+                    }
+                    Instr::RecvGrad { from, pipe, stage, mb } => {
+                        recvs.push(((from, dv, true, pipe, stage + 1, mb), id));
+                        NodeOp::Recv { msg: u32::MAX }
+                    }
+                    Instr::AllReduceStart { stage } => {
+                        // Indexing mirrors the engine's `groups[stage]`
+                        // panic on out-of-range hand-built stages.
+                        let group = &groups[stage];
+                        let r = &mut start_round[dv * n_stages + stage];
+                        let round = *r as usize;
+                        *r += 1;
+                        if group.contains(&dv) {
+                            let c = coll_id(&mut colls, &mut coll_of, stage, round);
+                            colls[c as usize].starts.push(id);
+                            if let Some(prev) = chain_prev[dv].replace(c) {
+                                chains.push((prev, c));
+                            }
+                            NodeOp::ArStart { coll: c }
+                        } else {
+                            NodeOp::Launch
+                        }
+                    }
+                    Instr::AllReduceWait { stage } => {
+                        if stage >= n_stages {
+                            // No such collective can ever complete.
+                            extra_indeg[id as usize] += 1;
+                            NodeOp::ArWait { coll: u32::MAX }
+                        } else {
+                            let r = &mut wait_round[dv * n_stages + stage];
+                            let round = *r as usize;
+                            *r += 1;
+                            let c = coll_id(&mut colls, &mut coll_of, stage, round);
+                            colls[c as usize].waits.push(id);
+                            NodeOp::ArWait { coll: c }
+                        }
+                    }
+                    Instr::OptimStep { stage } => {
+                        wclass[id as usize] = if stage < n_stages {
+                            w_optim_base + stage as u32
+                        } else {
+                            extra_optim.push(stage);
+                            w_extra_base + (extra_optim.len() - 1) as u32
+                        };
+                        NodeOp::Optim
+                    }
+                };
+                op.push(node);
+            }
+        }
+
+        // Append one barrier node per collective.
+        let n_colls = colls.len();
+        let n_nodes = n_real + n_colls;
+        let mut members: Vec<u32> = Vec::new();
+        let mut members_off: Vec<u32> = Vec::with_capacity(n_colls + 1);
+        members_off.push(0);
+        dev.resize(n_nodes, u32::MAX);
+        wclass.resize(n_nodes, 0);
+        extra_indeg.resize(n_nodes, 0);
+        let bar = |c: u32| n_real as u32 + c;
+        for (c, cb) in colls.iter().enumerate() {
+            op.push(NodeOp::Barrier { coll: c as u32 });
+            wclass[n_real + c] = w_ar_base + cb.stage as u32;
+            members.extend(groups[cb.stage].iter().map(|&g| g as u32));
+            members_off.push(members.len() as u32);
+        }
+
+        // Real dependence edges.
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for dv in 0..d {
+            for ix in 1..s.device_ops[dv].len() as u32 {
+                edges.push((base[dv] + ix - 1, base[dv] + ix));
+            }
+        }
+        // FIFO message pairing: j-th send of a tag feeds the j-th recv
+        // (all sends of a tag come from one device, all recvs land on one,
+        // so the arena-id order below is exactly program order).
+        sends.sort_unstable();
+        recvs.sort_unstable();
+        let mut n_msgs = 0usize;
+        let mut multi_iter_safe = true;
+        let (mut si, mut ri) = (0usize, 0usize);
+        while si < sends.len() || ri < recvs.len() {
+            let key = match (sends.get(si), recvs.get(ri)) {
+                (Some(&(sk, _)), Some(&(rk, _))) => sk.min(rk),
+                (Some(&(sk, _)), None) => sk,
+                (None, Some(&(rk, _))) => rk,
+                (None, None) => unreachable!(),
+            };
+            let s0 = si;
+            while si < sends.len() && sends[si].0 == key {
+                si += 1;
+            }
+            let r0 = ri;
+            while ri < recvs.len() && recvs[ri].0 == key {
+                ri += 1;
+            }
+            let (sn, rn) = (si - s0, ri - r0);
+            if sn != rn {
+                multi_iter_safe = false;
+            }
+            for j in 0..sn.min(rn) {
+                let (snode, rnode) = (sends[s0 + j].1, recvs[r0 + j].1);
+                let m = n_msgs as u32;
+                n_msgs += 1;
+                if let NodeOp::Send { msg } = &mut op[snode as usize] {
+                    *msg = m;
+                }
+                if let NodeOp::Recv { msg } = &mut op[rnode as usize] {
+                    *msg = m;
+                }
+                edges.push((snode, rnode));
+            }
+            for &(_, rnode) in &recvs[r0 + sn.min(rn)..ri] {
+                extra_indeg[rnode as usize] += 1; // recv whose send never happens
+            }
+        }
+        // Sends no receive ever consumes still pay LAUNCH and deposit an
+        // arrival somewhere; point them at a shared scratch slot so the
+        // evaluation pass stays branch-free.
+        for o in op.iter_mut() {
+            if let NodeOp::Send { msg } = o {
+                if *msg == u32::MAX {
+                    *msg = n_msgs as u32;
+                }
+            }
+        }
+        // Collective edges: member starts feed the barrier (members that
+        // never start leave a permanent indegree — the engine's deadlock),
+        // the barrier feeds every wait.
+        for (c, cb) in colls.iter().enumerate() {
+            let b = bar(c as u32);
+            for &snode in &cb.starts {
+                edges.push((snode, b));
+            }
+            let group_len = (members_off[c + 1] - members_off[c]) as usize;
+            extra_indeg[b as usize] += (group_len - cb.starts.len()) as u32;
+            for &wnode in &cb.waits {
+                edges.push((b, wnode));
+            }
+        }
+
+        // Chain entries are collective ids; toposort consumes node-arena
+        // ids, so map them onto the barrier nodes here.
+        let chain_edges: Vec<(u32, u32)> =
+            chains.iter().map(|&(a, b)| (bar(a), bar(b))).collect();
+        let topo = toposort(n_nodes, &edges, Some(chain_edges.as_slice()), &extra_indeg);
+        let (topo, stuck) = if topo.len() == n_nodes {
+            (topo, Vec::new())
+        } else {
+            // Re-run on real deps only: the chains are a serialization
+            // heuristic, not true dependencies, so they must not manufacture
+            // deadlocks the engine would not have.
+            let real = toposort(n_nodes, &edges, None, &extra_indeg);
+            if real.len() == n_nodes {
+                return Err(DagUnsupported(
+                    "devices disagree on the serialization order of shared collectives"
+                        .to_string(),
+                ));
+            }
+            let mut reached = vec![false; n_nodes];
+            for &nid in &real {
+                reached[nid as usize] = true;
+            }
+            let mut stuck = Vec::new();
+            for dv in 0..d {
+                for ix in 0..s.device_ops[dv].len() {
+                    if !reached[base[dv] as usize + ix] {
+                        stuck.push((dv, ix, s.device_ops[dv][ix].to_string()));
+                        break;
+                    }
+                }
+            }
+            (Vec::new(), stuck)
+        };
+
+        // Memory structure: chunks held and peak stash depth per device.
+        let held_chunks: Vec<u32> =
+            s.placement.chunks_on.iter().map(|c| c.len() as u32).collect();
+        let peak_stash: Vec<u32> = s
+            .compute_order
+            .iter()
+            .map(|ops| {
+                let (mut depth, mut peak) = (0i64, 0i64);
+                for o in ops {
+                    depth += if o.is_fwd() { 1 } else { -1 };
+                    peak = peak.max(depth);
+                }
+                peak.max(0) as u32
+            })
+            .collect();
+
+        Ok(CompiledDag {
+            d,
+            n_stages,
+            dev,
+            op,
+            wclass,
+            topo,
+            members,
+            members_off,
+            n_msgs,
+            n_colls,
+            n_wclasses: w_extra_base as usize + extra_optim.len(),
+            extra_optim,
+            stuck,
+            multi_iter_safe,
+            held_chunks,
+            peak_stash,
+        })
+    }
+
+    /// Build the weight table pricing this structure under `costs`. This is
+    /// the *entire* per-grid-point cost of reusing a compiled DAG.
+    pub fn weights(&self, costs: &CostModel) -> DagWeights {
+        assert_eq!(costs.d, self.d, "cost model built for a different pipeline depth");
+        let d = self.d;
+        let mut tab = vec![0.0f64; self.n_wclasses];
+        tab[W_FWD as usize] = costs.chunk_fwd;
+        tab[W_BWD as usize] = costs.chunk_bwd;
+        tab[W_COPY as usize] = costs.local_copy_time();
+        for a in 0..d {
+            for b in 0..d {
+                tab[W_P2P as usize + a * d + b] = costs.p2p_time(a, b);
+            }
+        }
+        let ob = W_P2P as usize + d * d;
+        let ab = ob + self.n_stages;
+        for st in 0..self.n_stages {
+            tab[ob + st] = costs.optim_time(st);
+            tab[ab + st] = costs.allreduce_time(st);
+        }
+        let eb = ab + self.n_stages;
+        for (i, &st) in self.extra_optim.iter().enumerate() {
+            tab[eb + i] = costs.optim_time(st);
+        }
+        DagWeights { tab }
+    }
+
+    /// Weighted longest-path evaluation: one linear pass over the
+    /// precomputed topological order per iteration — no heap, no hashing.
+    /// Bit-identical to the uncontended event engine
+    /// ([`super::engine::simulate_schedule_iters_with`] with
+    /// `contention: false`) on every schedule this module can compile.
+    pub fn evaluate(&self, w: &DagWeights, iters: usize) -> Result<MultiIterTrace, SimError> {
+        assert!(iters >= 1, "need at least one iteration");
+        assert!(
+            iters == 1 || self.multi_iter_safe,
+            "multi-iteration unrolling needs balanced per-iteration message tags; \
+             use the event engine for this schedule"
+        );
+        assert_eq!(w.tab.len(), self.n_wclasses, "weights built for a different structure");
+        if !self.stuck.is_empty() {
+            return Err(SimError { stuck: self.stuck.clone() });
+        }
+        let d = self.d;
+        let mut now = vec![0.0f64; d];
+        let mut comm_free = vec![0.0f64; d];
+        let mut trace = vec![DeviceTrace::default(); d];
+        // +1: shared scratch slot for sends nothing ever receives.
+        let mut slot = vec![0.0f64; self.n_msgs + 1];
+        let mut launch_max = vec![0.0f64; self.n_colls];
+        let mut done = vec![0.0f64; self.n_colls];
+        let mut iter_finish = vec![0.0f64; iters];
+        for finish in iter_finish.iter_mut() {
+            launch_max.fill(0.0);
+            for &nid in &self.topo {
+                let i = nid as usize;
+                match self.op[i] {
+                    NodeOp::Compute => {
+                        let dv = self.dev[i] as usize;
+                        let c = w.tab[self.wclass[i] as usize];
+                        now[dv] += c;
+                        trace[dv].compute_busy += c;
+                    }
+                    NodeOp::LocalCopy => {
+                        let dv = self.dev[i] as usize;
+                        now[dv] += w.tab[self.wclass[i] as usize];
+                        trace[dv].local_copies += 1;
+                    }
+                    NodeOp::Optim => {
+                        let dv = self.dev[i] as usize;
+                        now[dv] += w.tab[self.wclass[i] as usize];
+                    }
+                    NodeOp::Send { msg } => {
+                        let dv = self.dev[i] as usize;
+                        now[dv] += LAUNCH;
+                        trace[dv].sends += 1;
+                        slot[msg as usize] = now[dv] + w.tab[self.wclass[i] as usize];
+                    }
+                    NodeOp::Recv { msg } => {
+                        let dv = self.dev[i] as usize;
+                        let arrival = slot[msg as usize];
+                        if arrival > now[dv] {
+                            trace[dv].recv_blocked += arrival - now[dv];
+                            now[dv] = arrival;
+                        }
+                    }
+                    NodeOp::Launch => {
+                        now[self.dev[i] as usize] += LAUNCH;
+                    }
+                    NodeOp::ArStart { coll } => {
+                        let dv = self.dev[i] as usize;
+                        now[dv] += LAUNCH;
+                        let lm = &mut launch_max[coll as usize];
+                        if *lm < now[dv] {
+                            *lm = now[dv];
+                        }
+                    }
+                    NodeOp::Barrier { coll } => {
+                        let c = coll as usize;
+                        let (lo, hi) =
+                            (self.members_off[c] as usize, self.members_off[c + 1] as usize);
+                        let mut engine = 0.0f64;
+                        for &g in &self.members[lo..hi] {
+                            engine = engine.max(comm_free[g as usize]);
+                        }
+                        let t = launch_max[c].max(engine) + w.tab[self.wclass[i] as usize];
+                        for &g in &self.members[lo..hi] {
+                            comm_free[g as usize] = t;
+                        }
+                        done[c] = t;
+                    }
+                    NodeOp::ArWait { coll } => {
+                        let dv = self.dev[i] as usize;
+                        let t = done[coll as usize];
+                        if t > now[dv] {
+                            trace[dv].allreduce_blocked += t - now[dv];
+                            now[dv] = t;
+                        }
+                    }
+                }
+            }
+            for &t in &now {
+                if *finish < t {
+                    *finish = t;
+                }
+            }
+        }
+        for (dv, tr) in trace.iter_mut().enumerate() {
+            tr.finish = now[dv];
+        }
+        let makespan = iter_finish.last().copied().unwrap_or(0.0);
+        Ok(MultiIterTrace { devices: trace, iter_finish, makespan })
+    }
+
+    /// Pipeline depth the structure was compiled for.
+    pub fn n_devices(&self) -> usize {
+        self.d
+    }
+
+    /// Total arena nodes (instructions + collective barriers).
+    pub fn n_nodes(&self) -> usize {
+        self.op.len()
+    }
+
+    /// Whether multi-iteration unrolling is valid (balanced message tags).
+    pub fn multi_iter_safe(&self) -> bool {
+        self.multi_iter_safe
+    }
+
+    /// Chunks held per device — memory re-costing without the `Schedule`.
+    pub fn held_chunks(&self) -> &[u32] {
+        &self.held_chunks
+    }
+
+    /// Peak activation-stash depth per device, in chunk units.
+    pub fn peak_stash(&self) -> &[u32] {
+        &self.peak_stash
+    }
+}
+
+/// Kahn's algorithm over the arena. `chains` (barrier serialization) are
+/// optional so a failed sort can be retried on real dependencies alone.
+/// `extra_indeg` entries are never satisfied — they park unmatchable nodes.
+/// Returns the visit order; shorter than `n_nodes` iff nodes are stuck.
+fn toposort(
+    n_nodes: usize,
+    edges: &[(u32, u32)],
+    chains: Option<&[(u32, u32)]>,
+    extra_indeg: &[u32],
+) -> Vec<u32> {
+    let chain_edges = chains.unwrap_or(&[]);
+    let mut indeg: Vec<u32> = extra_indeg.to_vec();
+    let mut succ_off = vec![0u32; n_nodes + 1];
+    for &(a, b) in edges.iter().chain(chain_edges) {
+        indeg[b as usize] += 1;
+        succ_off[a as usize + 1] += 1;
+    }
+    for i in 0..n_nodes {
+        succ_off[i + 1] += succ_off[i];
+    }
+    let mut succ = vec![0u32; edges.len() + chain_edges.len()];
+    let mut cursor = succ_off.clone();
+    for &(a, b) in edges.iter().chain(chain_edges) {
+        succ[cursor[a as usize] as usize] = b;
+        cursor[a as usize] += 1;
+    }
+    let mut order = Vec::with_capacity(n_nodes);
+    let mut ready: Vec<u32> =
+        (0..n_nodes as u32).rev().filter(|&i| indeg[i as usize] == 0).collect();
+    while let Some(nid) = ready.pop() {
+        order.push(nid);
+        let (lo, hi) = (succ_off[nid as usize] as usize, succ_off[nid as usize + 1] as usize);
+        for &nx in &succ[lo..hi] {
+            indeg[nx as usize] -= 1;
+            if indeg[nx as usize] == 0 {
+                ready.push(nx);
+            }
+        }
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ParallelConfig, BERT_64};
+    use crate::schedule::{build, placement_for, ScheduleConfig, ScheduleKind};
+    use crate::sim::engine::{simulate_schedule, simulate_schedule_iters};
+
+    fn costs(kind: ScheduleKind, d: usize, n: usize) -> CostModel {
+        let p = ParallelConfig::new(kind, 1, d, 4, n);
+        CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(d))
+    }
+
+    #[test]
+    fn compiles_and_matches_event_engine_bitwise() {
+        for kind in [ScheduleKind::Dapple, ScheduleKind::BitPipe] {
+            let s = build(&ScheduleConfig::new(kind, 4, 8)).unwrap();
+            let c = costs(kind, 4, 8);
+            let dag = CompiledDag::compile(&s).unwrap();
+            let t = dag.evaluate(&dag.weights(&c), 1).unwrap();
+            let want = simulate_schedule(&s, &c).unwrap();
+            assert_eq!(t.makespan.to_bits(), want.makespan.to_bits(), "{kind}");
+            for (a, b) in t.devices.iter().zip(&want.devices) {
+                assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+                assert_eq!(a.recv_blocked.to_bits(), b.recv_blocked.to_bits());
+                assert_eq!((a.sends, a.local_copies), (b.sends, b.local_copies));
+            }
+        }
+    }
+
+    #[test]
+    fn multi_iteration_unrolls_bitwise() {
+        let kind = ScheduleKind::BitPipe;
+        let s = build(&ScheduleConfig::new(kind, 4, 8)).unwrap();
+        let c = costs(kind, 4, 8);
+        let dag = CompiledDag::compile(&s).unwrap();
+        assert!(dag.multi_iter_safe());
+        let t = dag.evaluate(&dag.weights(&c), 3).unwrap();
+        let want = simulate_schedule_iters(&s, &c, 3).unwrap();
+        assert_eq!(t.iter_finish.len(), 3);
+        for (a, b) in t.iter_finish.iter().zip(&want.iter_finish) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn reweighting_changes_costs_not_structure() {
+        let s = build(&ScheduleConfig::new(ScheduleKind::BitPipe, 4, 4)).unwrap();
+        let dag = CompiledDag::compile(&s).unwrap();
+        let c1 = costs(ScheduleKind::BitPipe, 4, 4);
+        let p8 = ParallelConfig::new(ScheduleKind::BitPipe, 1, 4, 8, 4);
+        let c8 = CostModel::new(&BERT_64, &p8, &ClusterConfig::paper_testbed(4));
+        let t1 = dag.evaluate(&dag.weights(&c1), 1).unwrap();
+        let t8 = dag.evaluate(&dag.weights(&c8), 1).unwrap();
+        assert!(t8.makespan > t1.makespan, "B=8 must cost more than B=4");
+        // Each re-cost still matches its own event-engine run bitwise.
+        assert_eq!(
+            t8.makespan.to_bits(),
+            simulate_schedule(&s, &c8).unwrap().makespan.to_bits()
+        );
+    }
+
+    #[test]
+    fn deadlock_reported_like_the_engine() {
+        let kind = ScheduleKind::Dapple;
+        let mut s = build(&ScheduleConfig::new(kind, 4, 4)).unwrap();
+        let idx = s.device_ops[0]
+            .iter()
+            .position(|i| matches!(i, Instr::SendAct { .. }))
+            .unwrap();
+        s.device_ops[0].remove(idx);
+        let c = costs(kind, 4, 4);
+        let dag = CompiledDag::compile(&s).unwrap();
+        let e = dag.evaluate(&dag.weights(&c), 1).unwrap_err();
+        let want = simulate_schedule(&s, &c).unwrap_err();
+        let devs = |err: &SimError| {
+            let mut v: Vec<usize> = err.stuck.iter().map(|&(dv, _, _)| dv).collect();
+            v.sort_unstable();
+            v
+        };
+        assert!(!e.stuck.is_empty());
+        assert_eq!(devs(&e), devs(&want));
+    }
+
+    #[test]
+    fn entry_stage_recv_is_stuck_not_panicking() {
+        let placement = placement_for(ScheduleKind::Dapple, 2, 1);
+        let cfg = ScheduleConfig::new(ScheduleKind::Dapple, 2, 2);
+        let s = Schedule {
+            cfg,
+            placement,
+            compute_order: vec![Vec::new(), Vec::new()],
+            device_ops: vec![
+                vec![Instr::RecvAct { from: 1, pipe: 0, stage: 0, mb: 0 }],
+                Vec::new(),
+            ],
+            pipe_of_mb: vec![0, 0],
+        };
+        let dag = CompiledDag::compile(&s).unwrap();
+        let c = costs(ScheduleKind::Dapple, 2, 2);
+        let e = dag.evaluate(&dag.weights(&c), 1).unwrap_err();
+        assert_eq!(e.stuck.len(), 1);
+        assert_eq!(e.stuck[0].0, 0);
+    }
+
+    #[test]
+    fn duplicate_tags_pair_fifo_and_flag_multi_iter() {
+        // Two in-flight messages under one tag pair in send order (engine
+        // parity); balanced tags stay multi-iteration safe.
+        let placement = placement_for(ScheduleKind::Dapple, 2, 1);
+        let cfg = ScheduleConfig::new(ScheduleKind::Dapple, 2, 2);
+        let mut s = Schedule {
+            cfg,
+            placement,
+            compute_order: vec![Vec::new(), Vec::new()],
+            device_ops: vec![
+                vec![
+                    Instr::SendAct { to: 1, pipe: 0, stage: 0, mb: 0 },
+                    Instr::SendAct { to: 1, pipe: 0, stage: 0, mb: 0 },
+                ],
+                vec![
+                    Instr::RecvAct { from: 0, pipe: 0, stage: 1, mb: 0 },
+                    Instr::RecvAct { from: 0, pipe: 0, stage: 1, mb: 0 },
+                ],
+            ],
+            pipe_of_mb: vec![0, 0],
+        };
+        let c = costs(ScheduleKind::Dapple, 2, 2);
+        let dag = CompiledDag::compile(&s).unwrap();
+        assert!(dag.multi_iter_safe());
+        let t = dag.evaluate(&dag.weights(&c), 1).unwrap();
+        let want = simulate_schedule(&s, &c).unwrap();
+        assert_eq!(t.makespan.to_bits(), want.makespan.to_bits());
+        // Unbalanced tags: single-iteration still exact, multi-iteration
+        // flagged off so callers fall back to the event engine.
+        s.device_ops[1].pop();
+        let dag = CompiledDag::compile(&s).unwrap();
+        assert!(!dag.multi_iter_safe());
+        let t = dag.evaluate(&dag.weights(&c), 1).unwrap();
+        let want = simulate_schedule(&s, &c).unwrap();
+        assert_eq!(t.makespan.to_bits(), want.makespan.to_bits());
+    }
+
+    #[test]
+    fn memory_structure_matches_schedule() {
+        let s = build(&ScheduleConfig::new(ScheduleKind::BitPipe, 4, 8)).unwrap();
+        let dag = CompiledDag::compile(&s).unwrap();
+        for dv in 0..4 {
+            assert_eq!(dag.held_chunks()[dv] as usize, s.placement.chunks_on[dv].len());
+        }
+        assert!(dag.peak_stash().iter().any(|&p| p > 0));
+    }
+}

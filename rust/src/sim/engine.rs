@@ -174,8 +174,10 @@ impl std::error::Error for SimError {}
 /// Message key: (from, to, is_grad, pipe, producer_stage, mb).
 type MsgKey = (usize, usize, bool, usize, usize, usize);
 
-/// Launch overhead for async ops (kernel/NCCL enqueue).
-const LAUNCH: f64 = 1.0e-6;
+/// Launch overhead for async ops (kernel/NCCL enqueue). Shared with the
+/// compiled-DAG backend (`super::dag`), whose bit-equivalence guarantee
+/// depends on pricing launches identically.
+pub(crate) const LAUNCH: f64 = 1.0e-6;
 
 /// What a heap event does when it fires.
 #[derive(Debug, Clone, Copy)]

@@ -52,28 +52,9 @@ pub fn memory_footprint(
     parallel: &ParallelConfig,
 ) -> MemoryFootprint {
     let d = s.n_devices();
-    let chunks = s.placement.n_stages();
-    let layers_per_chunk = (model.n_layers + chunks - 1) / chunks;
-    let chunk_param_bytes =
-        model.params_per_layer() * layers_per_chunk as u64 * model.dtype_bytes as u64;
-    // Adam on mixed precision: fp32 master + 2 fp32 moments = 12 bytes per
-    // parameter regardless of compute dtype.
-    let chunk_optim_bytes = model.params_per_layer() * layers_per_chunk as u64 * 12;
-    let chunk_act_bytes =
-        model.layer_activation_bytes(parallel.b) * layers_per_chunk as u64;
-
-    let mut weights = vec![0u64; d];
-    let mut grads = vec![0u64; d];
-    let mut optim = vec![0u64; d];
-    for dev in 0..d {
-        let held = s.placement.chunks_on[dev].len() as u64;
-        weights[dev] = held * chunk_param_bytes;
-        grads[dev] = held * chunk_param_bytes;
-        optim[dev] = held * chunk_optim_bytes;
-    }
-
+    let held: Vec<u32> = s.placement.chunks_on.iter().map(|c| c.len() as u32).collect();
     // Peak stash in chunk units from the compute order.
-    let mut activations = vec![0u64; d];
+    let mut peaks = vec![0u32; d];
     for dev in 0..d {
         let mut depth = 0i64;
         let mut peak = 0i64;
@@ -84,7 +65,43 @@ pub fn memory_footprint(
             }
             peak = peak.max(depth);
         }
-        activations[dev] = peak as u64 * chunk_act_bytes;
+        peaks[dev] = peak.max(0) as u32;
+    }
+    memory_footprint_from_counts(&held, &peaks, model, parallel)
+}
+
+/// Footprint from schedule-structure counts alone: `held_chunks[dev]` =
+/// chunks hosted, `peak_stash[dev]` = peak activation stash depth in chunk
+/// units. This is what the compiled-DAG grid path uses to re-cost memory
+/// for a new (W, B) without rebuilding the `Schedule`; bit-identical to
+/// [`memory_footprint`] on the schedule the counts came from.
+pub fn memory_footprint_from_counts(
+    held_chunks: &[u32],
+    peak_stash: &[u32],
+    model: &ModelConfig,
+    parallel: &ParallelConfig,
+) -> MemoryFootprint {
+    let d = held_chunks.len();
+    // Stages per pipeline replica (the placement's n_stages()).
+    let chunks = (parallel.v * parallel.d).max(1);
+    let layers_per_chunk = (model.n_layers + chunks - 1) / chunks;
+    let chunk_param_bytes =
+        model.params_per_layer() * layers_per_chunk as u64 * model.dtype_bytes as u64;
+    // Adam on mixed precision: fp32 master + 2 fp32 moments = 12 bytes per
+    // parameter regardless of compute dtype.
+    let chunk_optim_bytes = model.params_per_layer() * layers_per_chunk as u64 * 12;
+    let chunk_act_bytes = model.layer_activation_bytes(parallel.b) * layers_per_chunk as u64;
+
+    let mut weights = vec![0u64; d];
+    let mut grads = vec![0u64; d];
+    let mut optim = vec![0u64; d];
+    let mut activations = vec![0u64; d];
+    for dev in 0..d {
+        let held = held_chunks[dev] as u64;
+        weights[dev] = held * chunk_param_bytes;
+        grads[dev] = held * chunk_param_bytes;
+        optim[dev] = held * chunk_optim_bytes;
+        activations[dev] = peak_stash[dev] as u64 * chunk_act_bytes;
     }
 
     MemoryFootprint { weights, grads, optim, activations }
@@ -143,6 +160,37 @@ mod tests {
         let d8 = fp(ScheduleKind::Dapple, 4, 8, 4);
         let d16 = fp(ScheduleKind::Dapple, 4, 16, 4);
         assert_eq!(d8.activations[0], d16.activations[0]);
+    }
+
+    #[test]
+    fn counts_based_footprint_matches_schedule_based() {
+        // The DAG grid path re-costs memory from structure counts alone;
+        // it must agree exactly with the schedule-walking computation.
+        for (kind, d, n) in [
+            (ScheduleKind::Dapple, 8usize, 8usize),
+            (ScheduleKind::BitPipe, 4, 8),
+            (ScheduleKind::Interleaved, 4, 16),
+        ] {
+            let s = build(&ScheduleConfig::new(kind, d, n)).unwrap();
+            let p = ParallelConfig::new(kind, 2, d, 4, n);
+            let want = memory_footprint(&s, &BERT_64, &p);
+            let held: Vec<u32> =
+                s.placement.chunks_on.iter().map(|c| c.len() as u32).collect();
+            let peaks: Vec<u32> = s
+                .compute_order
+                .iter()
+                .map(|ops| {
+                    let (mut depth, mut peak) = (0i64, 0i64);
+                    for op in ops {
+                        depth += if op.kind == OpKind::Forward { 1 } else { -1 };
+                        peak = peak.max(depth);
+                    }
+                    peak.max(0) as u32
+                })
+                .collect();
+            let got = memory_footprint_from_counts(&held, &peaks, &BERT_64, &p);
+            assert_eq!(got.total_peak(), want.total_peak(), "{kind}");
+        }
     }
 
     #[test]

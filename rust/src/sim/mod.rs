@@ -30,25 +30,62 @@
 //! are deterministic and never below the uncontended makespan for the
 //! same schedule (a solo flow reproduces the fixed-duration arrival bit
 //! for bit). See `sim::engine`'s module docs for the mechanics.
+//!
+//! # Evaluation backends
+//!
+//! Two backends execute the instruction streams ([`Engine`]):
+//!
+//! * **Event** ([`crate::sim::engine`]) — the discrete-event queue above;
+//!   required for contention, kept as the differential oracle.
+//! * **Dag** ([`crate::sim::dag`]) — a schedule compiler that lowers the
+//!   streams once into a flat dependence DAG and evaluates it with a
+//!   weighted longest-path pass (no heap, no hashing). Bit-identical to
+//!   the uncontended event engine (`rust/tests/dag_equiv.rs`), roughly an
+//!   order of magnitude cheaper per evaluation, and re-costable: the DAG
+//!   structure depends only on the schedule shape while the weights carry
+//!   the (W, B, cluster) pricing, which is what makes the sweep layer's
+//!   compile-once/re-cost-many cache ([`DagCache`]) possible.
+//!
+//! [`Engine::Auto`] (the default) picks Dag whenever `contention` is off.
 
 mod cost;
+mod dag;
 mod engine;
 mod gridsearch;
 mod memory;
 
-pub use cost::{CostModel, P2pEdge};
+pub use cost::{CostModel, LinkTopology, P2pEdge};
+pub use dag::{CompiledDag, DagUnsupported, DagWeights};
 pub use engine::{
     simulate_schedule, simulate_schedule_iters, simulate_schedule_iters_with,
     simulate_schedule_reference, simulate_schedule_with, DeviceTrace, MultiIterTrace, SimError,
     SimTrace,
 };
-pub use gridsearch::{grid_search, grid_search_opts, grid_search_serial, GridPoint, GridSpace};
-pub use memory::{memory_footprint, MemoryFootprint};
+pub use gridsearch::{
+    grid_search, grid_search_cached, grid_search_opts, grid_search_serial, DagCache, GridPoint,
+    GridSpace,
+};
+pub use memory::{memory_footprint, memory_footprint_from_counts, MemoryFootprint};
 
 use crate::config::{ClusterConfig, ModelConfig, ParallelConfig};
 use crate::metrics::IterStats;
 use crate::schedule::{self, Schedule};
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
+
+/// Which evaluation backend executes the instruction streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Pick automatically: the DAG backend when `contention` is off, the
+    /// event queue when it is on (the default).
+    Auto,
+    /// The discrete-event queue (`sim::engine`) — the only backend that
+    /// prices link contention, and the differential oracle for the DAG.
+    Event,
+    /// The compiled dependence-DAG longest-path evaluator (`sim::dag`) —
+    /// bit-identical to the event engine with `contention: false`, an
+    /// order of magnitude cheaper per evaluation.
+    Dag,
+}
 
 /// Everything needed for one simulated run.
 #[derive(Debug, Clone, Copy)]
@@ -57,21 +94,42 @@ pub struct SimConfig {
     pub parallel: ParallelConfig,
     pub cluster: ClusterConfig,
     /// Price link contention (flow-level fair-share bandwidth sharing).
-    /// Off by default: the fixed-duration engine is faster and bit-stable
+    /// Off by default: the fixed-duration engines are faster and bit-stable
     /// against `simulate_schedule_reference`.
     pub contention: bool,
+    /// Backend selection; [`Engine::Auto`] resolves to Dag without
+    /// contention, Event with it.
+    pub engine: Engine,
 }
 
 impl SimConfig {
     /// Fixed-duration (no-contention) configuration.
     pub fn new(model: ModelConfig, parallel: ParallelConfig, cluster: ClusterConfig) -> Self {
-        SimConfig { model, parallel, cluster, contention: false }
+        SimConfig { model, parallel, cluster, contention: false, engine: Engine::Auto }
     }
 
     /// Toggle the flow-level link-contention model.
     pub fn with_contention(mut self, contention: bool) -> Self {
         self.contention = contention;
         self
+    }
+
+    /// Force a specific evaluation backend.
+    pub fn with_engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Resolve `engine`/`contention` into the backend to run, rejecting
+    /// the impossible combination.
+    fn resolved_engine(&self) -> Result<Engine> {
+        match (self.engine, self.contention) {
+            (Engine::Auto, true) | (Engine::Event, _) => Ok(Engine::Event),
+            (Engine::Auto, false) | (Engine::Dag, false) => Ok(Engine::Dag),
+            (Engine::Dag, true) => {
+                bail!("the DAG backend cannot price link contention; use the event engine")
+            }
+        }
     }
 }
 
@@ -106,30 +164,48 @@ impl SimResult {
     }
 }
 
-/// Build the schedule for `cfg` and simulate one iteration.
-pub fn simulate(cfg: &SimConfig) -> Result<SimResult> {
-    cfg.parallel.validate()?;
-    cfg.cluster.validate()?;
-    cfg.model.validate()?;
-    let sched: Schedule = schedule::build(&cfg.parallel.schedule())?;
-    let costs = CostModel::new(&cfg.model, &cfg.parallel, &cfg.cluster);
-    let trace = simulate_schedule_with(&sched, &costs, cfg.contention)?;
-    let memory = memory_footprint(&sched, &cfg.model, &cfg.parallel);
+/// Execute `iters` iterations of `sched` without contention on the
+/// resolved backend. The DAG compiler's unsupported structures (never
+/// produced by `comm_pass`) and unbalanced multi-iteration tags fall back
+/// to the event engine, so the choice of backend is never observable in
+/// the results — only in the wall clock.
+pub(crate) fn run_streams(
+    sched: &Schedule,
+    costs: &CostModel,
+    iters: usize,
+    contention: bool,
+    engine: Engine,
+) -> Result<MultiIterTrace, SimError> {
+    if engine == Engine::Dag {
+        debug_assert!(!contention, "resolved_engine never picks Dag with contention");
+        if let Ok(dag) = CompiledDag::compile(sched) {
+            if iters == 1 || dag.multi_iter_safe() {
+                return dag.evaluate(&dag.weights(costs), iters);
+            }
+        }
+    }
+    engine::simulate_schedule_iters_with(sched, costs, iters, contention)
+}
 
-    let iter_time = trace.makespan;
-    let minibatch = cfg.parallel.minibatch_size();
-    let d = sched.n_devices();
-    let compute_time: Vec<f64> = (0..d).map(|i| trace.devices[i].compute_busy).collect();
-    let p2p_block_time: Vec<f64> = (0..d).map(|i| trace.devices[i].recv_blocked).collect();
-    let allreduce_block_time: Vec<f64> =
-        (0..d).map(|i| trace.devices[i].allreduce_blocked).collect();
+/// Assemble a [`SimResult`] from a finished trace — shared by
+/// [`simulate`] and the grid-search fast path so both produce bit-identical
+/// derived metrics.
+pub(crate) fn assemble_result(
+    minibatch: usize,
+    d: usize,
+    devices: &[DeviceTrace],
+    iter_time: f64,
+    memory: MemoryFootprint,
+) -> SimResult {
+    let compute_time: Vec<f64> = (0..d).map(|i| devices[i].compute_busy).collect();
+    let p2p_block_time: Vec<f64> = (0..d).map(|i| devices[i].recv_blocked).collect();
+    let allreduce_block_time: Vec<f64> = (0..d).map(|i| devices[i].allreduce_blocked).collect();
     let bubble_fraction = if iter_time > 0.0 {
         compute_time.iter().map(|c| 1.0 - c / iter_time).sum::<f64>() / d as f64
     } else {
         0.0
     };
-
-    Ok(SimResult {
+    SimResult {
         iter_time,
         throughput: minibatch as f64 / iter_time,
         compute_time,
@@ -137,7 +213,26 @@ pub fn simulate(cfg: &SimConfig) -> Result<SimResult> {
         allreduce_block_time,
         bubble_fraction,
         memory,
-    })
+    }
+}
+
+/// Build the schedule for `cfg` and simulate one iteration.
+pub fn simulate(cfg: &SimConfig) -> Result<SimResult> {
+    cfg.parallel.validate()?;
+    cfg.cluster.validate()?;
+    cfg.model.validate()?;
+    let engine = cfg.resolved_engine()?;
+    let sched: Schedule = schedule::build(&cfg.parallel.schedule())?;
+    let costs = CostModel::new(&cfg.model, &cfg.parallel, &cfg.cluster);
+    let trace = run_streams(&sched, &costs, 1, cfg.contention, engine)?;
+    let memory = memory_footprint(&sched, &cfg.model, &cfg.parallel);
+    Ok(assemble_result(
+        cfg.parallel.minibatch_size(),
+        sched.n_devices(),
+        &trace.devices,
+        trace.makespan,
+        memory,
+    ))
 }
 
 /// Multi-iteration simulation output: warmup + steady-state statistics.
@@ -174,9 +269,10 @@ pub fn simulate_iters(cfg: &SimConfig, iters: usize, warmup: usize) -> Result<Mu
     cfg.parallel.validate()?;
     cfg.cluster.validate()?;
     cfg.model.validate()?;
+    let engine = cfg.resolved_engine()?;
     let sched: Schedule = schedule::build(&cfg.parallel.schedule())?;
     let costs = CostModel::new(&cfg.model, &cfg.parallel, &cfg.cluster);
-    let trace = simulate_schedule_iters_with(&sched, &costs, iters, cfg.contention)?;
+    let trace = run_streams(&sched, &costs, iters, cfg.contention, engine)?;
     let iter_times = trace.iter_times();
     let steady = IterStats::from_secs(&iter_times[warmup..]);
     let steady_throughput = steady.throughput(cfg.parallel.minibatch_size());
@@ -319,6 +415,48 @@ mod tests {
         assert!(r.steady_throughput > 0.0);
         let sum: f64 = r.iter_times.iter().sum();
         assert!((sum - r.total_time).abs() < 1e-9 * r.total_time.max(1e-12));
+    }
+
+    #[test]
+    fn engine_selection_is_unobservable_in_results() {
+        // Auto resolves to the DAG backend without contention; forcing the
+        // event engine must produce bit-identical results.
+        for kind in [ScheduleKind::Dapple, ScheduleKind::BitPipe] {
+            let cfg = SimConfig::new(
+                BERT_64,
+                ParallelConfig::new(kind, 2, 8, 4, 16),
+                ClusterConfig::paper_testbed(16),
+            );
+            let auto = simulate(&cfg).unwrap();
+            let event = simulate(&cfg.with_engine(Engine::Event)).unwrap();
+            let dag = simulate(&cfg.with_engine(Engine::Dag)).unwrap();
+            for r in [&event, &dag] {
+                assert_eq!(auto.iter_time.to_bits(), r.iter_time.to_bits(), "{kind}");
+                assert_eq!(auto.throughput.to_bits(), r.throughput.to_bits(), "{kind}");
+                assert_eq!(auto.bubble_fraction.to_bits(), r.bubble_fraction.to_bits());
+                assert_eq!(auto.peak_memory(), r.peak_memory());
+            }
+            // Multi-iteration unrolling over the same arena, same story.
+            let a = simulate_iters(&cfg, 3, 1).unwrap();
+            let e = simulate_iters(&cfg.with_engine(Engine::Event), 3, 1).unwrap();
+            for (x, y) in a.iter_times.iter().zip(&e.iter_times) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{kind}");
+            }
+        }
+    }
+
+    #[test]
+    fn dag_engine_rejects_contention() {
+        let cfg = SimConfig::new(
+            BERT_64,
+            ParallelConfig::new(ScheduleKind::BitPipe, 1, 4, 4, 4),
+            ClusterConfig::paper_testbed(4),
+        );
+        let bad = cfg.with_contention(true).with_engine(Engine::Dag);
+        assert!(simulate(&bad).is_err());
+        assert!(simulate_iters(&bad, 2, 0).is_err());
+        // Auto + contention silently routes to the event engine.
+        assert!(simulate(&cfg.with_contention(true)).is_ok());
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! Differential tests for the compiled-DAG backend (`sim::dag`): on every
+//! valid schedule the weighted longest-path evaluation must be
+//! **bit-identical** to the uncontended event-queue engine — makespan,
+//! per-device accounting, and multi-iteration boundaries alike — and must
+//! report the same deadlocks. Random configurations are drawn through the
+//! in-tree property harness (`bitpipe::util::prop`) and shrunk on failure.
+
+use bitpipe::config::{ClusterConfig, ParallelConfig, BERT_64};
+use bitpipe::schedule::{build, ScheduleConfig, ScheduleKind, SyncPolicy};
+use bitpipe::sim::{
+    simulate_schedule, simulate_schedule_iters, CompiledDag, CostModel,
+};
+use bitpipe::util::{forall, Gen};
+
+/// A randomly drawable (kind, D, N, sync, B) configuration. N sweeps the
+/// issue's {4, 8, 16} set; D covers the shallow and paper-default depths;
+/// B varies the weights over a fixed structure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Draw {
+    kind_idx: usize,
+    d_idx: usize,
+    n_idx: usize,
+    b_idx: usize,
+    lazy: bool,
+}
+
+const DS: [usize; 2] = [4, 8];
+const NS: [usize; 3] = [4, 8, 16];
+const BS: [usize; 3] = [1, 4, 8];
+
+fn cfg_of(draw: &Draw) -> ScheduleConfig {
+    let d = DS[draw.d_idx];
+    // The generators target the paper's N >= D regime (N a multiple of D);
+    // clamp shallower draws up to N = D.
+    let n = NS[draw.n_idx].max(d);
+    ScheduleConfig::new(ScheduleKind::ALL[draw.kind_idx], d, n)
+        .with_sync(if draw.lazy { SyncPolicy::Lazy } else { SyncPolicy::Eager })
+}
+
+fn gen_draw() -> Gen<Draw> {
+    Gen {
+        draw: Box::new(|r| Draw {
+            kind_idx: r.range(0, ScheduleKind::ALL.len()),
+            d_idx: r.range(0, DS.len()),
+            n_idx: r.range(0, NS.len()),
+            b_idx: r.range(0, BS.len()),
+            lazy: r.chance(0.3),
+        }),
+        shrink: Box::new(|d| {
+            let mut out = Vec::new();
+            if d.d_idx > 0 {
+                out.push(Draw { d_idx: d.d_idx - 1, ..*d });
+            }
+            if d.n_idx > 0 {
+                out.push(Draw { n_idx: d.n_idx - 1, ..*d });
+            }
+            if d.b_idx > 0 {
+                out.push(Draw { b_idx: d.b_idx - 1, ..*d });
+            }
+            if d.lazy {
+                out.push(Draw { lazy: false, ..*d });
+            }
+            out
+        }),
+    }
+}
+
+fn costs_for(cfg: &ScheduleConfig, b: usize) -> CostModel {
+    let p = ParallelConfig::new(cfg.kind, 1, cfg.d, b, cfg.n);
+    CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(cfg.d))
+}
+
+/// Bit-exact agreement between the compiled DAG and the event engine on
+/// one (schedule, cost model, iters) point.
+fn check_equivalence(cfg: &ScheduleConfig, b: usize, iters: usize) -> Result<(), String> {
+    let s = build(cfg).map_err(|e| format!("{cfg:?}: build failed: {e}"))?;
+    let c = costs_for(cfg, b);
+    let dag = CompiledDag::compile(&s)
+        .map_err(|e| format!("{cfg:?}: dag compile refused a generated schedule: {e}"))?;
+    if !dag.multi_iter_safe() {
+        return Err(format!("{cfg:?}: generated schedule flagged multi-iteration unsafe"));
+    }
+    let got = dag
+        .evaluate(&dag.weights(&c), iters)
+        .map_err(|e| format!("{cfg:?}: dag evaluate: {e}"))?;
+    let want = simulate_schedule_iters(&s, &c, iters)
+        .map_err(|e| format!("{cfg:?}: event engine: {e}"))?;
+    if got.makespan.to_bits() != want.makespan.to_bits() {
+        return Err(format!(
+            "{cfg:?} B={b} iters={iters}: dag makespan {} != event {}",
+            got.makespan, want.makespan
+        ));
+    }
+    for (k, (x, y)) in got.iter_finish.iter().zip(&want.iter_finish).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{cfg:?}: iteration {k} boundary {x} != {y}"));
+        }
+    }
+    for (dev, (a, b)) in got.devices.iter().zip(&want.devices).enumerate() {
+        for (what, x, y) in [
+            ("finish", a.finish, b.finish),
+            ("compute_busy", a.compute_busy, b.compute_busy),
+            ("recv_blocked", a.recv_blocked, b.recv_blocked),
+            ("allreduce_blocked", a.allreduce_blocked, b.allreduce_blocked),
+        ] {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{cfg:?}: dev {dev} {what}: {x} vs {y}"));
+            }
+        }
+        if (a.sends, a.local_copies) != (b.sends, b.local_copies) {
+            return Err(format!("{cfg:?}: dev {dev} op counters diverge"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn dag_matches_event_engine_exhaustive_single_iter() {
+    // The issue's acceptance grid, exhaustively: every schedule family
+    // x N in {4, 8, 16} (D = 4, plus the paper-default D = 8 where the
+    // N >= D regime allows).
+    for kind in ScheduleKind::ALL {
+        for &d in &DS {
+            for &n in &NS {
+                if n < d {
+                    continue;
+                }
+                let cfg = ScheduleConfig::new(kind, d, n);
+                check_equivalence(&cfg, 4, 1).unwrap_or_else(|e| panic!("{e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn dag_matches_event_engine_exhaustive_multi_iter() {
+    // Same grid, 3 iterations unrolled over the same node arena.
+    for kind in ScheduleKind::ALL {
+        for &d in &DS {
+            for &n in &NS {
+                if n < d {
+                    continue;
+                }
+                let cfg = ScheduleConfig::new(kind, d, n);
+                check_equivalence(&cfg, 4, 3).unwrap_or_else(|e| panic!("{e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn dag_matches_event_engine_random() {
+    // Random draws add the lazy-sync and micro-batch axes and shrink
+    // failures minimal; alternate single- and multi-iteration runs.
+    forall(0xDA6E, 80, &gen_draw(), |draw| {
+        let iters = if draw.n_idx % 2 == 0 { 1 } else { 2 };
+        check_equivalence(&cfg_of(draw), BS[draw.b_idx], iters)
+    });
+}
+
+#[test]
+fn lazy_sync_matches_too() {
+    // Lazy sync routes every collective through the end-of-stream barrier
+    // chain — the comm-engine serialization the DAG models with chain
+    // edges, exercised here explicitly for the bidirectional families.
+    for kind in [
+        ScheduleKind::Chimera,
+        ScheduleKind::MixPipe,
+        ScheduleKind::BitPipe,
+        ScheduleKind::BitPipeNoV,
+    ] {
+        let cfg = ScheduleConfig::new(kind, 8, 16).with_sync(SyncPolicy::Lazy);
+        check_equivalence(&cfg, 4, 1).unwrap_or_else(|e| panic!("{e}"));
+        check_equivalence(&cfg, 4, 2).unwrap_or_else(|e| panic!("{e}"));
+    }
+}
+
+#[test]
+fn deadlocks_agree_with_event_engine() {
+    // Removing one send must deadlock both backends on the same devices.
+    let kind = ScheduleKind::Dapple;
+    let mut s = build(&ScheduleConfig::new(kind, 4, 4)).unwrap();
+    let idx = s.device_ops[0]
+        .iter()
+        .position(|i| matches!(i, bitpipe::schedule::Instr::SendAct { .. }))
+        .unwrap();
+    s.device_ops[0].remove(idx);
+    let c = costs_for(&ScheduleConfig::new(kind, 4, 4), 4);
+    let dag = CompiledDag::compile(&s).unwrap();
+    let got = dag.evaluate(&dag.weights(&c), 1).unwrap_err();
+    let want = simulate_schedule(&s, &c).unwrap_err();
+    let devs = |e: &bitpipe::sim::SimError| {
+        let mut v: Vec<usize> = e.stuck.iter().map(|&(dv, _, _)| dv).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(devs(&got), devs(&want));
+}
+
+#[test]
+fn weights_reuse_over_one_structure_matches_fresh_runs() {
+    // The grid-search contract: one compiled structure re-priced under
+    // several cost models must match a fresh event-engine run for each.
+    let cfg = ScheduleConfig::new(ScheduleKind::BitPipe, 8, 16);
+    let s = build(&cfg).unwrap();
+    let dag = CompiledDag::compile(&s).unwrap();
+    for b in BS {
+        let c = costs_for(&cfg, b);
+        let got = dag.evaluate(&dag.weights(&c), 1).unwrap();
+        let want = simulate_schedule(&s, &c).unwrap();
+        assert_eq!(
+            got.makespan.to_bits(),
+            want.makespan.to_bits(),
+            "B={b}: {} vs {}",
+            got.makespan,
+            want.makespan
+        );
+    }
+}

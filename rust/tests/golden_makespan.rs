@@ -1,0 +1,147 @@
+//! Golden-makespan snapshot: pins the simulated iteration time of every
+//! paper-baseline schedule family on the paper testbed, bit for bit, so
+//! silent cost-model drift fails CI instead of quietly shifting every
+//! figure and table.
+//!
+//! The pinned numbers live in `rust/tests/golden_makespans.txt` (one line
+//! per configuration, `f64` bits in hex so the comparison is exact). The
+//! file is *recorded by the test itself*: on first run — or with
+//! `BITPIPE_BLESS=1` after an intentional cost-model change — it writes
+//! the current values and passes with a notice; once the file is
+//! committed, any divergence is a hard failure. Ordering invariants that
+//! hold regardless of the exact numbers (BitPipe fastest, sane
+//! magnitudes) are asserted unconditionally so the test has teeth even
+//! before the snapshot is armed.
+
+use bitpipe::config::{ClusterConfig, ParallelConfig, BERT_64};
+use bitpipe::schedule::ScheduleKind;
+use bitpipe::sim::{simulate, Engine, SimConfig};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// The pinned grid: every paper baseline at the shallow and default
+/// depths, BERT-64, B=4, W=1, paper testbed.
+const GRID: [(usize, usize); 2] = [(4, 8), (8, 8)];
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden_makespans.txt")
+}
+
+fn measure(kind: ScheduleKind, d: usize, n: usize) -> f64 {
+    let cfg = SimConfig::new(
+        BERT_64,
+        ParallelConfig::new(kind, 1, d, 4, n),
+        ClusterConfig::paper_testbed(d),
+    );
+    let r = simulate(&cfg).unwrap();
+    // The snapshot pins the *shared* number: both backends must agree
+    // bitwise before it is worth pinning either.
+    let ev = simulate(&cfg.with_engine(Engine::Event)).unwrap();
+    assert_eq!(
+        r.iter_time.to_bits(),
+        ev.iter_time.to_bits(),
+        "{kind} D={d} N={n}: dag and event backends disagree"
+    );
+    r.iter_time
+}
+
+fn current_snapshot() -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for (d, n) in GRID {
+        for kind in ScheduleKind::PAPER_BASELINES {
+            let key = format!("{} d{} n{} b4 bert-64", kind.name(), d, n);
+            out.push((key, measure(kind, d, n)));
+        }
+    }
+    out
+}
+
+fn render(snapshot: &[(String, f64)]) -> String {
+    let mut s = String::from(
+        "# Golden makespans (seconds) — paper testbed, BERT-64, W=1, B=4.\n\
+         # Format: <key> <f64 bits as hex> # <decimal for humans>\n\
+         # Recorded by rust/tests/golden_makespan.rs; regenerate with\n\
+         # BITPIPE_BLESS=1 cargo test --test golden_makespan after an\n\
+         # intentional cost-model change.\n",
+    );
+    for (key, v) in snapshot {
+        let _ = writeln!(s, "{key} {:016x} # {v:.9}", v.to_bits());
+    }
+    s
+}
+
+fn parse(text: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split(" # ").next().unwrap_or(line).rsplitn(2, ' ');
+        let bits = parts.next().unwrap_or("");
+        let key = parts.next().unwrap_or("").trim().to_string();
+        let v = u64::from_str_radix(bits.trim(), 16)
+            .map(f64::from_bits)
+            .unwrap_or(f64::NAN);
+        out.push((key, v));
+    }
+    out
+}
+
+#[test]
+fn makespans_match_golden_snapshot() {
+    let snapshot = current_snapshot();
+
+    // Unconditional invariants (hold whether or not the snapshot is armed):
+    // BitPipe is the fastest family at each grid point, and every makespan
+    // is a sane O(0.1s..10s) BERT-64 iteration on the modeled hardware.
+    for (d, n) in GRID {
+        let at = |kind: ScheduleKind| {
+            snapshot
+                .iter()
+                .find(|(k, _)| k.starts_with(kind.name()) && k.contains(&format!("d{d} n{n}")))
+                .map(|&(_, v)| v)
+                .unwrap()
+        };
+        let bit = at(ScheduleKind::BitPipe);
+        assert!(bit.is_finite() && bit > 0.01 && bit < 10.0, "D={d}: BitPipe {bit}");
+        for kind in ScheduleKind::PAPER_BASELINES {
+            let v = at(kind);
+            assert!(v.is_finite() && v > 0.0, "{kind} D={d}: {v}");
+            if kind != ScheduleKind::BitPipe {
+                assert!(bit < v, "D={d} N={n}: BitPipe {bit} !< {kind} {v}");
+            }
+        }
+    }
+
+    let path = golden_path();
+    let bless = std::env::var("BITPIPE_BLESS").is_ok();
+    if bless || !path.exists() {
+        std::fs::write(&path, render(&snapshot)).expect("write golden snapshot");
+        eprintln!(
+            "golden_makespan: recorded {} entries to {} — commit the file to arm the gate",
+            snapshot.len(),
+            path.display()
+        );
+        return;
+    }
+
+    let want = parse(&std::fs::read_to_string(&path).expect("read golden snapshot"));
+    assert_eq!(
+        want.len(),
+        snapshot.len(),
+        "golden file entry count changed; re-record with BITPIPE_BLESS=1 if intentional"
+    );
+    let mut drift = String::new();
+    for ((gk, gv), (ck, cv)) in want.iter().zip(&snapshot) {
+        assert_eq!(gk, ck, "golden file order changed; re-record if intentional");
+        if gv.to_bits() != cv.to_bits() {
+            let _ = writeln!(drift, "  {ck}: golden {gv:.9} -> current {cv:.9}");
+        }
+    }
+    assert!(
+        drift.is_empty(),
+        "cost-model drift against the golden snapshot:\n{drift}\
+         If this change is intentional, re-record with BITPIPE_BLESS=1 and commit."
+    );
+}
