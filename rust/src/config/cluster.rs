@@ -26,8 +26,12 @@ pub enum LinkKind {
 /// * `Local`/`NvLink` — endpoints are *devices*: each directed device pair
 ///   has its own NVLink path (NVSwitch-style full bisection inside a node).
 /// * `InfiniBand` — endpoints are *nodes*: every transfer between the same
-///   node pair funnels through the same NIC-to-NIC pipe, which is exactly
-///   where BitPipe's twin pipes contend under the Fig 6 mappings.
+///   node pair funnels through the same NIC-to-NIC path, which is exactly
+///   where BitPipe's twin pipes contend under the Fig 6 mappings. How that
+///   path maps onto shared hardware is refined by [`IbModel`]: under
+///   [`IbModel::NodeNic`] (the default) it decomposes into the source
+///   node's egress NIC plus the destination node's ingress NIC (see
+///   [`ClusterConfig::resources_of`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct LinkId {
     pub kind: LinkKind,
@@ -35,6 +39,36 @@ pub struct LinkId {
     pub src: usize,
     /// Destination endpoint (device id for Local/NvLink, node id for IB).
     pub dst: usize,
+}
+
+/// How inter-node Infiniband capacity is shared between concurrent flows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IbModel {
+    /// Per-node NIC aggregation (the default, and the faithful model for a
+    /// one-HCA-per-node testbed): a node's egress NIC is **one** shared
+    /// resource across *all* its peer nodes, and likewise its ingress NIC.
+    /// A node fanning out to two different peers halves each flow's
+    /// bandwidth even though the flows target distinct node pairs.
+    NodeNic,
+    /// The legacy PR-2 model, kept behind this knob for differential
+    /// comparison: every directed node *pair* is an independent pipe, so
+    /// fan-out to distinct peers does not contend.
+    NodePair,
+}
+
+/// One shared network resource of the contention model. A flow occupies
+/// one or two of these ([`ClusterConfig::resources_of`]); concurrent flows
+/// sharing a resource split its bandwidth fair-share.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ResourceId {
+    /// A directed point-to-point pipe: a device-pair NVLink path, a local
+    /// HBM copy engine, or (under [`IbModel::NodePair`]) a node-pair IB
+    /// pipe.
+    Pipe(LinkId),
+    /// A node's egress NIC ([`IbModel::NodeNic`]).
+    NicOut(usize),
+    /// A node's ingress NIC ([`IbModel::NodeNic`]).
+    NicIn(usize),
 }
 
 /// How pipeline stages map onto physical devices (paper Fig 6).
@@ -75,6 +109,8 @@ pub struct ClusterConfig {
     pub mem_capacity: u64,
     /// Stage mapping policy.
     pub mapping: MappingPolicy,
+    /// How concurrent IB flows share NIC hardware under contention.
+    pub ib_model: IbModel,
 }
 
 impl Default for ClusterConfig {
@@ -90,6 +126,7 @@ impl Default for ClusterConfig {
             b_half: 0.75,
             mem_capacity: 80 * (1 << 30),
             mapping: MappingPolicy::ReplicasTogether,
+            ib_model: IbModel::NodeNic,
         }
     }
 }
@@ -136,6 +173,38 @@ impl ClusterConfig {
                 LinkId { kind, src: self.node_of(a), dst: self.node_of(b) }
             }
         }
+    }
+
+    /// The shared resources a flow on pipe `link` occupies under
+    /// contention. Intra-node pipes are their own resource; an inter-node
+    /// flow under [`IbModel::NodeNic`] rides *two* — the source node's
+    /// egress NIC and the destination node's ingress NIC — so every flow
+    /// leaving (or entering) a node contends with all of that node's other
+    /// inter-node traffic in the same direction, whichever peer it targets.
+    pub fn resources_of(&self, link: LinkId) -> (ResourceId, Option<ResourceId>) {
+        match (link.kind, self.ib_model) {
+            (LinkKind::InfiniBand, IbModel::NodeNic) => {
+                (ResourceId::NicOut(link.src), Some(ResourceId::NicIn(link.dst)))
+            }
+            _ => (ResourceId::Pipe(link), None),
+        }
+    }
+
+    /// Enumerate the directed pipes a ring collective over `members`
+    /// (physical device ids, assumed distinct) traverses. Members are
+    /// ordered by `(node, device)` — the node-clustered order a topology-
+    /// aware ring implementation uses, which crosses each inter-node
+    /// boundary exactly once per direction — and the ring closes back on
+    /// its first member. Fewer than two members means no wire traffic.
+    pub fn ring_path(&self, members: &[usize]) -> Vec<LinkId> {
+        if members.len() < 2 {
+            return Vec::new();
+        }
+        let mut ordered: Vec<usize> = members.to_vec();
+        ordered.sort_unstable_by_key(|&dev| (self.node_of(dev), dev));
+        (0..ordered.len())
+            .map(|i| self.link_id(ordered[i], ordered[(i + 1) % ordered.len()]))
+            .collect()
     }
 
     /// Bandwidth of a link class, bytes/s. Local copies are modeled at
@@ -228,6 +297,59 @@ mod tests {
         assert_ne!(c.link_id(0, 8), c.link_id(8, 0), "IB directions distinct");
         // Local copies stay per-device.
         assert_eq!(c.link_id(3, 3), LinkId { kind: LinkKind::Local, src: 3, dst: 3 });
+    }
+
+    #[test]
+    fn resources_split_ib_into_nics_by_default() {
+        let c = ClusterConfig::paper_testbed(16);
+        // NVLink pipes are their own resource.
+        let nv = c.link_id(0, 1);
+        assert_eq!(c.resources_of(nv), (ResourceId::Pipe(nv), None));
+        // IB flows ride the egress NIC of the source node and the ingress
+        // NIC of the destination node.
+        let ib = c.link_id(0, 8);
+        assert_eq!(
+            c.resources_of(ib),
+            (ResourceId::NicOut(0), Some(ResourceId::NicIn(1)))
+        );
+        // Fan-out from one node to two different peers shares the egress
+        // NIC — the aggregation the per-pair model misses.
+        let c24 = ClusterConfig { n_devices: 24, ..c };
+        let (out_a, in_a) = c24.resources_of(c24.link_id(0, 8));
+        let (out_b, in_b) = c24.resources_of(c24.link_id(0, 16));
+        assert_eq!(out_a, out_b, "one egress NIC per node");
+        assert_ne!(in_a, in_b, "distinct peers keep distinct ingress NICs");
+        // The legacy model keeps independent node-pair pipes.
+        let legacy = ClusterConfig { ib_model: IbModel::NodePair, ..c24 };
+        assert_eq!(
+            legacy.resources_of(legacy.link_id(0, 8)),
+            (ResourceId::Pipe(legacy.link_id(0, 8)), None)
+        );
+        assert_ne!(
+            legacy.resources_of(legacy.link_id(0, 8)),
+            legacy.resources_of(legacy.link_id(0, 16))
+        );
+    }
+
+    #[test]
+    fn ring_paths_cluster_by_node() {
+        let c = ClusterConfig::paper_testbed(16);
+        // Two members: both directed pipes, once each.
+        let path = c.ring_path(&[0, 7]);
+        assert_eq!(path, vec![c.link_id(0, 7), c.link_id(7, 0)]);
+        // Four members across two nodes, given out of order: the ring
+        // clusters members by node, so exactly one IB hop per direction.
+        let path = c.ring_path(&[9, 0, 8, 1]);
+        assert_eq!(path.len(), 4);
+        let ib_hops = path.iter().filter(|l| l.kind == LinkKind::InfiniBand).count();
+        assert_eq!(ib_hops, 2, "node-clustered ring crosses IB once per direction");
+        assert_eq!(
+            path,
+            vec![c.link_id(0, 1), c.link_id(1, 8), c.link_id(8, 9), c.link_id(9, 0)]
+        );
+        // Degenerate rings carry no wire traffic.
+        assert!(c.ring_path(&[3]).is_empty());
+        assert!(c.ring_path(&[]).is_empty());
     }
 
     #[test]

@@ -9,7 +9,7 @@ mod cluster;
 mod model;
 mod parallel;
 
-pub use cluster::{ClusterConfig, LinkId, LinkKind, MappingPolicy};
+pub use cluster::{ClusterConfig, IbModel, LinkId, LinkKind, MappingPolicy, ResourceId};
 pub use model::{ModelConfig, BERT_64, GPT_96, GPT_TINY, GPT_SMALL};
 pub use parallel::ParallelConfig;
 

@@ -233,14 +233,18 @@ pub fn fig6() -> Result<EvalOutput> {
         }
     }
     let body = format!(
-        "{}\nReplicasTogether keeps the heavy gradient allreduce on NVLink and pushes only the\n\
-         small activation messages onto Infiniband (paper Fig 6's recommended mapping).\n\
-         The contended columns re-price each mapping with flow-level link sharing\n\
-         (--contention): concurrent transfers funnelled onto one inter-node pipe split\n\
-         its bandwidth, so mappings that concentrate P2P on IB pay the larger penalty.\n\
-         Steady columns measure 4 back-to-back iterations (1 warmup) with the\n\
-         multi-iteration simulator; iterations overlap at the boundary, so steady\n\
-         throughput sits at or above the single-shot number in both modes.\n",
+        "{}\nReplicasTogether keeps each stage's data-parallel replicas in one node and pushes\n\
+         only the small activation messages onto Infiniband (paper Fig 6's recommended\n\
+         mapping); the bidirectional twin still all-reduces with its mirror device, so the\n\
+         enumerated ring paths cross nodes either way and the mapping decides how much\n\
+         company they have. The contended columns re-price each mapping with the full\n\
+         flow-level model (--contention): P2P transfers and all-reduce ring flows share\n\
+         NVLink paths and each node's egress/ingress NIC (one NIC per direction per node,\n\
+         not per peer), so mappings that funnel gradient rings and activation traffic\n\
+         through the same NICs pay the larger penalty. Steady columns measure 4\n\
+         back-to-back iterations (1 warmup) with the multi-iteration simulator;\n\
+         iterations overlap at the boundary, so steady throughput sits at or above the\n\
+         single-shot number in both modes.\n",
         t.render()
     );
     Ok(EvalOutput { id: "fig6", title: "Device mapping for bidirectional pipelines", body })

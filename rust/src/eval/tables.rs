@@ -187,8 +187,11 @@ pub fn table5() -> Result<EvalOutput> {
          both components contribute, with eager sync slightly ahead of the V-shape. The\n\
          steady column re-measures full BitPipe over 3 back-to-back iterations (1 warmup)\n\
          with the multi-iteration simulator; the contended column repeats it under the\n\
-         flow-level link-sharing model (--contention), which on a fully NVLinked node\n\
-         costs little — the contention penalty lives on the inter-node pipes (fig6).\n",
+         full flow-level model (--contention), where the eagerly launched all-reduce\n\
+         rings ride the same NVLink paths as the P2P traffic they overlap. On a fully\n\
+         NVLinked node this costs little — the real penalty lives on the inter-node\n\
+         NICs, where rings and activations funnel through one egress/ingress NIC per\n\
+         node (fig6).\n",
         t.render()
     );
     Ok(EvalOutput { id: "table5", title: "Ablation study (w/o V, w/o E)", body })

@@ -6,7 +6,7 @@
 //! bitpipe simulate   --kind bitpipe --model bert-64 --w 1 --d 8 --b 4 --n 8
 //!                    [--gpus P] [--mapping replicas|pipes] [--single-node]
 //!                    [--iters N [--warmup K]] [--contention]
-//!                    [--engine auto|event|dag]
+//!                    [--ib-model nic|pair] [--engine auto|event|dag]
 //! bitpipe eval-paper [--only table2,fig9,...] (default: all)
 //! bitpipe train      --artifacts DIR --kind bitpipe --d 4 --n 8 --steps 50
 //!                    [--dataset synthetic|corpus] [--lr 1e-3] [--seed 42]
@@ -19,7 +19,7 @@
 //! `bitpipe help` prints the command list.
 
 use anyhow::{bail, Context, Result};
-use bitpipe::config::{ClusterConfig, MappingPolicy, ModelConfig, ParallelConfig};
+use bitpipe::config::{ClusterConfig, IbModel, MappingPolicy, ModelConfig, ParallelConfig};
 use bitpipe::schedule::{self, timeline, Costs, ScheduleConfig, ScheduleKind, SyncPolicy};
 use bitpipe::sim::{self, Engine, SimConfig};
 use bitpipe::train::{self, DatasetKind, TrainConfig};
@@ -181,6 +181,13 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
             "replicas" => MappingPolicy::ReplicasTogether,
             "pipes" => MappingPolicy::PipesTogether,
             other => bail!("--mapping must be replicas|pipes, got {other:?}"),
+        };
+    }
+    if let Some(m) = get(flags, "ib-model") {
+        cluster.ib_model = match m {
+            "nic" => IbModel::NodeNic,
+            "pair" => IbModel::NodePair,
+            other => bail!("--ib-model must be nic|pair, got {other:?}"),
         };
     }
     let contention = flags.contains_key("contention");

@@ -7,10 +7,21 @@
 //!   over the link class between the two physical devices.
 //! * All-reduce — ring algorithm: `2 (g-1)/g * bytes / bw_bottleneck`,
 //!   where the group spans the bidirectional twin and the W data-parallel
-//!   replicas; the bottleneck link depends on the Fig 6 mapping policy.
+//!   replicas; the bottleneck link class follows the Fig 6 mapping policy
+//!   (the scalar formula every backend prices uncontended runs with).
+//!   *Alongside* the scalar, the ring is lowered onto its actual physical
+//!   path for the contention-aware engine: the group's member devices are
+//!   enumerated under the mapping, ordered node-clustered
+//!   ([`ClusterConfig::ring_path`]), and each directed hop becomes a
+//!   [`RingHop`] carrying its true per-hop traffic. A ring is
+//!   step-synchronized — all `g` hops move in lock-step for `2(g-1)`
+//!   steps — so each hop occupies its pipe for the whole collective and
+//!   the lowering prices each hop's solo work at the scalar duration:
+//!   on an idle network the flows reproduce the scalar formula bit for
+//!   bit, and any contended hop stretches the whole collective.
 
 use crate::config::{ClusterConfig, LinkId, LinkKind, MappingPolicy, ModelConfig, ParallelConfig};
-use crate::schedule::{DeviceId, Placement, StageId};
+use crate::schedule::{placement_for, DeviceId, Placement, StageId};
 
 /// One P2P edge of the simulated pipeline group: the payload and the
 /// physical pipe it travels on, rather than a precomputed scalar time.
@@ -46,6 +57,24 @@ impl P2pEdge {
     pub fn solo_time(&self) -> f64 {
         self.lat + self.bytes as f64 / self.bw
     }
+}
+
+/// One directed hop of a collective ring, for the flow lowering: over the
+/// whole collective the hop carries `2(g-1)` segments of `bytes/g`
+/// (`bytes` here), and — because ring steps are lock-step across all
+/// hops — it occupies its pipe for the collective's full scalar duration
+/// (`work`, identical on every hop of a ring). The collective completes
+/// when its last flow drains: exactly [`CostModel::allreduce_time`] on an
+/// idle network, bit for bit, and later whenever any hop shares a wire.
+#[derive(Debug, Clone, Copy)]
+pub struct RingHop {
+    /// Total bytes the hop moves across the collective's 2(g-1) steps.
+    pub bytes: f64,
+    /// Solo work of the hop's flow, seconds: the scalar collective
+    /// duration (step-synchronized hops are busy for all of it).
+    pub work: f64,
+    /// The directed pipe the hop occupies.
+    pub link: LinkId,
 }
 
 /// The (W, D, cluster)-dependent part of the P2P edge tables — link
@@ -129,8 +158,13 @@ pub struct CostModel {
     /// Precomputed per-stage all-reduce times. Entry and exit chunks carry
     /// the embedding / LM-head parameters on top of their transformer
     /// layers, so their gradient volume (and ring time) is heavier than a
-    /// body chunk's.
+    /// body chunk's. Each entry equals the slowest hop of the matching
+    /// `ring` path (0 when there is no collective).
     allreduce: Vec<f64>,
+    /// Precomputed per-stage ring lowering: the directed hops of each
+    /// stage's collective over its physical members, for the contention-
+    /// aware engine. Empty when the stage has no collective.
+    ring: Vec<Vec<RingHop>>,
     /// Stages per pipeline replica (v * d), sizing `allreduce` and `optim`.
     n_stages: usize,
     /// Precomputed per-stage optimizer-step times (entry/exit chunks
@@ -213,6 +247,7 @@ impl CostModel {
             edges: Vec::new(),
             local_copy: 0.0,
             allreduce: Vec::new(),
+            ring: Vec::new(),
             n_stages: parallel.v * parallel.d,
             optim: Vec::new(),
             optim_body: 0.0,
@@ -241,6 +276,32 @@ impl CostModel {
         cm.allreduce = (0..cm.n_stages)
             .map(|stage| cm.ring_time(cm.grad_bytes_of(stage, embed_bytes)))
             .collect();
+        // Lower each stage's collective onto its physical ring for the
+        // contention-aware engine: the twin devices holding the stage
+        // under the *canonical* placement of this schedule kind
+        // (`placement_for` — identical to what the generator produces;
+        // hand-built schedules with a divergent placement would get hops
+        // on the canonical links, not theirs) times the W data-parallel
+        // replicas, mapped to physical devices and ordered node-clustered.
+        // Hops carry their true per-hop traffic and — ring steps being
+        // lock-step — occupy their pipes for the stage's full scalar
+        // duration, so a solo ring degrades to the scalar formula bit for
+        // bit.
+        if group > 1 {
+            let placement = placement_for(parallel.kind, parallel.d, parallel.v);
+            cm.ring = (0..cm.n_stages)
+                .map(|stage| {
+                    let members = cm.ring_members(&placement.allreduce_group(stage));
+                    cm.ring_hops_over(
+                        &cluster.ring_path(&members),
+                        cm.grad_bytes_of(stage, embed_bytes),
+                        cm.allreduce[stage],
+                    )
+                })
+                .collect();
+        } else {
+            cm.ring = vec![Vec::new(); cm.n_stages];
+        }
         let hbm_bw = cm.cluster.bw(LinkKind::Local);
         let optim_of = move |bytes: u64| bytes as f64 * 7.0 / hbm_bw;
         cm.optim = (0..cm.n_stages)
@@ -290,6 +351,65 @@ impl CostModel {
             Some(&t) => t,
             None => self.ring_time(self.grad_bytes),
         }
+    }
+
+    /// The flow lowering of one stage's collective: the directed ring hops
+    /// the contention-aware engine runs as concurrent flows. `None` when
+    /// the stage has no collective (group of 1) or lies outside the
+    /// schedule's stage range (such stages keep the scalar pricing).
+    pub fn ring_hops(&self, stage: StageId) -> Option<&[RingHop]> {
+        match self.ring.get(stage) {
+            Some(hops) if !hops.is_empty() => Some(hops.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// Physical devices of one all-reduce group: every member pipeline
+    /// device times the W data-parallel replicas, under the mapping
+    /// policy. Shared by the per-stage ring tables and the hand-built
+    /// fallback so the two lowerings can never diverge.
+    fn ring_members(&self, group: &[DeviceId]) -> Vec<usize> {
+        let w_groups = self.w.max(1);
+        group
+            .iter()
+            .flat_map(|&dev| {
+                (0..w_groups).map(move |g| {
+                    self.cluster.physical_device(self.cluster.mapping, g, dev, w_groups, self.d)
+                })
+            })
+            .collect()
+    }
+
+    /// Ring lowering for a stage outside the precomputed table (hand-built
+    /// streams): enumerate the ring over the member devices the *engine*
+    /// resolved from its placement, priced at the body-chunk fallback
+    /// scalar — so even out-of-range collectives serialize and contend on
+    /// the wire under full contention instead of silently bypassing the
+    /// comm queues. Members beyond the cost model's pipeline depth cannot
+    /// be mapped to physical devices; such groups return no hops (the
+    /// engine keeps the analytic scalar for them).
+    pub fn fallback_ring_hops(&self, group: &[DeviceId]) -> Vec<RingHop> {
+        let scalar = self.ring_time(self.grad_bytes);
+        if scalar <= 0.0 || group.iter().any(|&dev| dev >= self.d) {
+            return Vec::new();
+        }
+        let members = self.ring_members(group);
+        self.ring_hops_over(&self.cluster.ring_path(&members), self.grad_bytes, scalar)
+    }
+
+    /// Lower a ring path over `bytes` gradient bytes into hops: true
+    /// per-hop traffic exposed (`RingHop::bytes`; informational — pricing
+    /// uses `work`), solo work pinned to the stage's `scalar` duration
+    /// (lock-step ring steps keep every hop busy for all of it).
+    fn ring_hops_over(&self, path: &[LinkId], bytes: u64, scalar: f64) -> Vec<RingHop> {
+        let g = self.allreduce_group as f64;
+        path.iter()
+            .map(|&link| RingHop {
+                bytes: 2.0 * (g - 1.0) * (bytes as f64 / g),
+                work: scalar,
+                link,
+            })
+            .collect()
     }
 
     /// Ring all-reduce time over `bytes` on the mapped bottleneck link.
@@ -354,6 +474,7 @@ mod tests {
         let c = model_costs(ScheduleKind::Dapple, 1, 8);
         assert_eq!(c.allreduce_group, 1);
         assert_eq!(c.allreduce_time(0), 0.0);
+        assert!(c.ring_hops(0).is_none());
         // W=1 bidirectional: twins only, NVLink group of 2.
         let c = model_costs(ScheduleKind::BitPipe, 1, 8);
         assert_eq!(c.allreduce_group, 2);
@@ -377,6 +498,48 @@ mod tests {
         let t8 = c8.allreduce_time(0);
         assert!(t8 > t2);
         assert!(t8 < 2.0 * t2, "ring should scale ~(g-1)/g: {t2} vs {t8}");
+    }
+
+    #[test]
+    fn ring_hops_lower_the_scalar_onto_real_pipes() {
+        // The flow lowering: one hop per member of the node-clustered ring
+        // over twins x W physical devices, every hop's solo work pinned to
+        // the stage's scalar duration (lock-step ring steps), true per-hop
+        // traffic exposed, and hop pipes matching the actual placement.
+        for (w, d) in [(1usize, 8usize), (2, 8), (4, 8)] {
+            let c = model_costs(ScheduleKind::BitPipe, w, d);
+            for stage in 0..2 * d {
+                let hops = c.ring_hops(stage).expect("bidirectional stages have rings");
+                assert_eq!(hops.len(), 2 * w, "stage {stage}: one hop per member");
+                for h in hops {
+                    assert_eq!(
+                        h.work.to_bits(),
+                        c.allreduce_time(stage).to_bits(),
+                        "W={w} stage {stage}: hop work must be the scalar"
+                    );
+                    assert!(h.bytes > 0.0);
+                    assert_ne!(h.link.src, h.link.dst);
+                }
+            }
+        }
+        // W=2 on 16 devices: the twin sits in the other node, so the ring
+        // genuinely crosses Infiniband pipes even though the *scalar*
+        // bottleneck class follows the Fig 6 mapping heuristic — exactly
+        // the traffic the contention engine now sees on the NICs.
+        let c = model_costs(ScheduleKind::BitPipe, 2, 8);
+        for stage in 0..16 {
+            let hops = c.ring_hops(stage).unwrap();
+            assert!(
+                hops.iter().any(|h| h.link.kind == LinkKind::InfiniBand),
+                "stage {stage}: twin ring should cross nodes"
+            );
+        }
+        // Entry/exit rings carry more bytes than body rings.
+        let body = c.ring_hops(1).unwrap()[0].bytes;
+        assert!(c.ring_hops(0).unwrap()[0].bytes > body);
+        assert!(c.ring_hops(15).unwrap()[0].bytes > body);
+        // Out-of-range stages have no lowering (scalar fallback only).
+        assert!(c.ring_hops(99).is_none());
     }
 
     #[test]
@@ -470,6 +633,12 @@ mod tests {
                     hoisted.allreduce_time(st).to_bits()
                 );
                 assert_eq!(fresh.optim_time(st).to_bits(), hoisted.optim_time(st).to_bits());
+                let (a, b) = (fresh.ring_hops(st).unwrap(), hoisted.ring_hops(st).unwrap());
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.link, y.link);
+                    assert_eq!(x.work.to_bits(), y.work.to_bits());
+                }
             }
         }
     }

@@ -51,23 +51,46 @@
 //!
 //! # Link contention (flow-level fair share)
 //!
-//! With `contention` on ([`simulate_schedule_with`] /
-//! [`simulate_schedule_iters_with`]), links are shared resources instead
-//! of infinite pipes. Every P2P message becomes a *flow* on the directed
-//! physical link the cost model assigns it ([`crate::config::LinkId`]:
-//! per-device-pair NVLink paths, per-node-pair Infiniband pipes). The `k`
-//! concurrent flows on one link each progress at `1/k` of the link rate —
-//! the standard progress-tracking fair-share model — and every flow
-//! start/finish *re-projects* the completion times of the flows still in
-//! flight. Re-projection is implemented with versioned completion events:
-//! stale events (superseded by a later re-projection) pop and are
-//! discarded. A flow's work is its solo transfer time (latency +
-//! bytes/bandwidth), so a flow that never shares its link completes at
-//! exactly the fixed-duration engine's arrival time, bit for bit, and a
-//! shared flow only ever finishes later — contended makespans are
-//! therefore bounded below by uncontended ones for the same schedule.
-//! All-reduce collectives stay priced by the scalar ring model
-//! (serialized per device on `comm_free`); only P2P flows contend.
+//! With contention on ([`simulate_schedule_with`] /
+//! [`simulate_schedule_iters_with`], or the mode-explicit
+//! [`simulate_schedule_contended`] variants), the network is a set of
+//! shared *resources* ([`crate::config::ResourceId`]) instead of infinite
+//! pipes: per-device-pair NVLink paths inside a node, and — under the
+//! default [`crate::config::IbModel::NodeNic`] — one egress and one
+//! ingress NIC per node, shared across *all* of that node's peers (the
+//! legacy per-node-pair pipes survive behind `IbModel::NodePair`). Every
+//! P2P message becomes a *flow* occupying the resource(s) of its pipe; an
+//! inter-node flow occupies two (source egress NIC + destination ingress
+//! NIC). A flow progresses at `1/k` of full rate, where `k` is the number
+//! of flows on its most-loaded resource — the standard bottleneck-resource
+//! fair-share model — and every flow start/finish *re-projects* the
+//! completion times of the flows it shares a resource with. Re-projection
+//! is implemented with versioned completion events: stale events
+//! (superseded by a later re-projection) pop and are discarded; this is
+//! what keeps multi-hop (two-resource) flows correct, since either
+//! endpoint's churn can re-time them. A flow's work is its solo transfer
+//! time (latency + bytes/bandwidth), so a flow that never shares any of
+//! its resources completes at exactly the fixed-duration engine's arrival
+//! time, bit for bit, and a shared flow only ever finishes later —
+//! contended makespans are therefore bounded below by uncontended ones
+//! for the same schedule.
+//!
+//! Under [`Contention::Full`] (what `SimConfig::contention` selects),
+//! all-reduce collectives are lowered onto the wire too: when the last
+//! group member launches a (stage, round) collective, its precomputed
+//! ring path ([`CostModel::ring_hops`]) becomes one flow per directed
+//! hop, each carrying the hop's whole-collective traffic
+//! (`2(g-1) x bytes/g` plus latency per step). The collective completes
+//! when its slowest hop drains — on an idle network exactly the scalar
+//! `allreduce_time`, bit for bit — and contends for NVLink paths and NICs
+//! with concurrent P2P flows and with other rings. Collectives sharing a
+//! member device still serialize on its comm engine: per-device FIFO
+//! queues launch a collective's flows only once it heads every member's
+//! queue, the flow-world equivalent of the analytic `comm_free` chain.
+//! [`Contention::P2pOnly`] keeps the PR-2 behaviour (collectives priced
+//! by the scalar formula, serialized on `comm_free`) and exists as the
+//! differential midpoint the test battery pins:
+//! `uncontended <= p2p-only <= full` on every schedule.
 //!
 //! Two deliberate modeling choices, documented because they differ from a
 //! textbook flow-level model:
@@ -76,29 +99,51 @@
 //!   the other groups' identical, synchronized transfers are priced by
 //!   scaling each flow's work by `P2pEdge::dp_copies` (the number of
 //!   group copies landing on the same pipe) — exact for lock-step
-//!   replicas, which identical instruction streams are.
+//!   replicas, which identical instruction streams are. (Collective ring
+//!   flows need no such scaling: their rings already span all W
+//!   replicas' physical devices.)
 //! * A flow's work is its full solo time, *including* the wire latency,
 //!   so k sharers each pay ~k x latency. Strict flow models share only
 //!   the bytes/bandwidth term; folding the (micro-second) latency in
 //!   keeps the solo-flow bit-equality guarantee and errs pessimistic by
-//!   at most (k-1) x latency per transfer.
+//!   at most (k-1) x latency per transfer. Ring flows inherit the same
+//!   convention per hop — a hop's work folds in its 2(g-1) per-step
+//!   latencies — which is also what keeps the solo-ring duration equal to
+//!   the scalar formula instead of undershooting it.
 //!
 //! Transfer starts are enqueued as heap events at their virtual send time
 //! rather than applied immediately: a device may locally run far ahead of
 //! its peers, and bandwidth sharing is only correct if the network
 //! observes flow starts/finishes in global time order. Sends stay
-//! asynchronous for the *sender* either way.
+//! asynchronous for the *sender* either way; collective flows enter at
+//! the latest member launch time (or later, behind a queued predecessor).
 //!
 //! The pre-event-queue spin-loop executor is kept as
 //! [`simulate_schedule_reference`] for differential testing; the property
 //! suite asserts makespan equivalence across every schedule family.
 
 use super::cost::CostModel;
-use crate::config::LinkId;
+use crate::config::ResourceId;
 use crate::schedule::{Instr, Schedule, StageId};
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::fmt;
+
+/// Which traffic contends for shared link bandwidth in a simulated run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Contention {
+    /// Fixed-duration transfers (the bit-stable legacy behaviour, and the
+    /// `SimConfig::contention: false` default).
+    Off,
+    /// Only P2P transfers contend; collectives keep the scalar ring
+    /// pricing serialized on `comm_free` (the PR-2 model). Kept as the
+    /// differential midpoint the test battery pins between `Off` and
+    /// `Full`.
+    P2pOnly,
+    /// P2P transfers *and* all-reduce ring flows contend (what
+    /// `SimConfig::contention: true` selects).
+    Full,
+}
 
 /// Per-device accounting from a simulated run.
 #[derive(Debug, Clone, Default)]
@@ -241,16 +286,28 @@ impl PartialOrd for Event {
     }
 }
 
-/// One in-flight P2P flow (contended mode).
+/// What a flow's completion delivers.
+#[derive(Debug, Clone, Copy)]
+enum Payload {
+    /// A P2P message (delivered to its FIFO on completion).
+    Msg(MsgKey),
+    /// One ring hop of the collective at this index in `Engine::colls`.
+    Ring(usize),
+}
+
+/// One in-flight flow (contended mode).
 #[derive(Debug, Clone, Copy)]
 struct Xfer {
-    key: MsgKey,
-    link: LinkId,
+    payload: Payload,
+    /// The shared resources the flow occupies: an intra-node pipe, or —
+    /// for inter-node traffic under NIC aggregation — the source node's
+    /// egress NIC plus the destination node's ingress NIC.
+    res: (ResourceId, Option<ResourceId>),
     /// Remaining work in *solo seconds* — the time the rest of the
-    /// transfer would take alone on its link (latency + bytes/bandwidth).
-    /// `k` concurrent flows drain at `1/k` solo-seconds per wall second,
-    /// so a never-shared flow reproduces the fixed-duration arrival
-    /// bit for bit.
+    /// transfer would take alone (latency + bytes/bandwidth). With `k`
+    /// flows on the flow's most-loaded resource it drains at `1/k`
+    /// solo-seconds per wall second, so a never-shared flow reproduces
+    /// the fixed-duration arrival bit for bit.
     remaining: f64,
     /// Projection version; completion events carry the version they were
     /// projected under and are discarded if it has moved on.
@@ -258,48 +315,79 @@ struct Xfer {
     done: bool,
 }
 
-/// Flows currently sharing one directed physical link.
+/// Flows currently occupying one shared resource.
 #[derive(Debug, Default)]
-struct LinkState {
+struct ResState {
     /// Active transfer ids, in deterministic start order.
+    active: Vec<usize>,
+}
+
+/// The shared-resource network: progress-tracking fair-share bandwidth.
+/// Progress is settled globally (all in-flight flows advance between
+/// consecutive network events — counts are constant in between), which is
+/// what makes two-resource flows cheap to keep honest.
+#[derive(Debug, Default)]
+struct Network {
+    xfers: Vec<Xfer>,
+    res: HashMap<ResourceId, ResState>,
+    /// In-flight flow ids, in start order.
     active: Vec<usize>,
     /// Virtual time progress was last settled at.
     last: f64,
 }
 
-/// The shared-link network: progress-tracking fair-share bandwidth.
-#[derive(Debug, Default)]
-struct Network {
-    xfers: Vec<Xfer>,
-    links: HashMap<LinkId, LinkState>,
-}
-
 impl Network {
-    /// Advance every active flow on `link` from the last settle point to
-    /// `t` at the current fair share (1/k of the link each).
-    fn settle(&mut self, link: &LinkId, t: f64) {
-        let Some(ls) = self.links.get_mut(link) else { return };
-        let k = ls.active.len();
-        if k > 0 {
-            let dt = t - ls.last;
-            if dt > 0.0 {
-                let each = dt / k as f64;
-                for &id in &ls.active {
-                    let x = &mut self.xfers[id];
-                    x.remaining = (x.remaining - each).max(0.0);
-                }
-            }
+    /// Share count of flow `id`: occupancy of its most-loaded resource
+    /// (>= 1, since the flow itself is active on each).
+    fn share(&self, id: usize) -> f64 {
+        let x = &self.xfers[id];
+        let occ = |r: &ResourceId| self.res.get(r).map_or(1, |s| s.active.len());
+        let mut k = occ(&x.res.0);
+        if let Some(r2) = &x.res.1 {
+            k = k.max(occ(r2));
         }
-        ls.last = t;
+        k.max(1) as f64
     }
 
-    /// Re-project the completion of every active flow on `link` under the
-    /// new share count, bumping versions so older projections go stale.
+    /// Advance every in-flight flow from the last settle point to `t` at
+    /// its current fair share.
+    fn settle(&mut self, t: f64) {
+        if t > self.last {
+            let dt = t - self.last;
+            let shares: Vec<(usize, f64)> =
+                self.active.iter().map(|&id| (id, self.share(id))).collect();
+            for (id, k) in shares {
+                let x = &mut self.xfers[id];
+                x.remaining = (x.remaining - dt / k).max(0.0);
+            }
+            self.last = t;
+        }
+    }
+
+    /// Every active flow sharing a resource with `id` (including `id`
+    /// itself while active), deduplicated in ascending id order.
+    fn sharers_of(&self, id: usize) -> Vec<usize> {
+        let x = &self.xfers[id];
+        let mut out: Vec<usize> = Vec::new();
+        if let Some(s) = self.res.get(&x.res.0) {
+            out.extend(s.active.iter().copied());
+        }
+        if let Some(r2) = &x.res.1 {
+            if let Some(s) = self.res.get(r2) {
+                out.extend(s.active.iter().copied());
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Re-project the completion of every flow in `ids` under the new
+    /// share counts, bumping versions so older projections go stale.
     /// Fresh completion events are appended to `out`.
-    fn reproject(&mut self, link: &LinkId, t: f64, out: &mut Vec<Event>) {
-        let Some(ls) = self.links.get(link) else { return };
-        let k = ls.active.len() as f64;
-        for &id in &ls.active {
+    fn reproject(&mut self, ids: &[usize], t: f64, out: &mut Vec<Event>) {
+        for &id in ids {
+            let k = self.share(id);
             let x = &mut self.xfers[id];
             x.version += 1;
             out.push(Event {
@@ -308,6 +396,55 @@ impl Network {
             });
         }
     }
+
+    /// Flow `id` enters the network at `t`: settle, occupy its resources,
+    /// re-project everyone it now shares with.
+    fn insert(&mut self, id: usize, t: f64, out: &mut Vec<Event>) {
+        self.settle(t);
+        let res = self.xfers[id].res;
+        self.res.entry(res.0).or_default().active.push(id);
+        if let Some(r2) = res.1 {
+            self.res.entry(r2).or_default().active.push(id);
+        }
+        self.active.push(id);
+        let ids = self.sharers_of(id);
+        self.reproject(&ids, t, out);
+    }
+
+    /// Flow `id` completes at `t`: settle, release its resources,
+    /// re-project the remaining sharers.
+    fn remove(&mut self, id: usize, t: f64, out: &mut Vec<Event>) {
+        self.settle(t);
+        self.xfers[id].done = true;
+        let res = self.xfers[id].res;
+        if let Some(s) = self.res.get_mut(&res.0) {
+            s.active.retain(|&i| i != id);
+        }
+        if let Some(r2) = res.1 {
+            if let Some(s) = self.res.get_mut(&r2) {
+                s.active.retain(|&i| i != id);
+            }
+        }
+        self.active.retain(|&i| i != id);
+        let ids = self.sharers_of(id);
+        self.reproject(&ids, t, out);
+    }
+}
+
+/// One collective being lowered to ring flows ([`Contention::Full`]).
+#[derive(Debug)]
+struct Coll {
+    stage: StageId,
+    round: usize,
+    /// Latest member launch time: flows may not enter the wire before it.
+    gate: f64,
+    /// Member devices (simulated group) whose comm engines serialize it.
+    members: Vec<usize>,
+    /// The ring lowering to run; drained into flows at launch.
+    hops: Vec<super::cost::RingHop>,
+    /// Ring flows still in flight; completion of the last one completes
+    /// the collective.
+    flows_left: usize,
 }
 
 /// Per-(stage, round) collective state.
@@ -351,9 +488,21 @@ struct Engine<'a> {
     /// eager launches (paper Fig 5b) pay off — early collectives drain the
     /// engine while compute continues; lazy launches queue at the end.
     comm_free: Vec<f64>,
-    /// Shared-link bandwidth model; `None` = fixed-duration transfers
-    /// (the bit-stable legacy behaviour).
+    /// Contention mode; `Off` = fixed-duration transfers (the bit-stable
+    /// legacy behaviour).
+    mode: Contention,
+    /// Shared-resource bandwidth model; `Some` iff `mode != Off`.
     net: Option<Network>,
+    /// Collectives lowered to ring flows (`Contention::Full`).
+    colls: Vec<Coll>,
+    /// Collectives not yet launched, in creation order — the only ones a
+    /// launch scan must visit (keeps launch work proportional to the
+    /// in-flight backlog, not to every collective of the whole run).
+    pending: Vec<usize>,
+    /// Per-device FIFO of flow-lowered collectives awaiting/holding the
+    /// comm engine: a collective launches its flows only once it heads
+    /// every member's queue — the flow-world `comm_free` serialization.
+    comm_q: Vec<VecDeque<usize>>,
 
     heap: BinaryHeap<Event>,
     remaining: usize,
@@ -365,7 +514,7 @@ impl<'a> Engine<'a> {
         s: &'a Schedule,
         costs: &'a CostModel,
         iters: usize,
-        contention: bool,
+        mode: Contention,
     ) -> Engine<'a> {
         let d = s.n_devices();
         let per_iter: usize = s.device_ops.iter().map(|o| o.len()).sum();
@@ -386,7 +535,11 @@ impl<'a> Engine<'a> {
             ar_started: HashMap::new(),
             ar_waited: HashMap::new(),
             comm_free: vec![0.0; d],
-            net: contention.then(Network::default),
+            mode,
+            net: (mode != Contention::Off).then(Network::default),
+            colls: Vec::new(),
+            pending: Vec::new(),
+            comm_q: vec![VecDeque::new(); d],
             heap: BinaryHeap::new(),
             remaining: per_iter * iters,
             iter_finish: vec![0.0; iters],
@@ -433,17 +586,18 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Contended send: register the flow and defer its link entry to the
+    /// Contended send: register the flow and defer its wire entry to the
     /// heap, so the network observes starts in global time order. The
     /// message is delivered (and any parked receiver woken) only when the
     /// flow's completion event fires.
     fn send_contended(&mut self, dev: usize, to: usize, key: MsgKey) {
         let edge = self.costs.p2p_edge(dev, to);
+        let res = self.costs.cluster.resources_of(edge.link);
         let net = self.net.as_mut().expect("contended send without a network");
         let id = net.xfers.len();
         net.xfers.push(Xfer {
-            key,
-            link: edge.link,
+            payload: Payload::Msg(key),
+            res,
             // The other W-1 data-parallel groups send identical messages at
             // the same virtual time; `dp_copies` of them share this pipe,
             // so the tracked copy carries dp_copies x its solo work
@@ -456,24 +610,20 @@ impl<'a> Engine<'a> {
         self.heap.push(Event { time: self.now[dev], kind: EvKind::XferStart { id } });
     }
 
-    /// A flow enters its link at time `t`: settle in-flight progress, add
-    /// it to the share set, and re-project everyone's completions.
+    /// A flow enters the wire at time `t`: settle in-flight progress,
+    /// occupy its resources, and re-project the flows it shares with.
     fn on_xfer_start(&mut self, id: usize, t: f64) {
         let mut fresh = Vec::new();
         let net = self.net.as_mut().expect("transfer event without a network");
-        let link = net.xfers[id].link;
-        net.settle(&link, t);
-        let ls = net.links.entry(link).or_default();
-        ls.last = t;
-        ls.active.push(id);
-        net.reproject(&link, t, &mut fresh);
+        net.insert(id, t, &mut fresh);
         self.heap.extend(fresh);
     }
 
     /// A flow's projected completion fires at time `t`. Stale projections
     /// (version moved on, or already done) are ignored; a current one
-    /// removes the flow from its link, re-projects the remaining sharers,
-    /// and delivers the message.
+    /// releases the flow's resources, re-projects the remaining sharers,
+    /// and delivers its payload — a P2P message, or one ring hop of a
+    /// collective (whose last hop completes the collective).
     fn on_xfer_done(&mut self, id: usize, version: u64, t: f64) {
         let mut fresh = Vec::new();
         let net = self.net.as_mut().expect("transfer event without a network");
@@ -481,21 +631,85 @@ impl<'a> Engine<'a> {
         if x.done || x.version != version {
             return;
         }
-        net.settle(&x.link, t);
-        net.xfers[id].done = true;
-        if let Some(ls) = net.links.get_mut(&x.link) {
-            ls.active.retain(|&i| i != id);
-        }
-        net.reproject(&x.link, t, &mut fresh);
+        net.remove(id, t, &mut fresh);
         self.heap.extend(fresh);
-        self.msgs.entry(x.key).or_default().push_back(t);
-        if let Some(waiter) = self.msg_waiters.remove(&x.key) {
-            self.wake(waiter, t);
+        match x.payload {
+            Payload::Msg(key) => {
+                self.msgs.entry(key).or_default().push_back(t);
+                if let Some(waiter) = self.msg_waiters.remove(&key) {
+                    self.wake(waiter, t);
+                }
+            }
+            Payload::Ring(c) => {
+                self.colls[c].flows_left -= 1;
+                if self.colls[c].flows_left == 0 {
+                    self.complete_collective(c, t);
+                }
+            }
         }
     }
 
+    /// Launch every pending collective that now heads all of its members'
+    /// comm queues: its ring flows enter the wire at the latest member
+    /// launch time, or at `t` if a queued predecessor released the
+    /// engines later than that.
+    fn try_launch_collectives(&mut self, t: f64) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            let c = self.pending[i];
+            let at_head = self.colls[c]
+                .members
+                .iter()
+                .all(|&g| self.comm_q[g].front() == Some(&c));
+            if !at_head {
+                i += 1;
+                continue;
+            }
+            self.pending.remove(i);
+            let at = self.colls[c].gate.max(t);
+            let hops = std::mem::take(&mut self.colls[c].hops);
+            let net = self.net.as_mut().expect("collective flows without a network");
+            for hop in &hops {
+                let id = net.xfers.len();
+                net.xfers.push(Xfer {
+                    payload: Payload::Ring(c),
+                    res: self.costs.cluster.resources_of(hop.link),
+                    remaining: hop.work,
+                    version: 0,
+                    done: false,
+                });
+                self.heap.push(Event { time: at, kind: EvKind::XferStart { id } });
+            }
+        }
+    }
+
+    /// The last ring flow of collective `c` drained at `t`: the collective
+    /// is done — record it, free the member comm engines, wake the parked
+    /// waiters, and let queued successors launch.
+    fn complete_collective(&mut self, c: usize, t: f64) {
+        let (stage, round) = (self.colls[c].stage, self.colls[c].round);
+        let members = std::mem::take(&mut self.colls[c].members);
+        for &g in &members {
+            let head = self.comm_q[g].pop_front();
+            debug_assert_eq!(head, Some(c), "comm queue out of order");
+            // max: an analytic collective (unmappable hand-built group) may
+            // have already pushed comm_free past this ring's completion.
+            self.comm_free[g] = self.comm_free[g].max(t);
+        }
+        self.colls[c].members = members;
+        let st = self.ar.get_mut(&(stage, round)).expect("collective state exists");
+        st.done = Some(t);
+        let waiters = std::mem::take(&mut st.waiters);
+        for w in waiters {
+            self.heap.push(Event { time: t.max(self.now[w]), kind: EvKind::Dev(w) });
+        }
+        self.try_launch_collectives(t);
+    }
+
     /// Record an `AllReduceStart`; on the last member, price the collective
-    /// and wake the parked waiters.
+    /// (analytically, or — under full contention — by lowering its ring
+    /// onto the wire) and wake the parked waiters when its completion is
+    /// already known.
     fn allreduce_start(&mut self, dev: usize, stage: StageId) {
         self.now[dev] += LAUNCH;
         let round = {
@@ -518,6 +732,43 @@ impl<'a> Engine<'a> {
             return;
         }
         let launched = st.launched.iter().map(|&(_, t)| t).fold(0.0f64, f64::max);
+        if self.mode == Contention::Full {
+            // Flow lowering: completion is decided on the wire. Waiters
+            // stay parked in `st.waiters` until the last ring flow drains.
+            // Out-of-table stages (hand-built streams) get a fallback ring
+            // over the engine's own group so every nonzero collective goes
+            // through the same comm-queue serialization.
+            let costs = self.costs;
+            let hops: Vec<super::cost::RingHop> = match costs.ring_hops(stage) {
+                Some(h) => h.to_vec(),
+                None => costs.fallback_ring_hops(&self.groups[stage]),
+            };
+            if !hops.is_empty() {
+                let members = self.groups[stage].clone();
+                let c = self.colls.len();
+                self.colls.push(Coll {
+                    stage,
+                    round,
+                    gate: launched,
+                    members: members.clone(),
+                    flows_left: hops.len(),
+                    hops,
+                });
+                for &g in &members {
+                    self.comm_q[g].push_back(c);
+                }
+                self.pending.push(c);
+                self.try_launch_collectives(launched);
+                return;
+            }
+        }
+        // Analytic pricing (contention off / P2P-only; zero-duration
+        // collectives; unmappable hand-built groups). Known limit: under
+        // Full, an unmappable group (a member device beyond the cost
+        // model's pipeline depth — impossible for generated schedules)
+        // prices against comm_free, which in-flight ring flows only write
+        // at completion, so such a collective may overlap a ring on the
+        // shared engine instead of queueing behind it.
         let waiters = std::mem::take(&mut st.waiters);
         let engine = group.iter().map(|&g| self.comm_free[g]).fold(0.0f64, f64::max);
         let done = launched.max(engine) + self.costs.allreduce_time(stage);
@@ -644,16 +895,28 @@ pub fn simulate_schedule(s: &Schedule, costs: &CostModel) -> Result<SimTrace, Si
     simulate_schedule_with(s, costs, false)
 }
 
-/// Single-iteration run with an explicit contention mode: `contention`
-/// true prices concurrent transfers on one physical link at a fair share
-/// of its bandwidth (see the module docs), false reproduces the
-/// fixed-duration engine bit for bit.
+/// Single-iteration run with an explicit contention flag: `contention`
+/// true prices concurrent transfers *and* all-reduce ring flows at a fair
+/// share of the wires they cross ([`Contention::Full`]; see the module
+/// docs), false reproduces the fixed-duration engine bit for bit.
 pub fn simulate_schedule_with(
     s: &Schedule,
     costs: &CostModel,
     contention: bool,
 ) -> Result<SimTrace, SimError> {
-    let t = simulate_schedule_iters_with(s, costs, 1, contention)?;
+    let mode = if contention { Contention::Full } else { Contention::Off };
+    simulate_schedule_contended(s, costs, mode)
+}
+
+/// Single-iteration run with the full three-way contention mode, exposing
+/// [`Contention::P2pOnly`] — the PR-2 midpoint the differential battery
+/// pins between `Off` and `Full`.
+pub fn simulate_schedule_contended(
+    s: &Schedule,
+    costs: &CostModel,
+    mode: Contention,
+) -> Result<SimTrace, SimError> {
+    let t = simulate_schedule_iters_contended(s, costs, 1, mode)?;
     Ok(SimTrace { devices: t.devices, makespan: t.makespan })
 }
 
@@ -670,7 +933,7 @@ pub fn simulate_schedule_iters(
     simulate_schedule_iters_with(s, costs, iters, false)
 }
 
-/// Multi-iteration run with an explicit contention mode (see
+/// Multi-iteration run with an explicit contention flag (see
 /// [`simulate_schedule_with`]).
 pub fn simulate_schedule_iters_with(
     s: &Schedule,
@@ -678,12 +941,24 @@ pub fn simulate_schedule_iters_with(
     iters: usize,
     contention: bool,
 ) -> Result<MultiIterTrace, SimError> {
+    let mode = if contention { Contention::Full } else { Contention::Off };
+    simulate_schedule_iters_contended(s, costs, iters, mode)
+}
+
+/// Multi-iteration run with the full three-way contention mode (see
+/// [`simulate_schedule_contended`]).
+pub fn simulate_schedule_iters_contended(
+    s: &Schedule,
+    costs: &CostModel,
+    iters: usize,
+    mode: Contention,
+) -> Result<MultiIterTrace, SimError> {
     assert!(iters >= 1, "need at least one iteration");
     assert!(
         !s.device_ops.is_empty(),
         "schedule has no device_ops; run comm_pass first"
     );
-    Engine::new(s, costs, iters, contention).run()
+    Engine::new(s, costs, iters, mode).run()
 }
 
 /// The pre-event-queue executor: an O(D × total_ops) round-robin spin loop,

@@ -28,7 +28,10 @@
 //! Contended sweeps ([`grid_search_opts`] with `contention: true`) still
 //! run the event engine — the only backend that prices link sharing —
 //! fanned out over scoped worker threads with an atomic work-stealing
-//! cursor.
+//! cursor. Since the collectives landed on the wire, a contended sweep
+//! ranks layouts under the full model: all-reduce ring flows squeeze the
+//! P2P traffic they overlap, and per-node NIC aggregation penalizes
+//! layouts that fan a node's traffic out to many peers.
 
 use super::{
     assemble_result, memory_footprint, memory_footprint_from_counts, run_streams, simulate,

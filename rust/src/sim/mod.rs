@@ -20,16 +20,25 @@
 //! concurrent messages at full bandwidth) — fast, and bit-stable against
 //! the legacy reference executor. Setting [`SimConfig::contention`] (CLI:
 //! `bitpipe simulate --contention`) switches the engine to a flow-level
-//! fair-share model: concurrent transfers on the same directed physical
-//! pipe ([`crate::config::LinkId`] — per-device-pair NVLink paths,
-//! per-node-pair Infiniband pipes) split its bandwidth, and in-flight
-//! completion times are re-projected whenever a flow starts or ends. This
-//! prices exactly the traffic BitPipe's V-shaped twin pipes concentrate on
-//! the inter-node links at the fold, where the fixed-duration model
-//! systematically underestimates communication time. Contended makespans
-//! are deterministic and never below the uncontended makespan for the
-//! same schedule (a solo flow reproduces the fixed-duration arrival bit
-//! for bit). See `sim::engine`'s module docs for the mechanics.
+//! fair-share model over shared physical resources
+//! ([`crate::config::ResourceId`]): per-device-pair NVLink paths inside a
+//! node, and one egress + one ingress NIC per node for Infiniband
+//! (default [`crate::config::IbModel::NodeNic`]; the legacy independent
+//! node-pair pipes survive behind `IbModel::NodePair`). Concurrent flows
+//! sharing a resource split its bandwidth, and in-flight completion times
+//! are re-projected whenever a flow starts or ends. All-reduce
+//! collectives ride the same wires: each (stage, round) collective lowers
+//! into one flow per directed hop of its physical ring path
+//! ([`CostModel::ring_hops`]), contending with P2P traffic and with other
+//! rings — exactly the gradient synchronization BitPipe hides inside
+//! pipeline bubbles, which a scalar formula could never see squeeze the
+//! P2P flows it overlaps. Contended makespans are deterministic and never
+//! below the uncontended makespan for the same schedule (a solo flow — or
+//! a solo ring on an idle network — reproduces the fixed-duration pricing
+//! bit for bit). The intermediate [`Contention::P2pOnly`] mode (P2P flows
+//! contend, collectives stay scalar) is kept as the differential midpoint
+//! the test battery pins: `uncontended <= p2p-only <= full`. See
+//! `sim::engine`'s module docs for the mechanics.
 //!
 //! # Evaluation backends
 //!
@@ -54,12 +63,13 @@ mod engine;
 mod gridsearch;
 mod memory;
 
-pub use cost::{CostModel, LinkTopology, P2pEdge};
+pub use cost::{CostModel, LinkTopology, P2pEdge, RingHop};
 pub use dag::{CompiledDag, DagUnsupported, DagWeights};
 pub use engine::{
-    simulate_schedule, simulate_schedule_iters, simulate_schedule_iters_with,
-    simulate_schedule_reference, simulate_schedule_with, DeviceTrace, MultiIterTrace, SimError,
-    SimTrace,
+    simulate_schedule, simulate_schedule_contended, simulate_schedule_iters,
+    simulate_schedule_iters_contended, simulate_schedule_iters_with,
+    simulate_schedule_reference, simulate_schedule_with, Contention, DeviceTrace,
+    MultiIterTrace, SimError, SimTrace,
 };
 pub use gridsearch::{
     grid_search, grid_search_cached, grid_search_opts, grid_search_serial, DagCache, GridPoint,
@@ -93,9 +103,11 @@ pub struct SimConfig {
     pub model: ModelConfig,
     pub parallel: ParallelConfig,
     pub cluster: ClusterConfig,
-    /// Price link contention (flow-level fair-share bandwidth sharing).
-    /// Off by default: the fixed-duration engines are faster and bit-stable
-    /// against `simulate_schedule_reference`.
+    /// Price link contention (flow-level fair-share bandwidth sharing of
+    /// NVLink paths and per-node NICs, by P2P transfers *and* all-reduce
+    /// ring flows — [`Contention::Full`]). Off by default: the
+    /// fixed-duration engines are faster and bit-stable against
+    /// `simulate_schedule_reference`.
     pub contention: bool,
     /// Backend selection; [`Engine::Auto`] resolves to Dag without
     /// contention, Event with it.

@@ -1,14 +1,16 @@
-//! Integration tests for the flow-level link-contention model: a pinned
-//! bandwidth-sharing scenario over one Infiniband pipe, and the
-//! monotonicity property (contended makespan >= uncontended makespan)
+//! Integration tests for the flow-level link-contention model: pinned
+//! bandwidth-sharing scenarios (two P2P transfers over one NIC pair, a
+//! node fanning out to two peers, two all-reduce rings through one NIC),
+//! solo-ring bit-equality against the scalar formula, and the
+//! monotonicity ladder `uncontended <= p2p-only <= fully contended`
 //! across every schedule family x N in {4, 8, 16}, on both single-node
 //! (NVLink-only) and multi-node (IB at the V-fold) cost models.
 
-use bitpipe::config::{ClusterConfig, MappingPolicy, ParallelConfig, BERT_64};
+use bitpipe::config::{ClusterConfig, IbModel, MappingPolicy, ParallelConfig, BERT_64};
 use bitpipe::schedule::{build, placement_for, Instr, Schedule, ScheduleConfig, ScheduleKind};
 use bitpipe::sim::{
-    simulate_schedule, simulate_schedule_iters, simulate_schedule_iters_with,
-    simulate_schedule_with, CostModel,
+    simulate_schedule, simulate_schedule_contended, simulate_schedule_iters,
+    simulate_schedule_iters_with, simulate_schedule_with, Contention, CostModel,
 };
 
 /// Hand-built four-device schedule: transfers 0->2 and (optionally) 1->3,
@@ -69,10 +71,13 @@ fn costs_for(kind: ScheduleKind, d: usize, n: usize, multi_node: bool) -> CostMo
 }
 
 #[test]
-fn contended_makespan_never_below_uncontended() {
+fn contention_modes_form_a_monotone_ladder() {
     // The issue's property, exhaustively: every schedule family x
     // N in {4, 8, 16} (D = 4 and the paper-default D = 8 where N >= D
-    // allows), single- and multi-node cost models.
+    // allows), single- and multi-node cost models. Turning contention up
+    // one traffic class at a time can only slow an iteration down:
+    // uncontended <= P2P-contended <= P2P+collective-contended, and the
+    // fully contended run is deterministic.
     for kind in ScheduleKind::ALL {
         for d in [4usize, 8] {
             for n in [4usize, 8, 16] {
@@ -83,18 +88,234 @@ fn contended_makespan_never_below_uncontended() {
                 for multi_node in [false, true] {
                     let c = costs_for(kind, d, n, multi_node);
                     let off = simulate_schedule(&s, &c).unwrap();
-                    let on = simulate_schedule_with(&s, &c, true).unwrap();
+                    let p2p = simulate_schedule_contended(&s, &c, Contention::P2pOnly).unwrap();
+                    let full = simulate_schedule_contended(&s, &c, Contention::Full).unwrap();
+                    let tag = format!("{kind} D={d} N={n} multi_node={multi_node}");
                     assert!(
-                        on.makespan >= off.makespan - 1e-12,
-                        "{kind} D={d} N={n} multi_node={multi_node}: \
-                         contended {} < uncontended {}",
-                        on.makespan,
+                        p2p.makespan >= off.makespan - 1e-12,
+                        "{tag}: p2p-contended {} < uncontended {}",
+                        p2p.makespan,
                         off.makespan
+                    );
+                    assert!(
+                        full.makespan >= p2p.makespan - 1e-12,
+                        "{tag}: fully contended {} < p2p-contended {}",
+                        full.makespan,
+                        p2p.makespan
+                    );
+                    let full2 = simulate_schedule_with(&s, &c, true).unwrap();
+                    assert_eq!(
+                        full.makespan.to_bits(),
+                        full2.makespan.to_bits(),
+                        "{tag}: contended run not deterministic"
                     );
                 }
             }
         }
     }
+}
+
+/// Hand-built schedule running only collectives: each listed stage's twin
+/// devices start and wait on its all-reduce, `rounds` times back to back.
+/// Placement: Chimera D=8 (stage s on devices {s, 7-s}); the cluster packs
+/// 4 devices per node, so every twin pair straddles the node boundary and
+/// its ring crosses the Infiniband NICs.
+fn rings_only_schedule(stages: &[usize], rounds: usize) -> (Schedule, CostModel) {
+    let placement = placement_for(ScheduleKind::Chimera, 8, 1);
+    let cfg = ScheduleConfig::new(ScheduleKind::Chimera, 8, 8);
+    let mut device_ops = vec![Vec::new(); 8];
+    for &stage in stages {
+        for dev in [stage, 7 - stage] {
+            for _ in 0..rounds {
+                device_ops[dev].push(Instr::AllReduceStart { stage });
+                device_ops[dev].push(Instr::AllReduceWait { stage });
+            }
+        }
+    }
+    let s = Schedule {
+        cfg,
+        placement,
+        compute_order: vec![Vec::new(); 8],
+        device_ops,
+        pipe_of_mb: vec![0; 8],
+    };
+    let p = ParallelConfig::new(ScheduleKind::Chimera, 1, 8, 4, 8);
+    let cluster = ClusterConfig { n_devices: 8, devices_per_node: 4, ..Default::default() };
+    (s, CostModel::new(&BERT_64, &p, &cluster))
+}
+
+#[test]
+fn solo_ring_reproduces_scalar_formula_bitwise() {
+    // The acceptance anchor: a single all-reduce ring on an otherwise idle
+    // network must complete in exactly the scalar formula's duration — the
+    // contended run is bit-identical to the uncontended one. Three
+    // back-to-back rounds also pin the comm-engine queue: each round's
+    // flows launch at the previous round's completion, exactly the
+    // analytic `comm_free` chain.
+    for rounds in [1usize, 3] {
+        let (s, c) = rings_only_schedule(&[1], rounds);
+        let off = simulate_schedule(&s, &c).unwrap();
+        let on = simulate_schedule_with(&s, &c, true).unwrap();
+        assert_eq!(
+            on.makespan.to_bits(),
+            off.makespan.to_bits(),
+            "rounds={rounds}: solo ring drifted from the scalar formula"
+        );
+        for (a, b) in on.devices.iter().zip(&off.devices) {
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+            assert_eq!(a.allreduce_blocked.to_bits(), b.allreduce_blocked.to_bits());
+        }
+        assert!(on.makespan > 0.0);
+    }
+}
+
+#[test]
+fn out_of_table_collectives_serialize_with_ring_flows() {
+    // A hand-built stream whose placement has more stages than the cost
+    // model (placement v=2, costs v=1): stage 1 is ring-lowered from the
+    // table, stage 9 falls outside it and takes the engine-group fallback
+    // ring. Both sit on the same twin devices, so under full contention
+    // they must serialize through the comm queues exactly like the
+    // analytic comm_free chain — on an idle network, bit-identically.
+    let placement = placement_for(ScheduleKind::BitPipe, 8, 2);
+    let cfg = ScheduleConfig::new(ScheduleKind::BitPipe, 8, 8);
+    let mut device_ops = vec![Vec::new(); 8];
+    for dev in [1usize, 6] {
+        device_ops[dev] = vec![
+            Instr::AllReduceStart { stage: 1 },
+            Instr::AllReduceStart { stage: 9 },
+            Instr::AllReduceWait { stage: 1 },
+            Instr::AllReduceWait { stage: 9 },
+        ];
+    }
+    let s = Schedule {
+        cfg,
+        placement,
+        compute_order: vec![Vec::new(); 8],
+        device_ops,
+        pipe_of_mb: vec![0; 8],
+    };
+    let mut p = ParallelConfig::new(ScheduleKind::BitPipe, 1, 8, 4, 8);
+    p.v = 1; // cost model sees 8 stages; the placement has 16
+    let cluster = ClusterConfig { n_devices: 8, devices_per_node: 4, ..Default::default() };
+    let c = CostModel::new(&BERT_64, &p, &cluster);
+    assert!(c.ring_hops(9).is_none(), "stage 9 must be outside the cost table");
+    let off = simulate_schedule(&s, &c).unwrap();
+    let on = simulate_schedule_with(&s, &c, true).unwrap();
+    assert_eq!(
+        on.makespan.to_bits(),
+        off.makespan.to_bits(),
+        "queued in-table + fallback rings on an idle network must match the analytic chain"
+    );
+    assert!(on.makespan > 1.5 * c.allreduce_time(1), "two collectives must serialize");
+}
+
+#[test]
+fn pinned_two_rings_share_one_nic_pair() {
+    // Two concurrent body-stage rings (disjoint member devices, so no
+    // comm-engine serialization) both cross the node0<->node1 NIC pair:
+    // under full contention each ring's two IB hops share the two NICs
+    // with the other ring's, so both take ~2x their solo duration.
+    let (solo_s, c) = rings_only_schedule(&[1], 1);
+    let (both_s, _) = rings_only_schedule(&[1, 2], 1);
+    let solo = simulate_schedule_with(&solo_s, &c, true).unwrap().makespan;
+    let off = simulate_schedule(&both_s, &c).unwrap().makespan;
+    let on = simulate_schedule_with(&both_s, &c, true).unwrap().makespan;
+    assert!(off / solo < 1.05, "scalar pricing: {off} vs solo {solo}");
+    let ratio = on / solo;
+    assert!(
+        (1.95..=2.05).contains(&ratio),
+        "two rings through one NIC pair: ratio {ratio} ({on} vs solo {solo})"
+    );
+}
+
+#[test]
+fn ring_flows_squeeze_concurrent_p2p() {
+    // A body-stage ring (devices {1, 6}) and a P2P transfer 2 -> 5 cross
+    // the same node0 -> node1 NICs. Under P2pOnly the collective is scalar
+    // and invisible to the flow network; under Full its ring flows halve
+    // the P2P transfer's bandwidth — the fidelity gap this PR closes.
+    let placement = placement_for(ScheduleKind::Chimera, 8, 1);
+    let cfg = ScheduleConfig::new(ScheduleKind::Chimera, 8, 8);
+    let mut device_ops = vec![Vec::new(); 8];
+    for dev in [1usize, 6] {
+        device_ops[dev].push(Instr::AllReduceStart { stage: 1 });
+        device_ops[dev].push(Instr::AllReduceWait { stage: 1 });
+    }
+    device_ops[2] = vec![Instr::SendAct { to: 5, pipe: 0, stage: 2, mb: 0 }];
+    device_ops[5] = vec![Instr::RecvAct { from: 2, pipe: 0, stage: 3, mb: 0 }];
+    let s = Schedule {
+        cfg,
+        placement,
+        compute_order: vec![Vec::new(); 8],
+        device_ops,
+        pipe_of_mb: vec![0; 8],
+    };
+    let p = ParallelConfig::new(ScheduleKind::Chimera, 1, 8, 4, 8);
+    let cluster = ClusterConfig { n_devices: 8, devices_per_node: 4, ..Default::default() };
+    let c = CostModel::new(&BERT_64, &p, &cluster);
+    let p2p_only = simulate_schedule_contended(&s, &c, Contention::P2pOnly).unwrap();
+    let full = simulate_schedule_contended(&s, &c, Contention::Full).unwrap();
+    assert!(
+        full.devices[5].finish > 1.5 * p2p_only.devices[5].finish,
+        "receiver finish: full {} vs p2p-only {}",
+        full.devices[5].finish,
+        p2p_only.devices[5].finish
+    );
+}
+
+#[test]
+fn node_fanout_shares_one_egress_nic() {
+    // One node fans out to two different peer nodes. Under the default
+    // NIC-aggregation model both flows ride the node's single egress NIC
+    // (~2x solo); the legacy per-node-pair model keeps them independent
+    // (~1x) — preserved behind `IbModel::NodePair` for differential
+    // comparison.
+    let build_case = |both: bool| {
+        let placement = placement_for(ScheduleKind::Dapple, 6, 1);
+        let cfg = ScheduleConfig::new(ScheduleKind::Dapple, 6, 6);
+        let mut device_ops = vec![Vec::new(); 6];
+        device_ops[0].push(Instr::SendAct { to: 2, pipe: 0, stage: 0, mb: 0 });
+        device_ops[2] = vec![Instr::RecvAct { from: 0, pipe: 0, stage: 1, mb: 0 }];
+        if both {
+            device_ops[0].push(Instr::SendAct { to: 4, pipe: 0, stage: 0, mb: 1 });
+            device_ops[4] = vec![Instr::RecvAct { from: 0, pipe: 0, stage: 1, mb: 1 }];
+        }
+        Schedule {
+            cfg,
+            placement,
+            compute_order: vec![Vec::new(); 6],
+            device_ops,
+            pipe_of_mb: vec![0; 6],
+        }
+    };
+    let costs_with = |ib_model: IbModel| {
+        let p = ParallelConfig::new(ScheduleKind::Dapple, 1, 6, 4, 6);
+        let cluster =
+            ClusterConfig { n_devices: 6, devices_per_node: 2, ib_model, ..Default::default() };
+        CostModel::new(&BERT_64, &p, &cluster)
+    };
+    let solo_s = build_case(false);
+    let both_s = build_case(true);
+
+    let nic = costs_with(IbModel::NodeNic);
+    let solo = simulate_schedule_with(&solo_s, &nic, true).unwrap().makespan;
+    let shared = simulate_schedule_with(&both_s, &nic, true).unwrap().makespan;
+    let ratio = shared / solo;
+    assert!(
+        (1.9..=2.1).contains(&ratio),
+        "NIC aggregation: fan-out ratio {ratio} ({shared} vs solo {solo})"
+    );
+
+    let pair = costs_with(IbModel::NodePair);
+    let solo_pair = simulate_schedule_with(&solo_s, &pair, true).unwrap().makespan;
+    let both_pair = simulate_schedule_with(&both_s, &pair, true).unwrap().makespan;
+    assert!(
+        both_pair / solo_pair < 1.05,
+        "per-pair model must keep fan-out independent: {both_pair} vs {solo_pair}"
+    );
+    // Distinct node pairs price identically in both models when alone.
+    assert_eq!(solo.to_bits(), solo_pair.to_bits());
 }
 
 #[test]

@@ -5,7 +5,7 @@
 //! report the same deadlocks. Random configurations are drawn through the
 //! in-tree property harness (`bitpipe::util::prop`) and shrunk on failure.
 
-use bitpipe::config::{ClusterConfig, ParallelConfig, BERT_64};
+use bitpipe::config::{ClusterConfig, MappingPolicy, ParallelConfig, BERT_64};
 use bitpipe::schedule::{build, ScheduleConfig, ScheduleKind, SyncPolicy};
 use bitpipe::sim::{
     simulate_schedule, simulate_schedule_iters, CompiledDag, CostModel,
@@ -70,24 +70,43 @@ fn costs_for(cfg: &ScheduleConfig, b: usize) -> CostModel {
     CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(cfg.d))
 }
 
+/// Cost model with expensive collectives (W=4 over IB via PipesTogether):
+/// the eager streams then thread one heavyweight all-reduce per stage
+/// through the DAG's collective barrier + comm-engine chain nodes.
+fn collective_heavy_costs(cfg: &ScheduleConfig) -> CostModel {
+    let p = ParallelConfig::new(cfg.kind, 4, cfg.d, 4, cfg.n);
+    let mut cluster = ClusterConfig::paper_testbed(4 * cfg.d);
+    cluster.mapping = MappingPolicy::PipesTogether;
+    CostModel::new(&BERT_64, &p, &cluster)
+}
+
 /// Bit-exact agreement between the compiled DAG and the event engine on
 /// one (schedule, cost model, iters) point.
 fn check_equivalence(cfg: &ScheduleConfig, b: usize, iters: usize) -> Result<(), String> {
-    let s = build(cfg).map_err(|e| format!("{cfg:?}: build failed: {e}"))?;
     let c = costs_for(cfg, b);
+    check_equivalence_with(cfg, &c, iters)
+}
+
+/// [`check_equivalence`] under an explicit cost model.
+fn check_equivalence_with(
+    cfg: &ScheduleConfig,
+    c: &CostModel,
+    iters: usize,
+) -> Result<(), String> {
+    let s = build(cfg).map_err(|e| format!("{cfg:?}: build failed: {e}"))?;
     let dag = CompiledDag::compile(&s)
         .map_err(|e| format!("{cfg:?}: dag compile refused a generated schedule: {e}"))?;
     if !dag.multi_iter_safe() {
         return Err(format!("{cfg:?}: generated schedule flagged multi-iteration unsafe"));
     }
     let got = dag
-        .evaluate(&dag.weights(&c), iters)
+        .evaluate(&dag.weights(c), iters)
         .map_err(|e| format!("{cfg:?}: dag evaluate: {e}"))?;
-    let want = simulate_schedule_iters(&s, &c, iters)
+    let want = simulate_schedule_iters(&s, c, iters)
         .map_err(|e| format!("{cfg:?}: event engine: {e}"))?;
     if got.makespan.to_bits() != want.makespan.to_bits() {
         return Err(format!(
-            "{cfg:?} B={b} iters={iters}: dag makespan {} != event {}",
+            "{cfg:?} iters={iters}: dag makespan {} != event {}",
             got.makespan, want.makespan
         ));
     }
@@ -156,6 +175,26 @@ fn dag_matches_event_engine_random() {
         let iters = if draw.n_idx % 2 == 0 { 1 } else { 2 };
         check_equivalence(&cfg_of(draw), BS[draw.b_idx], iters)
     });
+}
+
+#[test]
+fn dag_matches_event_engine_collective_heavy_multi_iter() {
+    // Banked differential coverage toward retiring the reference executor:
+    // the acceptance grid priced with W=4 IB collectives, eager sync,
+    // unrolled over 3 iterations — the heaviest traffic the collective
+    // barrier/chain machinery sees, bit-exact on both backends.
+    for kind in ScheduleKind::ALL {
+        for &d in &DS {
+            for &n in &NS {
+                if n < d {
+                    continue;
+                }
+                let cfg = ScheduleConfig::new(kind, d, n);
+                let c = collective_heavy_costs(&cfg);
+                check_equivalence_with(&cfg, &c, 3).unwrap_or_else(|e| panic!("{e}"));
+            }
+        }
+    }
 }
 
 #[test]

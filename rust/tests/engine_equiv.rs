@@ -5,7 +5,7 @@
 //! case. Random configurations are drawn through the in-tree property
 //! harness (`bitpipe::util::prop`) and shrunk on failure.
 
-use bitpipe::config::{ClusterConfig, ParallelConfig, BERT_64};
+use bitpipe::config::{ClusterConfig, MappingPolicy, ParallelConfig, BERT_64};
 use bitpipe::schedule::{build, ScheduleConfig, ScheduleKind, SyncPolicy};
 use bitpipe::sim::{
     simulate_schedule, simulate_schedule_iters, simulate_schedule_reference, CostModel,
@@ -63,12 +63,27 @@ fn costs_for(cfg: &ScheduleConfig) -> CostModel {
     CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(cfg.d))
 }
 
+/// Cost model with expensive collectives: W=4 data parallelism under the
+/// PipesTogether mapping routes every all-reduce ring over Infiniband, so
+/// the collective state machinery carries real weight in the comparison.
+fn collective_heavy_costs(cfg: &ScheduleConfig) -> CostModel {
+    let p = ParallelConfig::new(cfg.kind, 4, cfg.d, 4, cfg.n);
+    let mut cluster = ClusterConfig::paper_testbed(4 * cfg.d);
+    cluster.mapping = MappingPolicy::PipesTogether;
+    CostModel::new(&BERT_64, &p, &cluster)
+}
+
 /// Relative makespan agreement between the two executors.
 fn check_equivalence(cfg: &ScheduleConfig) -> Result<(), String> {
-    let s = build(cfg).map_err(|e| format!("{cfg:?}: build failed: {e}"))?;
     let c = costs_for(cfg);
-    let new = simulate_schedule(&s, &c).map_err(|e| format!("{cfg:?}: event-queue: {e}"))?;
-    let old = simulate_schedule_reference(&s, &c)
+    check_equivalence_with(cfg, &c)
+}
+
+/// [`check_equivalence`] under an explicit cost model.
+fn check_equivalence_with(cfg: &ScheduleConfig, c: &CostModel) -> Result<(), String> {
+    let s = build(cfg).map_err(|e| format!("{cfg:?}: build failed: {e}"))?;
+    let new = simulate_schedule(&s, c).map_err(|e| format!("{cfg:?}: event-queue: {e}"))?;
+    let old = simulate_schedule_reference(&s, c)
         .map_err(|e| format!("{cfg:?}: reference: {e}"))?;
     let rel = (new.makespan - old.makespan).abs() / old.makespan.max(1e-12);
     if rel > 1e-9 {
@@ -109,6 +124,29 @@ fn event_queue_matches_reference_exhaustive() {
                 }
                 let cfg = ScheduleConfig::new(kind, d, n);
                 check_equivalence(&cfg).unwrap_or_else(|e| panic!("{e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn event_queue_matches_reference_collective_heavy() {
+    // Banked differential coverage toward retiring the reference executor:
+    // the same exhaustive grid priced with W=4 IB collectives (the eager
+    // streams then carry one expensive all-reduce per stage through the
+    // comm-engine serialization), plus the lazy end-of-stream chains.
+    for kind in ScheduleKind::ALL {
+        for &d in &DS {
+            for &n in &NS {
+                if n < d {
+                    continue;
+                }
+                for lazy in [false, true] {
+                    let sync = if lazy { SyncPolicy::Lazy } else { SyncPolicy::Eager };
+                    let cfg = ScheduleConfig::new(kind, d, n).with_sync(sync);
+                    let c = collective_heavy_costs(&cfg);
+                    check_equivalence_with(&cfg, &c).unwrap_or_else(|e| panic!("{e}"));
+                }
             }
         }
     }
