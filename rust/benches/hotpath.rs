@@ -13,14 +13,23 @@
 //! `--test` runs every case exactly once with no timing budget — a cheap
 //! compile-and-execute gate that keeps the benches from rotting without
 //! spending CI minutes on stable numbers.
+//!
+//! Every run also writes `BENCH_hotpath.json` next to the manifest: one
+//! entry per case (median ns + run count) plus the named speedup ratios
+//! (dag cold/warm vs event-serial, contended StreamCache cold/warm vs the
+//! PR-4 `grid_search_opts` baseline), so the perf trajectory is recorded
+//! machine-readably instead of scrolling away in CI logs (CI uploads the
+//! file as an artifact). Smoke-mode numbers are single-run and flagged
+//! `"smoke": true` — useful for wiring checks, not for comparisons.
 
 use bitpipe::collective::ring_allreduce;
 use bitpipe::comm::{Fabric, Tag};
 use bitpipe::config::{ClusterConfig, ParallelConfig, BERT_64};
 use bitpipe::schedule::{self, retime, Costs, ScheduleConfig, ScheduleKind};
 use bitpipe::sim::{
-    grid_search, grid_search_cached, grid_search_opts, grid_search_serial, simulate_schedule,
-    simulate_schedule_iters, simulate_schedule_with, CompiledDag, CostModel, DagCache, GridSpace,
+    grid_search, grid_search_cached, grid_search_contended_cached, grid_search_opts,
+    grid_search_opts_baseline, grid_search_serial, simulate_schedule, simulate_schedule_iters,
+    simulate_schedule_with, CompiledDag, CostModel, DagCache, GridSpace, StreamCache,
 };
 use bitpipe::train::optim::{Adam, AdamConfig};
 use std::time::{Duration, Instant};
@@ -48,13 +57,66 @@ fn bench<F: FnMut()>(budget: Duration, mut f: F) -> (Duration, usize) {
     (samples[samples.len() / 2], samples.len())
 }
 
-fn report(name: &str, med: Duration, iters: usize, note: &str) {
-    println!("{name:<44} {med:>12.3?} /op   ({iters} runs){note}");
+/// Collects every case and named speedup for `BENCH_hotpath.json`.
+struct Recorder {
+    smoke: bool,
+    cases: Vec<(String, u128, usize)>,
+    speedups: Vec<(String, f64)>,
+}
+
+impl Recorder {
+    fn new(smoke: bool) -> Recorder {
+        Recorder { smoke, cases: Vec::new(), speedups: Vec::new() }
+    }
+
+    /// Print the human line and record the machine one.
+    fn case(&mut self, name: &str, med: Duration, iters: usize, note: &str) {
+        println!("{name:<44} {med:>12.3?} /op   ({iters} runs){note}");
+        self.cases.push((name.to_string(), med.as_nanos(), iters));
+    }
+
+    fn speedup(&mut self, name: &str, ratio: f64) {
+        self.speedups.push((name.to_string(), ratio));
+    }
+
+    /// Hand-rolled JSON (nothing to vendor): case names are plain ASCII
+    /// identifiers/labels, so escaping quotes and backslashes suffices.
+    fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"smoke\": {},\n", self.smoke));
+        out.push_str("  \"cases\": [\n");
+        for (i, (name, ns, runs)) in self.cases.iter().enumerate() {
+            let comma = if i + 1 < self.cases.len() { "," } else { "" };
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"median_ns\": {ns}, \"runs\": {runs}}}{comma}\n",
+                esc(name)
+            ));
+        }
+        out.push_str("  ],\n  \"speedups\": {\n");
+        for (i, (name, ratio)) in self.speedups.iter().enumerate() {
+            let comma = if i + 1 < self.speedups.len() { "," } else { "" };
+            out.push_str(&format!("    \"{}\": {ratio:.4}{comma}\n", esc(name)));
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    fn write(&self) {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_hotpath.json");
+        match std::fs::write(path, self.to_json()) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => println!("\nWARNING: could not write {path}: {e}"),
+        }
+    }
 }
 
 fn main() {
     // `cargo bench ... -- --test` => smoke mode: every case once, no timing.
     let smoke = std::env::args().any(|a| a == "--test");
+    let mut rec = Recorder::new(smoke);
     let scaled = |d: Duration| if smoke { Duration::ZERO } else { d };
     let budget = scaled(Duration::from_millis(600));
     if smoke {
@@ -74,7 +136,7 @@ fn main() {
         let (med, iters) = bench(budget, || {
             let _ = schedule::build(&cfg).unwrap();
         });
-        report(&format!("schedule::build {kind} D={d} N={n}"), med, iters, "");
+        rec.case(&format!("schedule::build {kind} D={d} N={n}"), med, iters, "");
     }
 
     // Re-timing.
@@ -83,7 +145,7 @@ fn main() {
     let (med, iters) = bench(budget, || {
         let _ = retime(&s.compute_order, &s.placement, &costs).unwrap();
     });
-    report("retime bitpipe D=8 N=32 (1024 ops)", med, iters, "");
+    rec.case("retime bitpipe D=8 N=32 (1024 ops)", med, iters, "");
 
     // Discrete-event simulation of a full iteration.
     let p = ParallelConfig::new(ScheduleKind::BitPipe, 4, 8, 4, 32);
@@ -92,7 +154,7 @@ fn main() {
         let _ = simulate_schedule(&s, &cm).unwrap();
     });
     let per_device_step = med.as_nanos() as f64 / (32.0 * 8.0);
-    report(
+    rec.case(
         "simulate_schedule D=8 N=32",
         med,
         iters,
@@ -105,33 +167,35 @@ fn main() {
     let (med, iters) = bench(budget, || {
         let _ = CompiledDag::compile(&s).unwrap();
     });
-    report("dag compile D=8 N=32", med, iters, "");
+    rec.case("dag compile D=8 N=32", med, iters, "");
     let dag = CompiledDag::compile(&s).unwrap();
     let (med, iters) = bench(budget, || {
         let w = dag.weights(&cm);
         let _ = dag.evaluate(&w, 1).unwrap();
     });
     let evspeed = med_event_sim.as_secs_f64() / med.as_secs_f64().max(1e-12);
-    report(
+    rec.case(
         "dag re-cost+evaluate D=8 N=32",
         med,
         iters,
         &format!("  [{evspeed:.1}x vs event engine]"),
     );
+    rec.speedup("dag_recost_vs_event_sim", evspeed);
 
     // Same iteration with flow-level link contention: the fair-share
-    // network adds transfer start/completion events and re-projections.
+    // network adds transfer start/completion events and re-projections
+    // (incremental settlement since PR 5).
     let (med, iters) = bench(budget, || {
         let _ = simulate_schedule_with(&s, &cm, true).unwrap();
     });
-    report("simulate_schedule D=8 N=32 (contention)", med, iters, "");
+    rec.case("simulate_schedule D=8 N=32 (contention)", med, iters, "");
 
     // Multi-iteration run: 4 back-to-back iterations through the
     // event-queue engine (per-iteration steady-state stats).
     let (med, iters) = bench(budget, || {
         let _ = simulate_schedule_iters(&s, &cm, 4).unwrap();
     });
-    report("simulate_schedule_iters x4 D=8 N=32", med, iters, "");
+    rec.case("simulate_schedule_iters x4 D=8 N=32", med, iters, "");
 
     // Grid-search sweep (the Table 4 inner loop): the event-engine serial
     // baseline against the compiled-DAG path, cold (per-sweep cache) and
@@ -143,17 +207,18 @@ fn main() {
     let (med_serial, it_s) = bench(sweep_budget, || {
         let _ = grid_search_serial(ScheduleKind::BitPipe, &BERT_64, &space, 32, 128).unwrap();
     });
-    report("grid_search event-serial BitPipe 32gpu B128", med_serial, it_s, "");
+    rec.case("grid_search event-serial BitPipe 32gpu B128", med_serial, it_s, "");
     let (med_cold, it_c) = bench(sweep_budget, || {
         let _ = grid_search(ScheduleKind::BitPipe, &BERT_64, &space, 32, 128).unwrap();
     });
     let cold_speedup = med_serial.as_secs_f64() / med_cold.as_secs_f64().max(1e-12);
-    report(
+    rec.case(
         "grid_search dag cold-cache BitPipe 32gpu B128",
         med_cold,
         it_c,
         &format!("  [{cold_speedup:.2}x vs event serial]"),
     );
+    rec.speedup("dag_cold_vs_event_serial", cold_speedup);
     let mut cache = DagCache::new();
     let (med_warm, it_w) = bench(sweep_budget, || {
         let _ =
@@ -161,22 +226,62 @@ fn main() {
                 .unwrap();
     });
     let warm_speedup = med_serial.as_secs_f64() / med_warm.as_secs_f64().max(1e-12);
-    report(
+    rec.case(
         "grid_search dag warm-cache BitPipe 32gpu B128",
         med_warm,
         it_w,
         &format!("  [{warm_speedup:.2}x vs event serial]"),
     );
+    rec.speedup("dag_warm_vs_event_serial", warm_speedup);
     if !smoke && warm_speedup < 5.0 {
         println!("  WARNING: warm-cache dag grid_search below the 5x sweep-layer target");
     }
-    // Contended sweep: keeps the threaded event path exercised side by
-    // side with the DAG path (contention requires the event engine).
-    let (med_cont, it_n) = bench(sweep_budget, || {
+
+    // Contended sweep (requires the event engine): the PR-4 baseline —
+    // rebuild every candidate's schedule, global settlement — against the
+    // PR-5 StreamCache fast path, cold (sweep-local cache) and warm
+    // (persistent cache + incremental network). The >= 5x warm speedup is
+    // this PR's acceptance gate.
+    let (med_cbase, it_b) = bench(sweep_budget, || {
+        let _ =
+            grid_search_opts_baseline(ScheduleKind::BitPipe, &BERT_64, &space, 16, 64).unwrap();
+    });
+    rec.case("grid_search contended baseline (PR-4) 16gpu B64", med_cbase, it_b, "");
+    let (med_ccold, it_cc) = bench(sweep_budget, || {
         let _ =
             grid_search_opts(ScheduleKind::BitPipe, &BERT_64, &space, 16, 64, true).unwrap();
     });
-    report("grid_search contended (event) 16gpu B64", med_cont, it_n, "");
+    let ccold_speedup = med_cbase.as_secs_f64() / med_ccold.as_secs_f64().max(1e-12);
+    rec.case(
+        "grid_search contended streamcache cold 16gpu",
+        med_ccold,
+        it_cc,
+        &format!("  [{ccold_speedup:.2}x vs PR-4 baseline]"),
+    );
+    rec.speedup("contended_cold_vs_baseline", ccold_speedup);
+    let mut scache = StreamCache::new();
+    let (med_cwarm, it_cw) = bench(sweep_budget, || {
+        let _ = grid_search_contended_cached(
+            ScheduleKind::BitPipe,
+            &BERT_64,
+            &space,
+            16,
+            64,
+            &mut scache,
+        )
+        .unwrap();
+    });
+    let cwarm_speedup = med_cbase.as_secs_f64() / med_cwarm.as_secs_f64().max(1e-12);
+    rec.case(
+        "grid_search contended streamcache warm 16gpu",
+        med_cwarm,
+        it_cw,
+        &format!("  [{cwarm_speedup:.2}x vs PR-4 baseline]"),
+    );
+    rec.speedup("contended_warm_vs_baseline", cwarm_speedup);
+    if !smoke && cwarm_speedup < 5.0 {
+        println!("  WARNING: warm contended StreamCache sweep below the 5x target");
+    }
 
     // Mailbox fabric round-trip.
     let fabric = Fabric::new(2);
@@ -189,7 +294,7 @@ fn main() {
             let _ = fabric.recv(1, Tag::act(0, 0, 0, mb)).unwrap();
         }
     });
-    report("fabric 64x send+recv (16 KiB msgs)", med, iters, "");
+    rec.case("fabric 64x send+recv (16 KiB msgs)", med, iters, "");
 
     // Ring all-reduce bandwidth (2 threads, 4 MiB vectors).
     let n = 1 << 20;
@@ -206,7 +311,7 @@ fn main() {
         });
     });
     let gbps = (2.0 * 4.0 * n as f64) / med.as_secs_f64() / 1e9;
-    report(
+    rec.case(
         "ring_allreduce g=2, 4 MiB",
         med,
         iters,
@@ -223,7 +328,7 @@ fn main() {
         adam.step(&mut params, &grads);
     });
     let gbs = (n as f64 * 4.0) / med.as_secs_f64() / 1e9;
-    report(
+    rec.case(
         "adam step 1M params",
         med,
         iters,
@@ -239,7 +344,7 @@ fn main() {
         }
     });
     let gbs = (n as f64 * 8.0) / med.as_secs_f64() / 1e9;
-    report(
+    rec.case(
         "grad accumulate 1M f32 (axpy)",
         med,
         iters,
@@ -248,4 +353,6 @@ fn main() {
     if gbs < 4.0 {
         println!("  WARNING: below the 4 GB/s §Perf target");
     }
+
+    rec.write();
 }

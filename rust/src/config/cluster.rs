@@ -59,6 +59,11 @@ pub enum IbModel {
 /// One shared network resource of the contention model. A flow occupies
 /// one or two of these ([`ClusterConfig::resources_of`]); concurrent flows
 /// sharing a resource split its bandwidth fair-share.
+///
+/// Resources also have a *dense* identity
+/// ([`ClusterConfig::resource_index`]): the contention engine keeps its
+/// per-resource state in a flat arena indexed by it, so the hot path never
+/// hashes a `ResourceId`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ResourceId {
     /// A directed point-to-point pipe: a device-pair NVLink path, a local
@@ -70,6 +75,10 @@ pub enum ResourceId {
     /// A node's ingress NIC ([`IbModel::NodeNic`]).
     NicIn(usize),
 }
+
+/// Sentinel for "no second resource" in a dense resource pair
+/// ([`ClusterConfig::dense_resources_of`]).
+pub const NO_RESOURCE: u32 = u32::MAX;
 
 /// How pipeline stages map onto physical devices (paper Fig 6).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -188,6 +197,48 @@ impl ClusterConfig {
             }
             _ => (ResourceId::Pipe(link), None),
         }
+    }
+
+    /// Size of the dense resource arena for this cluster: every possible
+    /// [`ResourceId`] maps to a distinct index below this bound
+    /// ([`Self::resource_index`]). Device-pair pipes, node-pair IB pipes,
+    /// and the two NIC directions per node each get their own range, so
+    /// the count is `P² + N² + 2N` for P devices on N nodes — a few KiB of
+    /// table even at cluster scale.
+    pub fn n_resources(&self) -> usize {
+        let p = self.n_devices;
+        let n = self.n_nodes();
+        p * p + n * n + 2 * n
+    }
+
+    /// Dense index of a resource in `[0, n_resources())` — injective over
+    /// every resource this cluster can produce, so the contention engine
+    /// can replace its `ResourceId`-keyed hash map with a flat arena.
+    pub fn resource_index(&self, r: ResourceId) -> usize {
+        let p = self.n_devices;
+        let n = self.n_nodes();
+        match r {
+            ResourceId::Pipe(l) => match l.kind {
+                // Device-pair endpoints (Local a == b included).
+                LinkKind::Local | LinkKind::NvLink => l.src * p + l.dst,
+                // Node-pair endpoints (IbModel::NodePair only).
+                LinkKind::InfiniBand => p * p + l.src * n + l.dst,
+            },
+            ResourceId::NicOut(node) => p * p + n * n + node,
+            ResourceId::NicIn(node) => p * p + n * n + n + node,
+        }
+    }
+
+    /// [`Self::resources_of`] in dense form: the flat-arena indices a flow
+    /// on `link` occupies, with [`NO_RESOURCE`] marking the absent second
+    /// slot. This is what the engine stores per flow — pure arithmetic,
+    /// no hashing.
+    pub fn dense_resources_of(&self, link: LinkId) -> (u32, u32) {
+        let (a, b) = self.resources_of(link);
+        (
+            self.resource_index(a) as u32,
+            b.map_or(NO_RESOURCE, |r| self.resource_index(r) as u32),
+        )
     }
 
     /// Enumerate the directed pipes a ring collective over `members`
@@ -329,6 +380,67 @@ mod tests {
             legacy.resources_of(legacy.link_id(0, 8)),
             legacy.resources_of(legacy.link_id(0, 16))
         );
+    }
+
+    #[test]
+    fn dense_resource_indices_are_injective_and_bounded() {
+        // Every resource either IB model can produce maps into
+        // [0, n_resources()) with no collisions.
+        for ib_model in [IbModel::NodeNic, IbModel::NodePair] {
+            let c = ClusterConfig {
+                n_devices: 24,
+                devices_per_node: 8,
+                ib_model,
+                ..Default::default()
+            };
+            let mut seen = std::collections::HashMap::new();
+            let mut insert = |r: ResourceId| {
+                let i = c.resource_index(r);
+                assert!(i < c.n_resources(), "{r:?} -> {i} out of bounds");
+                if let Some(prev) = seen.insert(i, r) {
+                    panic!("{r:?} and {prev:?} collide at {i}");
+                }
+            };
+            for a in 0..c.n_devices {
+                for b in 0..c.n_devices {
+                    let l = c.link_id(a, b);
+                    match c.resources_of(l) {
+                        (r1, Some(r2)) => {
+                            // NIC pairs repeat across device pairs; only
+                            // record each once.
+                            for r in [r1, r2] {
+                                let i = c.resource_index(r);
+                                assert!(i < c.n_resources());
+                                if !seen.contains_key(&i) {
+                                    insert(r);
+                                } else {
+                                    assert_eq!(seen[&i], r, "index {i} reused");
+                                }
+                            }
+                        }
+                        (r1, None) => {
+                            let i = c.resource_index(r1);
+                            if !seen.contains_key(&i) {
+                                insert(r1);
+                            } else {
+                                assert_eq!(seen[&i], r1, "index {i} reused");
+                            }
+                        }
+                    }
+                }
+            }
+            // Dense pairs agree with the ResourceId path.
+            let ib = c.link_id(0, 8);
+            let (d1, d2) = c.dense_resources_of(ib);
+            let (r1, r2) = c.resources_of(ib);
+            assert_eq!(d1 as usize, c.resource_index(r1));
+            match r2 {
+                Some(r) => assert_eq!(d2 as usize, c.resource_index(r)),
+                None => assert_eq!(d2, NO_RESOURCE),
+            }
+            let nv = c.link_id(0, 1);
+            assert_eq!(c.dense_resources_of(nv).1, NO_RESOURCE);
+        }
     }
 
     #[test]

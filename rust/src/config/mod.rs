@@ -9,7 +9,9 @@ mod cluster;
 mod model;
 mod parallel;
 
-pub use cluster::{ClusterConfig, IbModel, LinkId, LinkKind, MappingPolicy, ResourceId};
+pub use cluster::{
+    ClusterConfig, IbModel, LinkId, LinkKind, MappingPolicy, ResourceId, NO_RESOURCE,
+};
 pub use model::{ModelConfig, BERT_64, GPT_96, GPT_TINY, GPT_SMALL};
 pub use parallel::ParallelConfig;
 

@@ -7,6 +7,7 @@
 //!                    [--gpus P] [--mapping replicas|pipes] [--single-node]
 //!                    [--iters N [--warmup K]] [--contention]
 //!                    [--ib-model nic|pair] [--engine auto|event|dag]
+//!                    [--network inc|global]
 //! bitpipe eval-paper [--only table2,fig9,...] (default: all)
 //! bitpipe train      --artifacts DIR --kind bitpipe --d 4 --n 8 --steps 50
 //!                    [--dataset synthetic|corpus] [--lr 1e-3] [--seed 42]
@@ -21,7 +22,7 @@
 use anyhow::{bail, Context, Result};
 use bitpipe::config::{ClusterConfig, IbModel, MappingPolicy, ModelConfig, ParallelConfig};
 use bitpipe::schedule::{self, timeline, Costs, ScheduleConfig, ScheduleKind, SyncPolicy};
-use bitpipe::sim::{self, Engine, SimConfig};
+use bitpipe::sim::{self, Engine, NetworkImpl, SimConfig};
 use bitpipe::train::{self, DatasetKind, TrainConfig};
 use std::collections::HashMap;
 
@@ -197,10 +198,21 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         "dag" => Engine::Dag,
         other => bail!("--engine must be auto|event|dag, got {other:?}"),
     };
+    // Settlement strategy of the contended network: incremental (default)
+    // or the global-settlement differential oracle.
+    let network = match get(flags, "network").unwrap_or("inc") {
+        "inc" => NetworkImpl::Incremental,
+        "global" => NetworkImpl::Global,
+        other => bail!("--network must be inc|global, got {other:?}"),
+    };
+    if get(flags, "network").is_some() && !contention {
+        bail!("--network only applies with --contention");
+    }
 
     let cfg = SimConfig::new(model, parallel, cluster)
         .with_contention(contention)
-        .with_engine(engine);
+        .with_engine(engine)
+        .with_network(network);
     println!(
         "model={} kind={} W={w} D={d} B={b} N={n} (mini-batch {}){}{}",
         model.name,

@@ -39,6 +39,12 @@ pub struct P2pEdge {
     pub bw: f64,
     /// Identity of the shared physical pipe.
     pub link: LinkId,
+    /// Dense flat-arena indices of the shared resources the flow occupies
+    /// ([`ClusterConfig::dense_resources_of`]; second slot
+    /// [`crate::config::NO_RESOURCE`] for single-resource pipes) — the
+    /// contention engine's per-flow key, precomputed so the hot path never
+    /// maps a `LinkId` to resources again.
+    pub res: (u32, u32),
     /// Data-parallel multiplicity (>= 1): how many of the W pipeline
     /// groups' *identical, synchronized* copies of this transfer land on
     /// the same physical pipe. The simulator executes one group
@@ -75,6 +81,9 @@ pub struct RingHop {
     pub work: f64,
     /// The directed pipe the hop occupies.
     pub link: LinkId,
+    /// Dense flat-arena resource indices of the pipe (see
+    /// [`P2pEdge::res`]).
+    pub res: (u32, u32),
 }
 
 /// The (W, D, cluster)-dependent part of the P2P edge tables — link
@@ -264,6 +273,7 @@ impl CostModel {
                 lat: cm.cluster.lat(kind),
                 bw: cm.cluster.bw(kind),
                 link,
+                res: cm.cluster.dense_resources_of(link),
                 dp_copies,
             })
             .collect();
@@ -408,6 +418,7 @@ impl CostModel {
                 bytes: 2.0 * (g - 1.0) * (bytes as f64 / g),
                 work: scalar,
                 link,
+                res: self.cluster.dense_resources_of(link),
             })
             .collect()
     }
@@ -588,6 +599,11 @@ mod tests {
                     e.link,
                     c.cluster.link_id(c.physical(a), c.physical(b)),
                     "({a},{b})"
+                );
+                assert_eq!(
+                    e.res,
+                    c.cluster.dense_resources_of(e.link),
+                    "({a},{b}): stale dense resource indices"
                 );
                 match e.link.kind {
                     LinkKind::InfiniBand => {

@@ -25,17 +25,34 @@
 //! differential tests): candidates evaluate in canonical order and the
 //! final ordering is a stable descending-throughput sort.
 //!
-//! Contended sweeps ([`grid_search_opts`] with `contention: true`) still
-//! run the event engine — the only backend that prices link sharing —
-//! fanned out over scoped worker threads with an atomic work-stealing
-//! cursor. Since the collectives landed on the wire, a contended sweep
-//! ranks layouts under the full model: all-reduce ring flows squeeze the
-//! P2P traffic they overlap, and per-node NIC aggregation penalizes
-//! layouts that fan a node's traffic out to many peers.
+//! Contended sweeps ([`grid_search_opts`] with `contention: true`) run
+//! the event engine — the only backend that prices link sharing — but no
+//! longer rebuild anything per point: a [`StreamCache`] mirrors the
+//! [`DagCache`] at the instruction-stream level. Each distinct schedule
+//! structure is generated, validated and lowered (message-slot
+//! [`StreamTables`](super::engine::StreamTables)) exactly once — cold
+//! structures precompile concurrently on scoped threads, like the
+//! uncontended path — and every grid point (and every later sweep handed
+//! the same cache, Table-4 style) re-prices the borrowed streams with a
+//! fresh [`CostModel`] on the incremental-settlement network.
+//! [`CostModel`] construction is hoisted here too: one [`LinkTopology`]
+//! per (W, D), shared across the B candidates. Evaluation fans out over
+//! scoped worker threads with an atomic work-stealing cursor; results
+//! are collected in canonical candidate order, so the output is
+//! bit-identical across thread counts ([`grid_search_contended_serial`]
+//! pins it). The PR-4 path — rebuild every candidate's schedule and run
+//! global settlement — survives as [`grid_search_opts_baseline`], the
+//! benchable before/after for `cargo bench --bench hotpath`.
+//!
+//! Since the collectives landed on the wire, a contended sweep ranks
+//! layouts under the full model: all-reduce ring flows squeeze the P2P
+//! traffic they overlap, and per-node NIC aggregation penalizes layouts
+//! that fan a node's traffic out to many peers.
 
+use super::engine::{simulate_streams_lowered, StreamTables};
 use super::{
     assemble_result, memory_footprint, memory_footprint_from_counts, run_streams, simulate,
-    CompiledDag, CostModel, Engine, LinkTopology, SimConfig, SimResult,
+    CompiledDag, Contention, CostModel, Engine, LinkTopology, NetworkImpl, SimConfig, SimResult,
 };
 use crate::config::{ClusterConfig, ModelConfig, ParallelConfig};
 use crate::schedule::{self, Schedule, ScheduleConfig, ScheduleKind, SyncPolicy};
@@ -155,6 +172,106 @@ fn compile_structure(cfg: &ScheduleConfig) -> Compiled {
     }
 }
 
+/// Cached lowering of one schedule structure for *contended* evaluation:
+/// the built streams plus their message-slot tables. Structure-only, like
+/// a [`DagCache`] entry — (W, B, cluster) pricing happens per point.
+#[derive(Debug)]
+enum CompiledStream {
+    Ready {
+        sched: Box<Schedule>,
+        tables: StreamTables,
+    },
+    /// Schedule generation failed; every candidate of this structure skips.
+    Failed,
+}
+
+/// [`DagCache`]'s sibling for contended sweeps: compile-once /
+/// re-price-many at the instruction-stream level. Each distinct schedule
+/// structure is generated + validated + lowered ([`StreamTables`]) once;
+/// every grid point sharing it — and every later sweep handed the same
+/// cache, e.g. a Table-4-style loop over GPU counts and models — re-runs
+/// the borrowed streams on the incremental-network event engine with a
+/// fresh cost model. Entries never depend on W, B, the model, or the
+/// cluster.
+#[derive(Debug, Default)]
+pub struct StreamCache {
+    entries: Vec<(StructKey, CompiledStream)>,
+}
+
+impl StreamCache {
+    pub fn new() -> Self {
+        StreamCache { entries: Vec::new() }
+    }
+
+    /// Number of cached structures.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn contains(&self, key: &StructKey) -> bool {
+        self.entries.iter().any(|(k, _)| k == key)
+    }
+
+    fn position(&self, key: &StructKey) -> Option<usize> {
+        self.entries.iter().position(|(k, _)| k == key)
+    }
+}
+
+/// Build + lower one schedule structure for contended evaluation.
+fn compile_stream(cfg: &ScheduleConfig) -> CompiledStream {
+    match schedule::build(cfg) {
+        Ok(s) => {
+            let tables = StreamTables::build(&s);
+            CompiledStream::Ready { sched: Box::new(s), tables }
+        }
+        Err(_) => CompiledStream::Failed,
+    }
+}
+
+/// Price one candidate against a cached stream structure: fresh cost
+/// model (hoisted topology), cached schedule + message-slot tables, the
+/// incremental-settlement network. Bit-identical to [`evaluate`] with
+/// `contention: true` and the default [`NetworkImpl`] — generation is
+/// deterministic, so the cached schedule is the one a rebuild would
+/// produce.
+fn evaluate_stream(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    parallel: ParallelConfig,
+    compiled: &CompiledStream,
+    topo: &LinkTopology,
+) -> Option<GridPoint> {
+    let CompiledStream::Ready { sched, tables } = compiled else {
+        return None;
+    };
+    let costs = CostModel::with_topology(model, &parallel, cluster, topo);
+    let trace = simulate_streams_lowered(
+        sched,
+        &costs,
+        1,
+        Contention::Full,
+        NetworkImpl::default(),
+        tables,
+    )
+    .ok()?;
+    let memory = memory_footprint(sched, model, &parallel);
+    let result = assemble_result(
+        parallel.minibatch_size(),
+        sched.n_devices(),
+        &trace.devices,
+        trace.makespan,
+        memory,
+    );
+    if !result.fits(cluster) {
+        return None;
+    }
+    Some(GridPoint { parallel, result })
+}
+
 /// Enumerate the feasible-by-arithmetic candidates of the sweep (the cheap
 /// filters: device count, mini-batch divisibility, N >= D, validation).
 fn candidates(
@@ -189,18 +306,21 @@ fn candidates(
     out
 }
 
-/// Simulate one candidate on the event engine; `None` for layouts that
-/// fail to simulate or do not fit in device memory (the paper's grid
-/// search drops these). The serial/threaded event paths go through here.
+/// Simulate one candidate on the event engine, rebuilding its schedule
+/// from scratch; `None` for layouts that fail to simulate or do not fit
+/// in device memory (the paper's grid search drops these). The serial
+/// and PR-4-baseline paths go through here.
 fn evaluate(
     model: &ModelConfig,
     cluster: &ClusterConfig,
     parallel: ParallelConfig,
     contention: bool,
+    network: NetworkImpl,
 ) -> Option<GridPoint> {
     let cfg = SimConfig::new(*model, parallel, *cluster)
         .with_contention(contention)
-        .with_engine(Engine::Event);
+        .with_engine(Engine::Event)
+        .with_network(network);
     let result = simulate(&cfg).ok()?;
     if !result.fits(cluster) {
         return None;
@@ -255,7 +375,8 @@ fn evaluate_cached(
         }
         Compiled::Event(s) => {
             let costs = CostModel::with_topology(model, &parallel, cluster, &topos[ti].1);
-            let trace = run_streams(s, &costs, 1, false, Engine::Event).ok()?;
+            let trace =
+                run_streams(s, &costs, 1, false, Engine::Event, NetworkImpl::default()).ok()?;
             let memory = memory_footprint(s, model, &parallel);
             assemble_result(
                 parallel.minibatch_size(),
@@ -382,9 +503,9 @@ pub fn grid_search_cached(
 /// [`grid_search`] with an explicit contention mode: `contention` true
 /// prices every candidate under the flow-level link-sharing model (see
 /// `sim::engine`), ranking layouts by their contended throughput — the
-/// fidelity the Fig 6 mapping tradeoffs need. Contended sweeps require the
-/// event engine and fan out over scoped worker threads; uncontended sweeps
-/// take the compiled-DAG path.
+/// fidelity the Fig 6 mapping tradeoffs need. Contended sweeps run the
+/// event engine on the compile-once [`StreamCache`] fast path (sweep-local
+/// cache); uncontended sweeps take the compiled-DAG path.
 pub fn grid_search_opts(
     kind: ScheduleKind,
     model: &ModelConfig,
@@ -396,6 +517,191 @@ pub fn grid_search_opts(
     if !contention {
         return grid_search(kind, model, space, n_devices, minibatch);
     }
+    grid_search_contended_cached(kind, model, space, n_devices, minibatch, &mut StreamCache::new())
+}
+
+/// Contended sweep with a caller-owned [`StreamCache`] — the
+/// compile-once/re-price-many entry point, mirroring
+/// [`grid_search_cached`]: structures compiled for one sweep are reused
+/// by every later sweep handed the same cache. Evaluation fans out over
+/// scoped worker threads; output is bit-identical to
+/// [`grid_search_contended_serial`] regardless of thread count.
+pub fn grid_search_contended_cached(
+    kind: ScheduleKind,
+    model: &ModelConfig,
+    space: &GridSpace,
+    n_devices: usize,
+    minibatch: usize,
+    cache: &mut StreamCache,
+) -> Result<Vec<GridPoint>> {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    grid_search_contended_impl(kind, model, space, n_devices, minibatch, cache, threads)
+}
+
+/// Single-threaded contended sweep on the [`StreamCache`] fast path —
+/// the determinism anchor the thread-count-invariance test pins the
+/// threaded sweep against.
+pub fn grid_search_contended_serial(
+    kind: ScheduleKind,
+    model: &ModelConfig,
+    space: &GridSpace,
+    n_devices: usize,
+    minibatch: usize,
+) -> Result<Vec<GridPoint>> {
+    grid_search_contended_impl(
+        kind,
+        model,
+        space,
+        n_devices,
+        minibatch,
+        &mut StreamCache::new(),
+        1,
+    )
+}
+
+fn grid_search_contended_impl(
+    kind: ScheduleKind,
+    model: &ModelConfig,
+    space: &GridSpace,
+    n_devices: usize,
+    minibatch: usize,
+    cache: &mut StreamCache,
+    threads: usize,
+) -> Result<Vec<GridPoint>> {
+    let cands = candidates(kind, space, n_devices, minibatch);
+    let cluster = ClusterConfig::paper_testbed(n_devices);
+    if cluster.validate().is_err() || model.validate().is_err() {
+        return Ok(Vec::new()); // every point would fail exactly this way
+    }
+    // Phase 1 — compile the structures this sweep still misses, in
+    // canonical candidate order (schedule generation dominates a cold
+    // sweep and is embarrassingly parallel; insertion order keeps the
+    // cache independent of thread scheduling).
+    let mut missing: Vec<ScheduleConfig> = Vec::new();
+    for p in &cands {
+        let scfg = p.schedule();
+        let key = StructKey::of(&scfg);
+        if !cache.contains(&key) && !missing.iter().any(|c| StructKey::of(c) == key) {
+            missing.push(scfg);
+        }
+    }
+    let compile_threads = threads.min(missing.len());
+    if compile_threads > 1 {
+        let next = AtomicUsize::new(0);
+        let mut compiled: Vec<(usize, CompiledStream)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..compile_threads)
+                .map(|_| {
+                    let next = &next;
+                    let missing = &missing;
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= missing.len() {
+                                break;
+                            }
+                            out.push((i, compile_stream(&missing[i])));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("stream-compile worker panicked"))
+                .collect()
+        });
+        compiled.sort_by_key(|&(i, _)| i);
+        for (i, comp) in compiled {
+            cache.entries.push((StructKey::of(&missing[i]), comp));
+        }
+    } else {
+        for scfg in &missing {
+            cache.entries.push((StructKey::of(scfg), compile_stream(scfg)));
+        }
+    }
+    // Phase 2 — hoist the (W, D)-dependent pieces: one LinkTopology per
+    // (W, D) shared across all B candidates (satellite of the DAG path's
+    // hoisting, now on the contended path too), and the cache position of
+    // every candidate's structure.
+    let mut topos: Vec<((usize, usize), LinkTopology)> = Vec::new();
+    let lookup: Vec<(usize, usize)> = cands
+        .iter()
+        .map(|p| {
+            let key = StructKey::of(&p.schedule());
+            let e = cache.position(&key).expect("compiled in phase 1");
+            let t = topo_index(&mut topos, &cluster, p.w, p.d);
+            (e, t)
+        })
+        .collect();
+    // Phase 3 — price every candidate against its borrowed streams.
+    let cache = &*cache;
+    let eval_threads = threads.min(cands.len().max(1));
+    let mut indexed: Vec<(usize, GridPoint)> = if eval_threads <= 1 || cands.len() <= 1 {
+        cands
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &p)| {
+                let (e, t) = lookup[i];
+                evaluate_stream(model, &cluster, p, &cache.entries[e].1, &topos[t].1)
+                    .map(|point| (i, point))
+            })
+            .collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(eval_threads);
+            for _ in 0..eval_threads {
+                let next = &next;
+                let cands = &cands;
+                let cluster = &cluster;
+                let lookup = &lookup;
+                let topos = &topos;
+                handles.push(scope.spawn(move || {
+                    let mut found: Vec<(usize, GridPoint)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= cands.len() {
+                            break;
+                        }
+                        let (e, t) = lookup[i];
+                        let entry = &cache.entries[e].1;
+                        if let Some(point) =
+                            evaluate_stream(model, cluster, cands[i], entry, &topos[t].1)
+                        {
+                            found.push((i, point));
+                        }
+                    }
+                    found
+                }));
+            }
+            let mut all = Vec::new();
+            for h in handles {
+                all.extend(h.join().expect("grid-search worker panicked"));
+            }
+            all
+        })
+    };
+    // Canonical candidate order first, then the stable throughput sort —
+    // byte-for-byte the serial result.
+    indexed.sort_by_key(|&(i, _)| i);
+    let mut points: Vec<GridPoint> = indexed.into_iter().map(|(_, p)| p).collect();
+    sort_points(&mut points);
+    Ok(points)
+}
+
+/// The PR-4 contended sweep, kept benchable as the before/after baseline
+/// for `cargo bench --bench hotpath`: every candidate rebuilds its
+/// schedule from scratch (the Appendix-B portfolio search included) and
+/// runs the event engine with [`NetworkImpl::Global`] settlement, fanned
+/// out over scoped worker threads with an atomic work-stealing cursor.
+pub fn grid_search_opts_baseline(
+    kind: ScheduleKind,
+    model: &ModelConfig,
+    space: &GridSpace,
+    n_devices: usize,
+    minibatch: usize,
+) -> Result<Vec<GridPoint>> {
     let cands = candidates(kind, space, n_devices, minibatch);
     let cluster = ClusterConfig::paper_testbed(n_devices);
     let threads = std::thread::available_parallelism()
@@ -405,7 +711,7 @@ pub fn grid_search_opts(
     if threads <= 1 || cands.len() <= 1 {
         let mut points: Vec<GridPoint> = cands
             .into_iter()
-            .filter_map(|p| evaluate(model, &cluster, p, contention))
+            .filter_map(|p| evaluate(model, &cluster, p, true, NetworkImpl::Global))
             .collect();
         sort_points(&mut points);
         return Ok(points);
@@ -425,7 +731,9 @@ pub fn grid_search_opts(
                     if i >= cands.len() {
                         break;
                     }
-                    if let Some(point) = evaluate(model, cluster, cands[i], contention) {
+                    if let Some(point) =
+                        evaluate(model, cluster, cands[i], true, NetworkImpl::Global)
+                    {
                         found.push((i, point));
                     }
                 }
@@ -439,8 +747,6 @@ pub fn grid_search_opts(
         all
     });
 
-    // Canonical candidate order first, then the stable throughput sort —
-    // byte-for-byte the serial result.
     indexed.sort_by_key(|&(i, _)| i);
     let mut points: Vec<GridPoint> = indexed.into_iter().map(|(_, p)| p).collect();
     sort_points(&mut points);
@@ -460,7 +766,7 @@ pub fn grid_search_serial(
     let cluster = ClusterConfig::paper_testbed(n_devices);
     let mut points: Vec<GridPoint> = candidates(kind, space, n_devices, minibatch)
         .into_iter()
-        .filter_map(|p| evaluate(model, &cluster, p, false))
+        .filter_map(|p| evaluate(model, &cluster, p, false, NetworkImpl::default()))
         .collect();
     sort_points(&mut points);
     Ok(points)
@@ -569,6 +875,77 @@ mod tests {
                 assert_eq!(a.result.peak_memory(), b.result.peak_memory());
             }
         }
+    }
+
+    #[test]
+    fn contended_cached_matches_per_point_rebuild() {
+        // The StreamCache fast path must be unobservable in the results:
+        // bit-identical to rebuilding and simulating every candidate from
+        // scratch on the same (incremental) network.
+        let space = GridSpace::bert64();
+        let fast =
+            grid_search_opts(ScheduleKind::BitPipe, &BERT_64, &space, 16, 64, true).unwrap();
+        let cluster = ClusterConfig::paper_testbed(16);
+        let mut slow: Vec<GridPoint> = candidates(ScheduleKind::BitPipe, &space, 16, 64)
+            .into_iter()
+            .filter_map(|p| evaluate(&BERT_64, &cluster, p, true, NetworkImpl::Incremental))
+            .collect();
+        sort_points(&mut slow);
+        assert_eq!(fast.len(), slow.len());
+        assert!(!fast.is_empty());
+        for (a, b) in fast.iter().zip(&slow) {
+            assert_eq!(
+                (a.parallel.w, a.parallel.d, a.parallel.b, a.parallel.n),
+                (b.parallel.w, b.parallel.d, b.parallel.b, b.parallel.n)
+            );
+            assert_eq!(a.result.throughput.to_bits(), b.result.throughput.to_bits());
+            assert_eq!(a.result.iter_time.to_bits(), b.result.iter_time.to_bits());
+            assert_eq!(a.result.peak_memory(), b.result.peak_memory());
+        }
+    }
+
+    #[test]
+    fn stream_cache_reuses_structures_across_sweeps() {
+        // Contended twin of shared_cache_reuses_structures_across_sweeps:
+        // a repeat sweep must be all cache hits and bit-identical.
+        let mut cache = StreamCache::new();
+        let space = GridSpace::bert64();
+        let first = grid_search_contended_cached(
+            ScheduleKind::BitPipe,
+            &BERT_64,
+            &space,
+            16,
+            64,
+            &mut cache,
+        )
+        .unwrap();
+        let after_first = cache.len();
+        assert!(after_first > 0);
+        let warm = grid_search_contended_cached(
+            ScheduleKind::BitPipe,
+            &BERT_64,
+            &space,
+            16,
+            64,
+            &mut cache,
+        )
+        .unwrap();
+        assert_eq!(cache.len(), after_first, "repeat sweep must be all cache hits");
+        assert_eq!(first.len(), warm.len());
+        for (a, b) in first.iter().zip(&warm) {
+            assert_eq!(a.result.throughput.to_bits(), b.result.throughput.to_bits());
+        }
+        // A different GPU count shares some (d, n) structures but not all.
+        let _ = grid_search_contended_cached(
+            ScheduleKind::BitPipe,
+            &BERT_64,
+            &space,
+            32,
+            128,
+            &mut cache,
+        )
+        .unwrap();
+        assert!(cache.len() > after_first);
     }
 
     #[test]

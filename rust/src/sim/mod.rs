@@ -26,7 +26,11 @@
 //! (default [`crate::config::IbModel::NodeNic`]; the legacy independent
 //! node-pair pipes survive behind `IbModel::NodePair`). Concurrent flows
 //! sharing a resource split its bandwidth, and in-flight completion times
-//! are re-projected whenever a flow starts or ends. All-reduce
+//! are re-projected whenever a flow starts or ends — by default
+//! *incrementally* (only the flows sharing a mutated resource are
+//! touched, over a flat dense-index arena; [`NetworkImpl::Incremental`]),
+//! with the PR-4 global-settlement walk kept as the differential oracle
+//! behind [`NetworkImpl::Global`] / `SimConfig::network`. All-reduce
 //! collectives ride the same wires: each (stage, round) collective lowers
 //! into one flow per directed hop of its physical ring path
 //! ([`CostModel::ring_hops`]), contending with P2P traffic and with other
@@ -67,13 +71,18 @@ pub use cost::{CostModel, LinkTopology, P2pEdge, RingHop};
 pub use dag::{CompiledDag, DagUnsupported, DagWeights};
 pub use engine::{
     simulate_schedule, simulate_schedule_contended, simulate_schedule_iters,
-    simulate_schedule_iters_contended, simulate_schedule_iters_with,
-    simulate_schedule_reference, simulate_schedule_with, Contention, DeviceTrace,
-    MultiIterTrace, SimError, SimTrace,
+    simulate_schedule_iters_contended, simulate_schedule_iters_network,
+    simulate_schedule_iters_with, simulate_schedule_network, simulate_schedule_with, Contention,
+    DeviceTrace, MultiIterTrace, NetworkImpl, SimError, SimTrace,
 };
+/// Retired executor, compiled for differential tests only (unit tests,
+/// or integration tests via the `reference-sim` dev-feature).
+#[cfg(any(test, feature = "reference-sim"))]
+pub use engine::simulate_schedule_reference;
 pub use gridsearch::{
-    grid_search, grid_search_cached, grid_search_opts, grid_search_serial, DagCache, GridPoint,
-    GridSpace,
+    grid_search, grid_search_cached, grid_search_contended_cached, grid_search_contended_serial,
+    grid_search_opts, grid_search_opts_baseline, grid_search_serial, DagCache, GridPoint,
+    GridSpace, StreamCache,
 };
 pub use memory::{memory_footprint, memory_footprint_from_counts, MemoryFootprint};
 
@@ -106,18 +115,29 @@ pub struct SimConfig {
     /// Price link contention (flow-level fair-share bandwidth sharing of
     /// NVLink paths and per-node NICs, by P2P transfers *and* all-reduce
     /// ring flows — [`Contention::Full`]). Off by default: the
-    /// fixed-duration engines are faster and bit-stable against
-    /// `simulate_schedule_reference`.
+    /// fixed-duration engines are faster and bit-stable against the
+    /// retired reference executor.
     pub contention: bool,
     /// Backend selection; [`Engine::Auto`] resolves to Dag without
     /// contention, Event with it.
     pub engine: Engine,
+    /// Settlement strategy of the contended network (ignored without
+    /// contention): [`NetworkImpl::Incremental`] by default, with
+    /// [`NetworkImpl::Global`] kept as the differential oracle.
+    pub network: NetworkImpl,
 }
 
 impl SimConfig {
     /// Fixed-duration (no-contention) configuration.
     pub fn new(model: ModelConfig, parallel: ParallelConfig, cluster: ClusterConfig) -> Self {
-        SimConfig { model, parallel, cluster, contention: false, engine: Engine::Auto }
+        SimConfig {
+            model,
+            parallel,
+            cluster,
+            contention: false,
+            engine: Engine::Auto,
+            network: NetworkImpl::default(),
+        }
     }
 
     /// Toggle the flow-level link-contention model.
@@ -129,6 +149,13 @@ impl SimConfig {
     /// Force a specific evaluation backend.
     pub fn with_engine(mut self, engine: Engine) -> Self {
         self.engine = engine;
+        self
+    }
+
+    /// Pick the contended network's settlement strategy (no effect
+    /// without contention).
+    pub fn with_network(mut self, network: NetworkImpl) -> Self {
+        self.network = network;
         self
     }
 
@@ -187,6 +214,7 @@ pub(crate) fn run_streams(
     iters: usize,
     contention: bool,
     engine: Engine,
+    network: NetworkImpl,
 ) -> Result<MultiIterTrace, SimError> {
     if engine == Engine::Dag {
         debug_assert!(!contention, "resolved_engine never picks Dag with contention");
@@ -196,7 +224,8 @@ pub(crate) fn run_streams(
             }
         }
     }
-    engine::simulate_schedule_iters_with(sched, costs, iters, contention)
+    let mode = if contention { Contention::Full } else { Contention::Off };
+    engine::simulate_schedule_iters_network(sched, costs, iters, mode, network)
 }
 
 /// Assemble a [`SimResult`] from a finished trace — shared by
@@ -236,7 +265,7 @@ pub fn simulate(cfg: &SimConfig) -> Result<SimResult> {
     let engine = cfg.resolved_engine()?;
     let sched: Schedule = schedule::build(&cfg.parallel.schedule())?;
     let costs = CostModel::new(&cfg.model, &cfg.parallel, &cfg.cluster);
-    let trace = run_streams(&sched, &costs, 1, cfg.contention, engine)?;
+    let trace = run_streams(&sched, &costs, 1, cfg.contention, engine, cfg.network)?;
     let memory = memory_footprint(&sched, &cfg.model, &cfg.parallel);
     Ok(assemble_result(
         cfg.parallel.minibatch_size(),
@@ -284,7 +313,7 @@ pub fn simulate_iters(cfg: &SimConfig, iters: usize, warmup: usize) -> Result<Mu
     let engine = cfg.resolved_engine()?;
     let sched: Schedule = schedule::build(&cfg.parallel.schedule())?;
     let costs = CostModel::new(&cfg.model, &cfg.parallel, &cfg.cluster);
-    let trace = run_streams(&sched, &costs, iters, cfg.contention, engine)?;
+    let trace = run_streams(&sched, &costs, iters, cfg.contention, engine, cfg.network)?;
     let iter_times = trace.iter_times();
     let steady = IterStats::from_secs(&iter_times[warmup..]);
     let steady_throughput = steady.throughput(cfg.parallel.minibatch_size());

@@ -4,6 +4,11 @@
 //! multi-iteration engine must degrade gracefully into the single-shot
 //! case. Random configurations are drawn through the in-tree property
 //! harness (`bitpipe::util::prop`) and shrunk on failure.
+//!
+//! The reference executor is retired from the public surface: it is
+//! compiled under `cfg(any(test, feature = "reference-sim"))`, and this
+//! suite sees it because the dev-dependency self-reference in Cargo.toml
+//! enables that feature for test builds.
 
 use bitpipe::config::{ClusterConfig, MappingPolicy, ParallelConfig, BERT_64};
 use bitpipe::schedule::{build, ScheduleConfig, ScheduleKind, SyncPolicy};

@@ -1,0 +1,306 @@
+//! Differential tests for the incremental-settlement contended network
+//! against the PR-4 global-settlement oracle (`NetworkImpl::Global`).
+//!
+//! The two strategies do the same arithmetic over different interval
+//! splits: global settlement chips every in-flight flow at every network
+//! event, incremental settlement charges a flow one fused `dt/k` per
+//! share change. Floating-point addition is not associative, so the
+//! results agree to rounding — <= 1e-9 relative — rather than bitwise,
+//! *except* where a flow is touched by every network event of its
+//! lifetime (solo flows, solo rings, fully-overlapped pinned scenarios),
+//! where the interval splits coincide and agreement is exact.
+//!
+//! Also pinned here: the contended grid search is bit-identical across
+//! thread counts (the canonical-order collection makes worker scheduling
+//! unobservable), and across the StreamCache fast path vs a serial sweep.
+
+use bitpipe::config::{ClusterConfig, IbModel, MappingPolicy, ParallelConfig, BERT_64};
+use bitpipe::schedule::{build, placement_for, Instr, Schedule, ScheduleConfig, ScheduleKind};
+use bitpipe::sim::{
+    grid_search_contended_serial, grid_search_opts, grid_search_opts_baseline,
+    simulate_schedule, simulate_schedule_iters_network, simulate_schedule_network, Contention,
+    CostModel, GridSpace, NetworkImpl,
+};
+
+/// Relative agreement required between the two settlement strategies.
+const TOL: f64 = 1e-9;
+
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+/// Cost model for one simulated pipeline group (single- or multi-node;
+/// same shape as rust/tests/contention.rs).
+fn costs_for(kind: ScheduleKind, d: usize, n: usize, multi_node: bool) -> CostModel {
+    let w = if multi_node { 2 } else { 1 };
+    let p = ParallelConfig::new(kind, w, d, 4, n);
+    let mut cluster = ClusterConfig::paper_testbed(w * d);
+    cluster.mapping = MappingPolicy::ReplicasTogether;
+    CostModel::new(&BERT_64, &p, &cluster)
+}
+
+/// Run both settlement strategies on `s` and assert <= `TOL` relative
+/// agreement on the makespan, every iteration boundary, and every
+/// per-device accounting channel, plus bitwise determinism of the
+/// incremental run.
+fn check_impls_agree(tag: &str, s: &Schedule, c: &CostModel, iters: usize, mode: Contention) {
+    let inc = simulate_schedule_iters_network(s, c, iters, mode, NetworkImpl::Incremental)
+        .unwrap_or_else(|e| panic!("{tag}: incremental failed: {e}"));
+    let glo = simulate_schedule_iters_network(s, c, iters, mode, NetworkImpl::Global)
+        .unwrap_or_else(|e| panic!("{tag}: global failed: {e}"));
+    assert!(
+        rel(inc.makespan, glo.makespan) <= TOL,
+        "{tag}: makespan incremental {} vs global {} (rel {:.3e})",
+        inc.makespan,
+        glo.makespan,
+        rel(inc.makespan, glo.makespan)
+    );
+    for (k, (a, b)) in inc.iter_finish.iter().zip(&glo.iter_finish).enumerate() {
+        assert!(rel(*a, *b) <= TOL, "{tag}: iteration {k} boundary {a} vs {b}");
+    }
+    for (dev, (a, b)) in inc.devices.iter().zip(&glo.devices).enumerate() {
+        for (what, x, y) in [
+            ("finish", a.finish, b.finish),
+            ("recv_blocked", a.recv_blocked, b.recv_blocked),
+            ("allreduce_blocked", a.allreduce_blocked, b.allreduce_blocked),
+        ] {
+            assert!(
+                (x - y).abs() <= TOL * y.abs().max(1e-12),
+                "{tag}: dev {dev} {what}: incremental {x} vs global {y}"
+            );
+        }
+        assert_eq!(
+            (a.sends, a.local_copies),
+            (b.sends, b.local_copies),
+            "{tag}: dev {dev} op counters diverge"
+        );
+    }
+    // Incremental settlement is deterministic, bit for bit.
+    let inc2 = simulate_schedule_iters_network(s, c, iters, mode, NetworkImpl::Incremental)
+        .unwrap_or_else(|e| panic!("{tag}: incremental rerun failed: {e}"));
+    assert_eq!(inc.makespan.to_bits(), inc2.makespan.to_bits(), "{tag}: not deterministic");
+}
+
+#[test]
+fn incremental_matches_global_on_generated_grid() {
+    // The dense differential grid from the issue: every schedule family x
+    // N in {4, 8, 16} (D = 4 and the paper-default D = 8 where N >= D
+    // allows) x {P2pOnly, Full} x single/multi-node cost models.
+    for kind in ScheduleKind::ALL {
+        for d in [4usize, 8] {
+            for n in [4usize, 8, 16] {
+                if n < d {
+                    continue;
+                }
+                let s = build(&ScheduleConfig::new(kind, d, n)).unwrap();
+                for multi_node in [false, true] {
+                    let c = costs_for(kind, d, n, multi_node);
+                    for mode in [Contention::P2pOnly, Contention::Full] {
+                        let tag =
+                            format!("{kind} D={d} N={n} multi_node={multi_node} {mode:?}");
+                        check_impls_agree(&tag, &s, &c, 1, mode);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn incremental_matches_global_multi_iteration() {
+    // Free-running iterations pile up cross-iteration flow overlap — the
+    // worst case for settlement drift.
+    let kind = ScheduleKind::BitPipe;
+    let s = build(&ScheduleConfig::new(kind, 8, 16)).unwrap();
+    let c = costs_for(kind, 8, 16, true);
+    check_impls_agree("bitpipe D=8 N=16 x3", &s, &c, 3, Contention::Full);
+}
+
+/// The queued-rings scenario from rust/tests/contention.rs: back-to-back
+/// all-reduce rounds on one stage's twin devices, every ring crossing the
+/// node0<->node1 NICs.
+fn rings_only_schedule(stages: &[usize], rounds: usize) -> (Schedule, CostModel) {
+    let placement = placement_for(ScheduleKind::Chimera, 8, 1);
+    let cfg = ScheduleConfig::new(ScheduleKind::Chimera, 8, 8);
+    let mut device_ops = vec![Vec::new(); 8];
+    for &stage in stages {
+        for dev in [stage, 7 - stage] {
+            for _ in 0..rounds {
+                device_ops[dev].push(Instr::AllReduceStart { stage });
+                device_ops[dev].push(Instr::AllReduceWait { stage });
+            }
+        }
+    }
+    let s = Schedule {
+        cfg,
+        placement,
+        compute_order: vec![Vec::new(); 8],
+        device_ops,
+        pipe_of_mb: vec![0; 8],
+    };
+    let p = ParallelConfig::new(ScheduleKind::Chimera, 1, 8, 4, 8);
+    let cluster = ClusterConfig { n_devices: 8, devices_per_node: 4, ..Default::default() };
+    (s, CostModel::new(&BERT_64, &p, &cluster))
+}
+
+#[test]
+fn queued_rings_agree_and_keep_the_solo_anchor() {
+    // Solo rings never share a wire: both strategies project each hop
+    // once at insertion, so they are bitwise equal to each other AND to
+    // the uncontended scalar chain — the solo-ring anchor, re-pinned
+    // under the incremental default.
+    for rounds in [1usize, 3] {
+        let (s, c) = rings_only_schedule(&[1], rounds);
+        check_impls_agree(&format!("queued rings x{rounds}"), &s, &c, 1, Contention::Full);
+        let off = simulate_schedule(&s, &c).unwrap();
+        for imp in [NetworkImpl::Incremental, NetworkImpl::Global] {
+            let on = simulate_schedule_network(&s, &c, Contention::Full, imp).unwrap();
+            assert_eq!(
+                on.makespan.to_bits(),
+                off.makespan.to_bits(),
+                "rounds={rounds} {imp:?}: solo ring drifted from the scalar formula"
+            );
+        }
+    }
+    // Two concurrent rings through one NIC pair: shared wires, both
+    // strategies within tolerance and both ~2x the solo duration.
+    let (solo_s, c) = rings_only_schedule(&[1], 1);
+    let (both_s, _) = rings_only_schedule(&[1, 2], 1);
+    check_impls_agree("two rings one NIC pair", &both_s, &c, 1, Contention::Full);
+    let solo = simulate_schedule_network(&solo_s, &c, Contention::Full, NetworkImpl::Incremental)
+        .unwrap()
+        .makespan;
+    let both = simulate_schedule_network(&both_s, &c, Contention::Full, NetworkImpl::Incremental)
+        .unwrap()
+        .makespan;
+    let ratio = both / solo;
+    assert!(
+        (1.95..=2.05).contains(&ratio),
+        "incremental: two rings through one NIC pair ratio {ratio}"
+    );
+}
+
+#[test]
+fn nic_fanout_agrees_across_impls() {
+    // The NIC fan-out scenario from rust/tests/contention.rs: one node
+    // sending to two different peers shares its single egress NIC.
+    let build_case = |both: bool| {
+        let placement = placement_for(ScheduleKind::Dapple, 6, 1);
+        let cfg = ScheduleConfig::new(ScheduleKind::Dapple, 6, 6);
+        let mut device_ops = vec![Vec::new(); 6];
+        device_ops[0].push(Instr::SendAct { to: 2, pipe: 0, stage: 0, mb: 0 });
+        device_ops[2] = vec![Instr::RecvAct { from: 0, pipe: 0, stage: 1, mb: 0 }];
+        if both {
+            device_ops[0].push(Instr::SendAct { to: 4, pipe: 0, stage: 0, mb: 1 });
+            device_ops[4] = vec![Instr::RecvAct { from: 0, pipe: 0, stage: 1, mb: 1 }];
+        }
+        Schedule {
+            cfg,
+            placement,
+            compute_order: vec![Vec::new(); 6],
+            device_ops,
+            pipe_of_mb: vec![0; 6],
+        }
+    };
+    for ib_model in [IbModel::NodeNic, IbModel::NodePair] {
+        let p = ParallelConfig::new(ScheduleKind::Dapple, 1, 6, 4, 6);
+        let cluster =
+            ClusterConfig { n_devices: 6, devices_per_node: 2, ib_model, ..Default::default() };
+        let c = CostModel::new(&BERT_64, &p, &cluster);
+        for both in [false, true] {
+            let s = build_case(both);
+            let tag = format!("fan-out both={both} {ib_model:?}");
+            check_impls_agree(&tag, &s, &c, 1, Contention::Full);
+        }
+    }
+    // The aggregation ratio itself survives on the incremental default.
+    let p = ParallelConfig::new(ScheduleKind::Dapple, 1, 6, 4, 6);
+    let cluster = ClusterConfig { n_devices: 6, devices_per_node: 2, ..Default::default() };
+    let c = CostModel::new(&BERT_64, &p, &cluster);
+    let inc = NetworkImpl::Incremental;
+    let solo = simulate_schedule_network(&build_case(false), &c, Contention::Full, inc)
+        .unwrap()
+        .makespan;
+    let fan = simulate_schedule_network(&build_case(true), &c, Contention::Full, inc)
+        .unwrap()
+        .makespan;
+    let ratio = fan / solo;
+    assert!((1.9..=2.1).contains(&ratio), "incremental NIC fan-out ratio {ratio}");
+}
+
+#[test]
+fn contended_grid_search_is_thread_count_invariant() {
+    // The StreamCache sweep collects worker results in canonical
+    // candidate order: the threaded default must be byte-for-byte the
+    // single-threaded sweep.
+    for (gpus, minibatch) in [(16usize, 64usize), (32, 128)] {
+        let par = grid_search_opts(
+            ScheduleKind::BitPipe,
+            &BERT_64,
+            &GridSpace::bert64(),
+            gpus,
+            minibatch,
+            true,
+        )
+        .unwrap();
+        let ser = grid_search_contended_serial(
+            ScheduleKind::BitPipe,
+            &BERT_64,
+            &GridSpace::bert64(),
+            gpus,
+            minibatch,
+        )
+        .unwrap();
+        assert_eq!(par.len(), ser.len());
+        assert!(!par.is_empty());
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(
+                (a.parallel.w, a.parallel.d, a.parallel.b, a.parallel.n),
+                (b.parallel.w, b.parallel.d, b.parallel.b, b.parallel.n)
+            );
+            assert_eq!(a.result.throughput.to_bits(), b.result.throughput.to_bits());
+            assert_eq!(a.result.iter_time.to_bits(), b.result.iter_time.to_bits());
+            assert_eq!(a.result.peak_memory(), b.result.peak_memory());
+        }
+    }
+}
+
+#[test]
+fn fast_contended_sweep_tracks_the_baseline_within_tolerance() {
+    // Same candidates, same feasibility filter, same ordering decisions:
+    // the StreamCache + incremental sweep differs from the PR-4 baseline
+    // (rebuild per point + global settlement) only by settlement
+    // rounding, so per-point throughputs agree to <= 1e-9 relative.
+    let fast = grid_search_opts(
+        ScheduleKind::BitPipe,
+        &BERT_64,
+        &GridSpace::bert64(),
+        16,
+        64,
+        true,
+    )
+    .unwrap();
+    let base = grid_search_opts_baseline(
+        ScheduleKind::BitPipe,
+        &BERT_64,
+        &GridSpace::bert64(),
+        16,
+        64,
+    )
+    .unwrap();
+    assert_eq!(fast.len(), base.len());
+    assert!(!fast.is_empty());
+    for a in &fast {
+        let key = (a.parallel.w, a.parallel.d, a.parallel.b, a.parallel.n);
+        let b = base
+            .iter()
+            .find(|p| (p.parallel.w, p.parallel.d, p.parallel.b, p.parallel.n) == key)
+            .expect("point missing from baseline sweep");
+        assert!(
+            rel(a.result.throughput, b.result.throughput) <= TOL,
+            "{key:?}: fast {} vs baseline {}",
+            a.result.throughput,
+            b.result.throughput
+        );
+    }
+}
