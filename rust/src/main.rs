@@ -8,6 +8,8 @@
 //!                    [--iters N [--warmup K]] [--contention]
 //!                    [--ib-model nic|pair] [--engine auto|event|dag]
 //!                    [--network inc|global]
+//! bitpipe lint       [--kind bitpipe|all] [--d 4] [--n 8] [--v 2]
+//!                    [--sync eager|lazy] [--json]
 //! bitpipe eval-paper [--only table2,fig9,...] (default: all)
 //! bitpipe train      --artifacts DIR --kind bitpipe --d 4 --n 8 --steps 50
 //!                    [--dataset synthetic|corpus] [--lr 1e-3] [--seed 42]
@@ -42,6 +44,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let flags = parse_flags(&args[1..])?;
     match cmd.as_str() {
         "schedule" => cmd_schedule(&flags),
+        "lint" => cmd_lint(&flags),
         "simulate" => cmd_simulate(&flags),
         "eval-paper" => cmd_eval_paper(&flags),
         "train" => cmd_train(&flags),
@@ -60,6 +63,7 @@ fn print_usage() {
          USAGE: bitpipe <command> [--flag value ...]\n\n\
          COMMANDS:\n  \
          schedule    render a pipeline schedule timeline + analytic report\n  \
+         lint        statically analyze schedules: deadlocks, memory, sync\n  \
          simulate    simulate one training iteration on the modeled cluster\n  \
          eval-paper  regenerate the paper's tables and figures\n  \
          train       real training run over AOT artifacts (threads-as-devices)\n  \
@@ -156,6 +160,37 @@ fn cmd_schedule(flags: &HashMap<String, String>) -> Result<()> {
         r.comm_formula.local_copies,
         r.makespan,
     );
+    Ok(())
+}
+
+/// Statically analyze one schedule (or `--kind all`): deadlock-freedom,
+/// memory bounds, sync placement. Exit nonzero iff any Error diagnostic.
+fn cmd_lint(flags: &HashMap<String, String>) -> Result<()> {
+    let d = get_usize(flags, "d", 4)?;
+    let n = get_usize(flags, "n", d)?;
+    let sync = get_sync(flags)?;
+    let json = flags.contains_key("json");
+    let kinds: Vec<ScheduleKind> = match get(flags, "kind").unwrap_or("bitpipe") {
+        "all" => ScheduleKind::ALL.to_vec(),
+        name => vec![ScheduleKind::parse(name)
+            .with_context(|| format!("unknown schedule kind {name:?}"))?],
+    };
+    let mut errors = 0usize;
+    for kind in kinds {
+        let v = get_usize(flags, "v", kind.default_v())?;
+        let cfg = ScheduleConfig::new(kind, d, n).with_v(v).with_sync(sync);
+        let s = schedule::build(&cfg)?;
+        let report = schedule::lint(&s);
+        if json {
+            println!("{}", report.to_json(&s));
+        } else {
+            print!("{}", report.render_human(&s));
+        }
+        errors += report.counts().0;
+    }
+    if errors > 0 {
+        bail!("lint found {errors} error(s)");
+    }
     Ok(())
 }
 

@@ -12,7 +12,7 @@
 
 use super::asap::{retime, Costs, TimedSchedule};
 use super::comm_pass::{local_copy_counts, p2p_send_counts};
-use super::ir::{OpKind, Schedule, ScheduleKind};
+use super::ir::{Instr, OpKind, Schedule, ScheduleKind};
 use anyhow::Result;
 
 /// Closed-form bubble ratio of each approach (paper Table 2), with the
@@ -147,6 +147,32 @@ pub fn bubble_ratio_measured(s: &Schedule, costs: &Costs) -> Result<f64> {
     let t = retime(&s.compute_order, &s.placement, costs)
         .map_err(|e| anyhow::anyhow!("retime: {e}"))?;
     Ok(t.bubble_ratio())
+}
+
+/// Static liveness high-water per device, in *chunk* units, walked over
+/// the full instruction streams (`device_ops`): an activation stash is
+/// born at each `Forward` and freed at the matching `Backward`, and the
+/// streams execute in order per device, so the program-order walk is
+/// exact — it equals (and therefore upper-bounds) the peak of any
+/// execution. Integer-exact; [`peak_activation_stash`] reports the same
+/// quantity in `M_a` units measured from `compute_order`, and
+/// `schedule::lint` cross-checks the two.
+pub fn stash_high_water_chunks(s: &Schedule) -> Vec<u64> {
+    s.device_ops
+        .iter()
+        .map(|ops| {
+            let (mut depth, mut peak) = (0i64, 0i64);
+            for op in ops {
+                match op {
+                    Instr::Forward { .. } => depth += 1,
+                    Instr::Backward { .. } => depth -= 1,
+                    _ => {}
+                }
+                peak = peak.max(depth);
+            }
+            peak.max(0) as u64
+        })
+        .collect()
 }
 
 /// Per-device peak activation stash depth, in units of one chunk's

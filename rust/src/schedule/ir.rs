@@ -106,6 +106,11 @@ impl Instr {
             _ => None,
         }
     }
+
+    /// Is this a compute op (Forward/Backward)?
+    pub fn is_compute(&self) -> bool {
+        matches!(self, Instr::Forward { .. } | Instr::Backward { .. })
+    }
 }
 
 impl fmt::Display for Instr {
@@ -302,6 +307,15 @@ pub enum SyncPolicy {
     /// Synchronize every stage after all local compute (paper Fig 5a; the
     /// `w/o E` ablation of Table 5).
     Lazy,
+}
+
+impl SyncPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            SyncPolicy::Eager => "eager",
+            SyncPolicy::Lazy => "lazy",
+        }
+    }
 }
 
 /// Parameters selecting and shaping a schedule.

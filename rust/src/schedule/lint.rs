@@ -1,0 +1,767 @@
+//! Static schedule analyzer: proves deadlock-freedom, memory bounds, and
+//! sync placement on the IR without running a simulator.
+//!
+//! BitPipe's fused bidirectional schedules are exactly where hand-written
+//! and searched schedules go wrong — deadlocked send/recv cycles, FIFO tag
+//! inversions, eager all-reduces launched late (§4.3), activation stashes
+//! past the V-shape's bound. Before this module, every one of those was
+//! discovered *dynamically*: the event engine hangs, or
+//! [`super::analysis::peak_activation_stash`] measures after the fact.
+//! [`lint`] finds them from the instruction streams alone:
+//!
+//! * **Deadlock** — the dependence structure ([`EdgeArena`]) is checked
+//!   for permanently-parked nodes (unmatched receives, entry-stage
+//!   receives, collectives a member never starts) and for genuine cycles,
+//!   reported with the *shortest* offending instruction cycle as a
+//!   witness instead of a simulator hang.
+//! * **Memory** — liveness high-water per device (activation born at `F`,
+//!   freed at the matching `B`; the per-device program-order walk is
+//!   exact, hence an upper bound on any execution), cross-checked against
+//!   `analysis::peak_activation_stash` and the family's Table-2 ceiling.
+//! * **Sync placement** — beyond `validate`'s ordering errors, the eager
+//!   policy is checked *two-sided*: a start that could have fired directly
+//!   after the last backward but is delayed past other work is a warning
+//!   (the paper's eager-sync claim, Fig 5b).
+//! * **FIFO hazards** — same-tag reorder ambiguity, sends nothing ever
+//!   receives, each anchored at the concrete instruction.
+//!
+//! Diagnostics are severity-leveled ([`Severity`]): `Error` means the
+//! schedule is wrong (and [`super::validate::validate`] fails), `Warn`
+//! means legal-but-weaker-than-promised, `Info` carries derived facts.
+//! The `bitpipe lint` CLI subcommand renders reports human-readable or as
+//! one JSON object per schedule; `rust/tests/lint_equiv.rs` pins the
+//! analyzer against actual execution, and the Python mirror
+//! (`.claude/skills/verify/pymirror/verify_lint.py`) reproduces the JSON
+//! byte for byte.
+
+use super::analysis::{peak_activation_stash, stash_high_water_chunks};
+use super::ir::{Instr, Schedule, ScheduleKind, SyncPolicy};
+use super::{json_escape, validate, Diagnostic, Diagnostics, Severity, Site};
+use crate::sim::{EdgeArena, ParkReason};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+/// Result of statically analyzing one schedule.
+#[derive(Debug)]
+pub struct LintReport {
+    /// All findings, sorted most-severe first (then code, site, message).
+    pub diags: Vec<Diagnostic>,
+    /// Per-device activation-stash high-water, in chunk units
+    /// ([`stash_high_water_chunks`]).
+    pub stash_high_water: Vec<u64>,
+}
+
+impl LintReport {
+    /// (errors, warnings, infos).
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for d in &self.diags {
+            match d.severity {
+                Severity::Error => c.0 += 1,
+                Severity::Warn => c.1 += 1,
+                Severity::Info => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.counts().0 > 0
+    }
+
+    /// All diagnostics with the given code.
+    pub fn with_code(&self, code: &str) -> Vec<&Diagnostic> {
+        self.diags.iter().filter(|d| d.code == code).collect()
+    }
+
+    /// Human-readable report.
+    pub fn render_human(&self, s: &Schedule) -> String {
+        let cfg = &s.cfg;
+        let mut out = format!(
+            "lint: kind={} D={} N={} v={} sync={}\n",
+            cfg.kind.name(),
+            cfg.d,
+            cfg.n,
+            cfg.v,
+            cfg.sync.name()
+        );
+        for d in &self.diags {
+            out.push_str(&format!("  {d}\n"));
+            for w in &d.witness {
+                out.push_str(&format!("      -> {w}\n"));
+            }
+        }
+        let (e, w, i) = self.counts();
+        out.push_str(&format!(
+            "summary: {e} error(s), {w} warning(s), {i} info; stash high-water {:?} chunks\n",
+            self.stash_high_water
+        ));
+        out
+    }
+
+    /// Machine output: one JSON object (single line, deterministic field
+    /// and diagnostic order, integer-only numbers). The Python mirror
+    /// reproduces this byte for byte — keep the two in sync.
+    pub fn to_json(&self, s: &Schedule) -> String {
+        let cfg = &s.cfg;
+        let mut out = format!(
+            "{{\"schedule\":{{\"kind\":\"{}\",\"d\":{},\"n\":{},\"v\":{},\"sync\":\"{}\"}}",
+            cfg.kind.name(),
+            cfg.d,
+            cfg.n,
+            cfg.v,
+            cfg.sync.name()
+        );
+        let (e, w, i) = self.counts();
+        out.push_str(&format!(",\"counts\":{{\"error\":{e},\"warn\":{w},\"info\":{i}}}"));
+        out.push_str(",\"stash_high_water\":[");
+        for (k, hw) in self.stash_high_water.iter().enumerate() {
+            if k > 0 {
+                out.push(',');
+            }
+            out.push_str(&hw.to_string());
+        }
+        out.push_str("],\"diags\":[");
+        for (k, d) in self.diags.iter().enumerate() {
+            if k > 0 {
+                out.push(',');
+            }
+            out.push_str(&diag_json(d));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+fn opt_usize_json(v: Option<usize>) -> String {
+    v.map_or_else(|| "null".to_string(), |x| x.to_string())
+}
+
+fn opt_str_json(s: &str) -> String {
+    if s.is_empty() {
+        "null".to_string()
+    } else {
+        format!("\"{}\"", json_escape(s))
+    }
+}
+
+fn site_json(site: &Site) -> String {
+    format!(
+        "{{\"dev\":{},\"ix\":{},\"instr\":{}}}",
+        opt_usize_json(site.device),
+        opt_usize_json(site.index),
+        opt_str_json(&site.instr)
+    )
+}
+
+fn diag_json(d: &Diagnostic) -> String {
+    let mut wit = String::from("[");
+    for (i, s) in d.witness.iter().enumerate() {
+        if i > 0 {
+            wit.push(',');
+        }
+        wit.push_str(&site_json(s));
+    }
+    wit.push(']');
+    format!(
+        "{{\"sev\":\"{}\",\"code\":\"{}\",\"msg\":\"{}\",\"dev\":{},\"ix\":{},\"instr\":{},\"witness\":{}}}",
+        d.severity.name(),
+        d.code,
+        json_escape(&d.message),
+        opt_usize_json(d.site.device),
+        opt_usize_json(d.site.index),
+        opt_str_json(&d.site.instr),
+        wit
+    )
+}
+
+/// Run every analysis pass over `s` and return the sorted report.
+pub fn lint(s: &Schedule) -> LintReport {
+    let mut out = Diagnostics::new();
+    validate::collect(s, &mut out);
+    let stash = stash_high_water_chunks(s);
+    lint_memory(s, &stash, &mut out);
+    lint_sync_placement(s, &mut out);
+    lint_fifo(s, &mut out);
+    lint_deadlock(s, &mut out);
+    out.sort_for_report();
+    LintReport { diags: out.into_vec(), stash_high_water: stash }
+}
+
+/// Upper bound on the per-device stash depth each family promises, in
+/// chunk units (Table 2's activation column, ceiled to the loosest member
+/// of each family so every legal generator output fits under it).
+pub fn family_stash_ceiling(kind: ScheduleKind, d: usize, n: usize, v: usize) -> u64 {
+    match kind {
+        // GPipe stashes every micro-batch before draining.
+        ScheduleKind::GPipe => (n * v) as u64,
+        // GEMS: at most two concurrent micro-batches.
+        ScheduleKind::Gems => (2 * v) as u64,
+        // 1F1B: at most D in-flight micro-batches, one chunk each.
+        ScheduleKind::Dapple => (d * v) as u64,
+        // Megatron interleaved warmup: device r stashes up to
+        // D*(v-1) + 2*(D-r) - 1 chunks, maximized at r=0 as D*(v+1)-1.
+        ScheduleKind::Interleaved => (d * (v + 1)) as u64,
+        // V-shaped greedy is capped at D*v in-flight micro-batches, and
+        // each one can stash on a device once per chunk level it hosts
+        // there (v=2 on the V placement), so 2*D*v bounds the stash.
+        ScheduleKind::VShaped => (2 * d * v) as u64,
+        // Bidirectional: two pipes can each stash up to their unidirectional
+        // bound on a shared device (the generators stay well below; the
+        // paper's Table-2 "D x M_a" bound is d*v chunks total, but the
+        // N>D early-forward portfolio is ceilinged at 2*d*v by
+        // construction, so that is the hard line the linter enforces).
+        ScheduleKind::Chimera
+        | ScheduleKind::MixPipe
+        | ScheduleKind::BitPipe
+        | ScheduleKind::BitPipeNoV => (2 * d * v) as u64,
+    }
+}
+
+/// Memory pass: liveness high-water vs the family ceiling, a negative
+/// stash (freeing what was never stashed), and the cross-check against
+/// `analysis::peak_activation_stash` (compute-order walk).
+fn lint_memory(s: &Schedule, stash: &[u64], out: &mut Diagnostics) {
+    let cfg = &s.cfg;
+    let ceiling = family_stash_ceiling(cfg.kind, cfg.d, cfg.n, cfg.v);
+
+    // Negative stash: a Backward on a device that holds no live stash.
+    for (dv, ops) in s.device_ops.iter().enumerate() {
+        let mut depth = 0i64;
+        for (ix, ins) in ops.iter().enumerate() {
+            match ins {
+                Instr::Forward { .. } => depth += 1,
+                Instr::Backward { .. } => {
+                    depth -= 1;
+                    if depth < 0 {
+                        out.error(
+                            "mem-negative-stash",
+                            format!(
+                                "device {dv}: {ins} frees an activation that was never stashed locally"
+                            ),
+                            Site::at(dv, ix, ins),
+                        );
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // High-water fact + ceiling check.
+    let (mut peak, mut peak_dev) = (0u64, 0usize);
+    for (dv, &hw) in stash.iter().enumerate() {
+        if hw > peak {
+            peak = hw;
+            peak_dev = dv;
+        }
+        if hw > ceiling {
+            out.warn(
+                "mem-ceiling-exceeded",
+                format!(
+                    "device {dv}: stash high-water {hw} chunk(s) exceeds the {} ceiling of {ceiling}",
+                    cfg.kind.name()
+                ),
+                Site::device(dv),
+            );
+        }
+    }
+    out.info(
+        "mem-high-water",
+        format!(
+            "static activation high-water: {peak} chunk(s) on device {peak_dev}; family ceiling {ceiling} chunk(s)"
+        ),
+        Site::device(peak_dev),
+    );
+
+    // Cross-check against the compute-order measurement (Table 2's
+    // measured column). Skipped for stream-only (hand-built) schedules.
+    if s.compute_order.iter().any(|o| !o.is_empty()) {
+        let v = s.placement.v as f64;
+        for (dv, ma) in peak_activation_stash(s).iter().enumerate() {
+            let chunks = (ma * v).round() as u64;
+            if chunks != stash[dv] {
+                out.warn(
+                    "mem-stash-mismatch",
+                    format!(
+                        "device {dv}: stream high-water {} chunk(s) != compute-order high-water {chunks}",
+                        stash[dv]
+                    ),
+                    Site::device(dv),
+                );
+            }
+        }
+    }
+}
+
+/// Sync-placement pass: out-of-range collective/optimizer stages, and the
+/// two-sided eager check — between a stage's last backward and its
+/// `AllReduceStart`, only sends and other starts may appear, otherwise
+/// the start is later than it could legally be (`validate` only rejects
+/// starts delayed past *compute*; this warning covers the rest of the
+/// paper's §4.3 eager claim).
+fn lint_sync_placement(s: &Schedule, out: &mut Diagnostics) {
+    let n_stages = s.placement.n_stages();
+    for (dv, ops) in s.device_ops.iter().enumerate() {
+        let mut last_bwd: HashMap<usize, usize> = HashMap::new();
+        let mut first_start: BTreeMap<usize, usize> = BTreeMap::new();
+        for (ix, ins) in ops.iter().enumerate() {
+            match *ins {
+                Instr::Backward { stage, .. } => {
+                    last_bwd.insert(stage, ix);
+                }
+                Instr::AllReduceStart { stage } => {
+                    if stage >= n_stages {
+                        out.error(
+                            "allreduce-unknown-stage",
+                            format!(
+                                "device {dv}: AllReduceStart for stage {stage} outside the placement (n_stages {n_stages})"
+                            ),
+                            Site::at(dv, ix, ins),
+                        );
+                    } else {
+                        first_start.entry(stage).or_insert(ix);
+                    }
+                }
+                Instr::OptimStep { stage } if stage >= n_stages => {
+                    out.warn(
+                        "optim-unknown-stage",
+                        format!(
+                            "device {dv}: OptimStep for stage {stage} outside the placement (n_stages {n_stages})"
+                        ),
+                        Site::at(dv, ix, ins),
+                    );
+                }
+                _ => {}
+            }
+        }
+        if s.cfg.sync != SyncPolicy::Eager {
+            continue;
+        }
+        for (&stage, &a) in &first_start {
+            let Some(&b) = last_bwd.get(&stage) else { continue };
+            if a <= b {
+                continue; // start-before-backward is validate's error
+            }
+            let blocker = ops[b + 1..a].iter().enumerate().find(|(_, i)| {
+                !matches!(
+                    i,
+                    Instr::SendAct { .. } | Instr::SendGrad { .. } | Instr::AllReduceStart { .. }
+                )
+            });
+            if let Some((off, blk)) = blocker {
+                let mut d = Diagnostic {
+                    severity: Severity::Warn,
+                    code: "eager-delayed-start",
+                    message: format!(
+                        "device {dv}: eager AllReduceStart s{stage} delayed past {blk}; it could fire directly after the last backward"
+                    ),
+                    site: Site::at(dv, a, &ops[a]),
+                    witness: Vec::new(),
+                };
+                d.witness.push(Site::at(dv, b, &ops[b]));
+                d.witness.push(Site::at(dv, b + 1 + off, blk));
+                out.push(d);
+            }
+        }
+    }
+}
+
+/// FIFO-hazard pass: per message tag, surplus sends are errors (data the
+/// consumer never picks up; surplus *receives* park and surface from the
+/// deadlock pass), and tags carrying two or more concurrent messages on
+/// both sides are flagged — the runtime pairs them FIFO by program order,
+/// which is a convention, not a declared dependence.
+fn lint_fifo(s: &Schedule, out: &mut Diagnostics) {
+    type Tag = (usize, usize, bool, usize, usize, usize);
+    let mut tags: BTreeMap<Tag, (Vec<(usize, usize)>, Vec<(usize, usize)>)> = BTreeMap::new();
+    for (dv, ops) in s.device_ops.iter().enumerate() {
+        for (ix, ins) in ops.iter().enumerate() {
+            match *ins {
+                Instr::SendAct { to, pipe, stage, mb } => {
+                    tags.entry((dv, to, false, pipe, stage, mb)).or_default().0.push((dv, ix));
+                }
+                Instr::SendGrad { to, pipe, stage, mb } => {
+                    tags.entry((dv, to, true, pipe, stage, mb)).or_default().0.push((dv, ix));
+                }
+                Instr::RecvAct { from, pipe, stage, mb } if stage > 0 => {
+                    tags.entry((from, dv, false, pipe, stage - 1, mb))
+                        .or_default()
+                        .1
+                        .push((dv, ix));
+                }
+                Instr::RecvGrad { from, pipe, stage, mb } => {
+                    tags.entry((from, dv, true, pipe, stage + 1, mb)).or_default().1.push((dv, ix));
+                }
+                _ => {}
+            }
+        }
+    }
+    for (tag, (snd, rcv)) in &tags {
+        let (from, to, is_grad, pipe, stage, mb) = *tag;
+        if snd.len() >= 2 && rcv.len() >= 2 {
+            let payload = if is_grad { "grad" } else { "act" };
+            let mut d = Diagnostic {
+                severity: Severity::Warn,
+                code: "fifo-reorder-ambiguity",
+                message: format!(
+                    "message tag ({from}->{to}, {payload}, pipe {pipe}, stage {stage}, mb {mb}) carries {} concurrent messages; pairing falls back to FIFO program order",
+                    snd.len().min(rcv.len())
+                ),
+                site: site_of_stream(s, snd[0]),
+                witness: Vec::new(),
+            };
+            for &p in snd.iter().chain(rcv.iter()) {
+                d.witness.push(site_of_stream(s, p));
+            }
+            out.push(d);
+        }
+        for &(dv, ix) in &snd[rcv.len().min(snd.len())..] {
+            let ins = &s.device_ops[dv][ix];
+            out.error(
+                "fifo-unpaired-send",
+                format!("device {dv}: {ins} is never received"),
+                Site::at(dv, ix, ins),
+            );
+        }
+    }
+}
+
+fn site_of_stream(s: &Schedule, (dv, ix): (usize, usize)) -> Site {
+    Site::at(dv, ix, &s.device_ops[dv][ix])
+}
+
+/// Deadlock pass: lowers the schedule to its dependence structure and
+/// reports (1) permanently-parked nodes, (2) the shortest genuine
+/// dependence cycle, (3) chain-only inconsistency (the DAG backend's
+/// `DagUnsupported` fallback), plus the graph-size fact.
+fn lint_deadlock(s: &Schedule, out: &mut Diagnostics) {
+    let arena = EdgeArena::lower(s);
+    out.info(
+        "graph-summary",
+        format!(
+            "dependence graph: {} nodes ({} instructions, {} collective rounds), {} edges, {} paired messages",
+            arena.n_nodes,
+            arena.n_real,
+            arena.n_nodes - arena.n_real,
+            arena.edges.len(),
+            arena.n_msgs
+        ),
+        Site::none(),
+    );
+
+    for &(node, reason) in &arena.parked {
+        match reason {
+            ParkReason::EntryStageRecv | ParkReason::UnmatchedRecv | ParkReason::OutOfRangeWait => {
+                let (dv, ix) = arena.site_of(node).expect("parked instruction node");
+                let ins = &s.device_ops[dv][ix];
+                let why = match reason {
+                    ParkReason::EntryStageRecv => "an entry-stage producer that cannot exist",
+                    ParkReason::UnmatchedRecv => "a message no device ever sends",
+                    _ => "a collective outside the placement",
+                };
+                out.error(
+                    "deadlock-parked",
+                    format!("device {dv}: {ins} waits for {why}"),
+                    Site::at(dv, ix, ins),
+                );
+            }
+            ParkReason::MissingMemberStart(g) => {
+                let c = node as usize - arena.n_real;
+                let (stage, round) = (arena.barrier_stage[c], arena.barrier_round[c]);
+                // Anchor at the earliest waiter this parks, if any.
+                let site = arena
+                    .edges
+                    .iter()
+                    .filter(|&&(a, b)| a == node && (b as usize) < arena.n_real)
+                    .map(|&(_, b)| b)
+                    .min()
+                    .and_then(|w| arena.site_of(w))
+                    .map(|(dv, ix)| Site::at(dv, ix, &s.device_ops[dv][ix]))
+                    .unwrap_or_else(Site::none);
+                out.error(
+                    "deadlock-parked",
+                    format!(
+                        "collective s{stage} round {round}: member device {g} never launches its AllReduceStart, parking every waiter"
+                    ),
+                    site,
+                );
+            }
+        }
+    }
+
+    for &node in &arena.oversized_starts {
+        let (dv, ix) = arena.site_of(node).expect("oversized start is an instruction");
+        let ins = &s.device_ops[dv][ix];
+        out.error(
+            "allreduce-unknown-stage",
+            format!("device {dv}: {ins} addresses a collective outside the placement"),
+            Site::at(dv, ix, ins),
+        );
+    }
+
+    // Genuine cycles: Kahn over real edges, parked nodes treated as
+    // fireable so only true circular waits remain.
+    let order = arena.toposort(false, false);
+    if order.len() < arena.n_nodes {
+        let cycle = shortest_cycle(&arena, &order);
+        let sites: Vec<Site> = cycle.iter().map(|&n| arena_site(s, &arena, n)).collect();
+        let site = sites.first().cloned().unwrap_or_else(Site::none);
+        out.push(Diagnostic {
+            severity: Severity::Error,
+            code: "deadlock-cycle",
+            message: format!(
+                "dependence cycle of {} instructions: the schedule can never complete",
+                cycle.len()
+            ),
+            site,
+            witness: sites,
+        });
+    } else {
+        let with_chains = arena.toposort(true, false);
+        if with_chains.len() < arena.n_nodes {
+            out.warn(
+                "collective-order",
+                "devices disagree on the serialization order of shared collectives; the DAG backend falls back to the event engine",
+                Site::none(),
+            );
+        }
+    }
+}
+
+fn arena_site(s: &Schedule, arena: &EdgeArena, node: u32) -> Site {
+    match arena.site_of(node) {
+        Some((dv, ix)) => Site::at(dv, ix, &s.device_ops[dv][ix]),
+        None => {
+            let c = node as usize - arena.n_real;
+            Site {
+                device: None,
+                index: None,
+                instr: format!(
+                    "barrier(allreduce s{} round {})",
+                    arena.barrier_stage[c], arena.barrier_round[c]
+                ),
+            }
+        }
+    }
+}
+
+/// Plain Kahn's algorithm (no chains, no parking) used for the reverse
+/// trim of the cycle search.
+fn kahn(n_nodes: usize, edges: &[(u32, u32)]) -> Vec<u32> {
+    let mut indeg = vec![0u32; n_nodes];
+    let mut succ: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
+    for &(a, b) in edges {
+        indeg[b as usize] += 1;
+        succ[a as usize].push(b);
+    }
+    let mut ready: Vec<u32> =
+        (0..n_nodes as u32).rev().filter(|&i| indeg[i as usize] == 0).collect();
+    let mut order = Vec::with_capacity(n_nodes);
+    while let Some(nid) = ready.pop() {
+        order.push(nid);
+        for &nx in &succ[nid as usize] {
+            indeg[nx as usize] -= 1;
+            if indeg[nx as usize] == 0 {
+                ready.push(nx);
+            }
+        }
+    }
+    order
+}
+
+/// Shortest dependence cycle, as a node sequence (first node repeats
+/// implicitly). `fwd_order` is the incomplete forward Kahn order.
+///
+/// Nodes missed by the forward sort are on or downstream of a cycle;
+/// nodes missed by the *reverse* sort are on or upstream of one. The
+/// intersection tightly over-approximates the cyclic region; a BFS from
+/// each region node (ascending, capped) finds the globally shortest
+/// cycle deterministically. Iterative throughout — no recursion, so
+/// adversarial schedules cannot blow the stack.
+fn shortest_cycle(arena: &EdgeArena, fwd_order: &[u32]) -> Vec<u32> {
+    let n = arena.n_nodes;
+    let mut in_region = vec![true; n];
+    for &x in fwd_order {
+        in_region[x as usize] = false;
+    }
+    let rev_edges: Vec<(u32, u32)> = arena.edges.iter().map(|&(a, b)| (b, a)).collect();
+    for &x in &kahn(n, &rev_edges) {
+        in_region[x as usize] = false;
+    }
+    let region: Vec<u32> = (0..n as u32).filter(|&i| in_region[i as usize]).collect();
+
+    let mut succ: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for &(a, b) in &arena.edges {
+        if in_region[a as usize] && in_region[b as usize] {
+            succ[a as usize].push(b);
+        }
+    }
+
+    let mut best: Vec<u32> = Vec::new();
+    for &start in region.iter().take(256) {
+        let mut parent: HashMap<u32, u32> = HashMap::new();
+        let mut dist: HashMap<u32, usize> = HashMap::new();
+        dist.insert(start, 0);
+        let mut q = VecDeque::from([start]);
+        let mut closes: Option<u32> = None;
+        'bfs: while let Some(x) = q.pop_front() {
+            let dx = dist[&x];
+            if !best.is_empty() && dx + 1 >= best.len() {
+                continue; // cannot beat the best cycle found so far
+            }
+            for &y in &succ[x as usize] {
+                if y == start {
+                    closes = Some(x);
+                    break 'bfs;
+                }
+                if !dist.contains_key(&y) {
+                    dist.insert(y, dx + 1);
+                    parent.insert(y, x);
+                    q.push_back(y);
+                }
+            }
+        }
+        if let Some(last) = closes {
+            let mut path = vec![last];
+            let mut cur = last;
+            while cur != start {
+                cur = parent[&cur];
+                path.push(cur);
+            }
+            path.reverse();
+            if best.is_empty() || path.len() < best.len() {
+                best = path;
+            }
+            if best.len() == 2 {
+                break;
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::ir::ScheduleConfig;
+    use crate::schedule::{build, placement_for};
+
+    fn built(kind: ScheduleKind, d: usize, n: usize) -> Schedule {
+        build(&ScheduleConfig::new(kind, d, n)).unwrap()
+    }
+
+    #[test]
+    fn generated_families_are_lint_clean() {
+        for kind in ScheduleKind::ALL {
+            let s = built(kind, 4, 8);
+            let r = lint(&s);
+            let (e, w, _) = r.counts();
+            assert_eq!((e, w), (0, 0), "{kind}: {:?}", r.diags);
+        }
+    }
+
+    #[test]
+    fn clean_report_has_graph_and_memory_facts() {
+        let r = lint(&built(ScheduleKind::BitPipe, 4, 8));
+        assert_eq!(r.with_code("graph-summary").len(), 1);
+        assert_eq!(r.with_code("mem-high-water").len(), 1);
+        assert_eq!(r.stash_high_water.len(), 4);
+        assert!(r.stash_high_water.iter().any(|&p| p > 0));
+    }
+
+    #[test]
+    fn high_water_matches_analysis_in_chunks() {
+        for kind in ScheduleKind::ALL {
+            let s = built(kind, 4, 8);
+            let r = lint(&s);
+            let v = s.placement.v as f64;
+            for (dv, ma) in peak_activation_stash(&s).iter().enumerate() {
+                assert_eq!(r.stash_high_water[dv], (ma * v).round() as u64, "{kind} dev {dv}");
+            }
+        }
+    }
+
+    #[test]
+    fn dropped_send_parks_the_recv() {
+        let mut s = built(ScheduleKind::Dapple, 4, 4);
+        let ix = s.device_ops[0]
+            .iter()
+            .position(|i| matches!(i, Instr::SendAct { .. }))
+            .unwrap();
+        s.device_ops[0].remove(ix);
+        let r = lint(&s);
+        let parked = r.with_code("deadlock-parked");
+        assert!(!parked.is_empty(), "{:?}", r.diags);
+        assert!(parked[0].message.contains("no device ever sends"), "{}", parked[0].message);
+        assert!(parked[0].site.instr.starts_with("RA"), "{}", parked[0].site.instr);
+    }
+
+    #[test]
+    fn dropped_recv_is_an_unpaired_send() {
+        let mut s = built(ScheduleKind::Dapple, 4, 4);
+        let ix = s.device_ops[1]
+            .iter()
+            .position(|i| matches!(i, Instr::RecvAct { .. }))
+            .unwrap();
+        s.device_ops[1].remove(ix);
+        let r = lint(&s);
+        let unpaired = r.with_code("fifo-unpaired-send");
+        assert_eq!(unpaired.len(), 1, "{:?}", r.diags);
+        assert!(unpaired[0].site.instr.starts_with("SA"), "{}", unpaired[0].site.instr);
+    }
+
+    #[test]
+    fn cycle_mutant_yields_shortest_witness() {
+        // Hand-built two-device circular wait: each device receives before
+        // it sends — the minimal deadlock.
+        let placement = placement_for(ScheduleKind::Dapple, 2, 1);
+        let cfg = ScheduleConfig::new(ScheduleKind::Dapple, 2, 2);
+        let s = Schedule {
+            cfg,
+            placement,
+            compute_order: vec![Vec::new(), Vec::new()],
+            device_ops: vec![
+                vec![
+                    Instr::RecvGrad { from: 1, pipe: 0, stage: 0, mb: 0 },
+                    Instr::SendAct { to: 1, pipe: 0, stage: 0, mb: 0 },
+                ],
+                vec![
+                    Instr::RecvAct { from: 0, pipe: 0, stage: 1, mb: 0 },
+                    Instr::SendGrad { to: 0, pipe: 0, stage: 1, mb: 0 },
+                ],
+            ],
+            pipe_of_mb: vec![0, 0],
+        };
+        let r = lint(&s);
+        let cyc = r.with_code("deadlock-cycle");
+        assert_eq!(cyc.len(), 1, "{:?}", r.diags);
+        assert_eq!(cyc[0].witness.len(), 4, "{:?}", cyc[0].witness);
+        let instrs: Vec<&str> =
+            cyc[0].witness.iter().map(|w| w.instr.split('(').next().unwrap()).collect();
+        assert!(instrs.contains(&"RG0") || instrs.iter().any(|i| i.starts_with("RG")));
+    }
+
+    #[test]
+    fn json_is_single_line_and_stable() {
+        let s = built(ScheduleKind::Dapple, 4, 4);
+        let r = lint(&s);
+        let j = r.to_json(&s);
+        assert!(!j.contains('\n'));
+        assert!(j.starts_with("{\"schedule\":{\"kind\":\"dapple\",\"d\":4,\"n\":4,"));
+        assert_eq!(j, lint(&s).to_json(&s), "lint output must be deterministic");
+    }
+
+    #[test]
+    fn family_ceiling_bounds_every_generated_schedule() {
+        for kind in ScheduleKind::ALL {
+            for (d, n) in [(4usize, 4usize), (4, 8), (4, 16), (8, 8)] {
+                let s = built(kind, d, n);
+                let ceil = family_stash_ceiling(kind, d, n, s.placement.v);
+                for (dv, &hw) in stash_high_water_chunks(&s).iter().enumerate() {
+                    assert!(hw <= ceil, "{kind} D={d} N={n} dev {dv}: {hw} > {ceil}");
+                }
+            }
+        }
+    }
+}

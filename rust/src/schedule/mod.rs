@@ -11,6 +11,7 @@ pub mod comm_pass;
 pub mod generate;
 pub mod greedy;
 pub mod ir;
+pub mod lint;
 pub mod slotted;
 pub mod timeline;
 pub mod unidir;
@@ -22,8 +23,222 @@ pub use ir::{
     CompOp, DeviceId, Instr, MicroBatch, OpKind, PipeId, Placement, Schedule, ScheduleConfig,
     ScheduleKind, StageId, SyncPolicy,
 };
+pub use lint::{lint, LintReport};
 
 use anyhow::Result;
+use std::fmt;
+
+/// Severity of a [`Diagnostic`]. Ordered most-severe first, so sorting a
+/// report ascending puts errors at the top.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    /// The schedule is wrong: it deadlocks, drops data, or breaks the
+    /// synchronous-training semantics. [`validate::validate`] fails on the
+    /// first of these.
+    Error,
+    /// Legal but suspicious: the schedule completes, yet something is
+    /// weaker than the family promises (a delayed eager start, ambiguous
+    /// FIFO pairing, a memory ceiling exceeded).
+    Warn,
+    /// Facts the analyzer derived while proving the above (graph size,
+    /// static memory high-water).
+    Info,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// Anchor of a diagnostic: a concrete instruction in a device stream
+/// (`device` + `index` + rendered `instr`), a device alone, or nothing
+/// for schedule-level facts. Synthetic nodes (collective barriers) carry
+/// a label in `instr` with no stream position.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Site {
+    pub device: Option<usize>,
+    pub index: Option<usize>,
+    /// Rendered instruction or synthetic-node label; empty when N/A.
+    pub instr: String,
+}
+
+impl Site {
+    /// Anchor at instruction `ix` of device `dev`'s stream.
+    pub fn at(dev: usize, ix: usize, ins: &Instr) -> Site {
+        Site { device: Some(dev), index: Some(ix), instr: ins.to_string() }
+    }
+
+    /// Anchor at a device with no specific instruction.
+    pub fn device(dev: usize) -> Site {
+        Site { device: Some(dev), index: None, instr: String::new() }
+    }
+
+    /// No anchor (schedule-level diagnostic).
+    pub fn none() -> Site {
+        Site::default()
+    }
+}
+
+impl fmt::Display for Site {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match (self.device, self.index) {
+            (Some(d), Some(i)) => write!(f, "d{d}#{i}")?,
+            (Some(d), None) => write!(f, "d{d}")?,
+            _ => {}
+        }
+        if !self.instr.is_empty() {
+            if self.device.is_some() {
+                f.write_str(" ")?;
+            }
+            f.write_str(&self.instr)?;
+        }
+        Ok(())
+    }
+}
+
+/// One finding of the static analyzer / validator.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    /// Stable kebab-case identifier (`deadlock-cycle`,
+    /// `eager-delayed-start`, ...) — what tests and tools match on.
+    pub code: &'static str,
+    pub message: String,
+    pub site: Site,
+    /// Supporting instruction chain, e.g. the shortest dependence cycle
+    /// for `deadlock-cycle` or the blocking op for `eager-delayed-start`.
+    pub witness: Vec<Site>,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}]", self.severity.name(), self.code)?;
+        let anchor = self.site.to_string();
+        if !anchor.is_empty() {
+            write!(f, " {anchor}")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// An ordered collection of diagnostics. Insertion order is preserved so
+/// [`Diagnostics::first_error`] reproduces the historical fail-fast
+/// `validate` behaviour; [`Diagnostics::sort_for_report`] re-orders for
+/// stable presentation.
+#[derive(Debug, Default)]
+pub struct Diagnostics {
+    items: Vec<Diagnostic>,
+}
+
+impl Diagnostics {
+    pub fn new() -> Diagnostics {
+        Diagnostics::default()
+    }
+
+    pub fn push(&mut self, d: Diagnostic) {
+        self.items.push(d);
+    }
+
+    pub fn error(&mut self, code: &'static str, message: impl Into<String>, site: Site) {
+        self.push(Diagnostic {
+            severity: Severity::Error,
+            code,
+            message: message.into(),
+            site,
+            witness: Vec::new(),
+        });
+    }
+
+    pub fn warn(&mut self, code: &'static str, message: impl Into<String>, site: Site) {
+        self.push(Diagnostic {
+            severity: Severity::Warn,
+            code,
+            message: message.into(),
+            site,
+            witness: Vec::new(),
+        });
+    }
+
+    pub fn info(&mut self, code: &'static str, message: impl Into<String>, site: Site) {
+        self.push(Diagnostic {
+            severity: Severity::Info,
+            code,
+            message: message.into(),
+            site,
+            witness: Vec::new(),
+        });
+    }
+
+    /// First `Error`-severity diagnostic in insertion order.
+    pub fn first_error(&self) -> Option<&Diagnostic> {
+        self.items.iter().find(|d| d.severity == Severity::Error)
+    }
+
+    /// (errors, warnings, infos).
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for d in &self.items {
+            match d.severity {
+                Severity::Error => c.0 += 1,
+                Severity::Warn => c.1 += 1,
+                Severity::Info => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// Deterministic presentation order: severity, then code, then site
+    /// (unanchored last), then message.
+    pub fn sort_for_report(&mut self) {
+        self.items.sort_by(|a, b| {
+            let ka = (a.severity, a.code, a.site.device.unwrap_or(usize::MAX),
+                      a.site.index.unwrap_or(usize::MAX));
+            let kb = (b.severity, b.code, b.site.device.unwrap_or(usize::MAX),
+                      b.site.index.unwrap_or(usize::MAX));
+            ka.cmp(&kb).then_with(|| a.message.cmp(&b.message))
+        });
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.items.iter()
+    }
+
+    pub fn into_vec(self) -> Vec<Diagnostic> {
+        self.items
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// Escape a string for inclusion in a JSON string literal. The diagnostic
+/// JSON is hand-rolled (no serde in the vendored dependency set) and must
+/// render byte-identically in the Python mirror, so the escaping rules are
+/// exactly: `\\`, `\"`, and `\u00XX` for control characters.
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
 
 /// Full schedule build: compute order generation + communication pass.
 pub fn build(cfg: &ScheduleConfig) -> Result<Schedule> {

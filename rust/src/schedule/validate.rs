@@ -1,72 +1,124 @@
-//! Schedule validation: the invariants every generated schedule must hold.
+//! Schedule validation: the hard invariants every generated schedule must
+//! hold, expressed as the Error tier of the diagnostic framework.
 //!
-//! These are the correctness rules stated or implied by the paper:
+//! This module is the strict core of the static analyzer
+//! ([`super::lint`]). Each invariant below is implemented as a
+//! `collect_*` pass that pushes [`Diagnostic`]s (severity `Error`) into a
+//! shared [`Diagnostics`] sink; [`collect`] runs them all, and the
+//! classic [`validate`] entry point is a thin wrapper that fails with the
+//! *first* error's message — so every pre-existing caller keeps its exact
+//! `Result<()>` behavior while `bitpipe lint` sees the same findings with
+//! sites and witnesses attached.
 //!
-//! 1. **Completeness** — every (pipe, stage, micro-batch) chunk runs its
-//!    forward and backward exactly once, on the device that hosts it.
-//! 2. **Dataflow order** — within each device stream, `F(s,m)` appears
-//!    after its producer hand-off would be available, `B(s,m)` after
-//!    `F(s,m)`; globally the streams re-time without deadlock (checked by
-//!    [`super::asap::retime`]).
-//! 3. **Comm pairing** — every `SendAct`/`SendGrad` has exactly one
-//!    matching `RecvAct`/`RecvGrad` on the destination device and vice
-//!    versa; local copies only connect co-located chunks.
-//! 4. **Synchronous semantics (flush)** — on each device, every
-//!    `AllReduceStart{stage}` comes after the last local backward touching
-//!    that stage, `AllReduceWait` after the start, `OptimStep` after the
-//!    wait; exactly one of each per held stage per iteration.
-//! 5. **No-conflict merge** — the fused bidirectional schedule never asks
-//!    a device to run two compute ops in the same time slot (guaranteed by
-//!    construction for even D; checked geometrically here).
+//! The invariants, stated or implied by the paper:
 //!
-//! The property-based tests in `rust/tests/prop_schedule.rs` drive this
+//! 1. **Completeness** (`sched-completeness`) — every (pipe, stage,
+//!    micro-batch) chunk runs its forward and backward exactly once, on
+//!    the device that hosts it.
+//! 2. **Dataflow order** (`sched-local-order`, `retime`) — within each
+//!    device stream, `B(s,m)` after `F(s,m)`; globally the streams
+//!    re-time without deadlock (checked by [`super::asap::retime`]).
+//! 3. **Comm pairing** (`comm-pairing`) — every `SendAct`/`SendGrad` has
+//!    exactly one matching `RecvAct`/`RecvGrad` on the destination device
+//!    and vice versa; local copies only connect co-located chunks.
+//! 4. **Synchronous semantics (flush)** (`sync-order`) — on each device,
+//!    every `AllReduceStart{stage}` comes after the last local backward
+//!    touching that stage, `AllReduceWait` after the start, `OptimStep`
+//!    after the wait; exactly one of each per held stage per iteration.
+//!    Eager policy additionally forbids delaying a start past further
+//!    compute (the looser "delayed past non-compute work" case is the
+//!    lint-level `eager-delayed-start` warning in [`super::lint`]).
+//! 5. **No-conflict merge** (`retime`) — the fused bidirectional schedule
+//!    never asks a device to run two compute ops in the same time slot
+//!    (guaranteed by construction for even D; checked geometrically).
+//!
+//! To keep reports readable and `validate`'s first-error contract exact,
+//! each pass stops at its first violation; the passes themselves all run,
+//! so a lint report can carry one finding per invariant class. The
+//! property-based tests in `rust/tests/prop_schedule.rs` drive this
 //! module over randomly drawn configurations.
 
 use super::asap::{retime, Costs};
 use super::ir::{CompOp, Instr, OpKind, Schedule, SyncPolicy};
-use anyhow::{bail, ensure, Result};
-use std::collections::{HashMap, HashSet};
+use super::{Diagnostic, Diagnostics, Severity, Site};
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 /// Run every schedule invariant; returns the first violation as an error.
 pub fn validate(schedule: &Schedule) -> Result<()> {
-    check_completeness(schedule)?;
-    check_device_local_order(schedule)?;
-    check_comm_pairing(schedule)?;
-    check_sync_semantics(schedule)?;
-    check_retimes(schedule)?;
-    Ok(())
+    let mut diags = Diagnostics::new();
+    collect(schedule, &mut diags);
+    match diags.first_error() {
+        Some(d) => bail!("{}", d.message),
+        None => Ok(()),
+    }
+}
+
+/// Run every invariant pass, pushing findings into `out`. Each pass
+/// reports at most its first violation (in scan order), so the first
+/// error in insertion order is exactly what [`validate`] would fail with.
+pub(crate) fn collect(s: &Schedule, out: &mut Diagnostics) {
+    collect_completeness(s, out);
+    collect_device_local_order(s, out);
+    collect_comm_pairing(s, out);
+    collect_sync_semantics(s, out);
+    collect_retimes(s, out);
+}
+
+fn op_site(dev: usize, op: &CompOp) -> Site {
+    Site { device: Some(dev), index: None, instr: op.to_string() }
 }
 
 /// Invariant 1: every chunk op exactly once, on its host device.
-fn check_completeness(s: &Schedule) -> Result<()> {
+fn collect_completeness(s: &Schedule, out: &mut Diagnostics) {
     let p = &s.placement;
     let n_stages = p.n_stages();
     let mut seen: HashSet<CompOp> = HashSet::new();
     for (dev, ops) in s.compute_order.iter().enumerate() {
         for op in ops {
-            ensure!(
-                p.device(op.pipe, op.stage) == dev,
-                "op {op} scheduled on device {dev}, placed on {}",
-                p.device(op.pipe, op.stage)
-            );
-            ensure!(seen.insert(*op), "duplicate compute op {op}");
+            if p.device(op.pipe, op.stage) != dev {
+                out.error(
+                    "sched-completeness",
+                    format!(
+                        "op {op} scheduled on device {dev}, placed on {}",
+                        p.device(op.pipe, op.stage)
+                    ),
+                    op_site(dev, op),
+                );
+                return;
+            }
+            if !seen.insert(*op) {
+                out.error("sched-completeness", format!("duplicate compute op {op}"), op_site(dev, op));
+                return;
+            }
         }
     }
     for (m, &pipe) in s.pipe_of_mb.iter().enumerate() {
         for stage in 0..n_stages {
             for kind in [OpKind::Forward, OpKind::Backward] {
                 let op = CompOp { kind, pipe, stage, mb: m };
-                ensure!(seen.remove(&op), "missing compute op {op}");
+                if !seen.remove(&op) {
+                    out.error(
+                        "sched-completeness",
+                        format!("missing compute op {op}"),
+                        Site { device: None, index: None, instr: op.to_string() },
+                    );
+                    return;
+                }
             }
         }
     }
-    ensure!(seen.is_empty(), "extra compute ops beyond the N micro-batches: {:?}", seen);
-    Ok(())
+    if !seen.is_empty() {
+        out.error(
+            "sched-completeness",
+            format!("extra compute ops beyond the N micro-batches: {seen:?}"),
+            Site::none(),
+        );
+    }
 }
 
-/// Invariant 2 (local part): on each device stream, B(s,m) after F(s,m);
-/// local chunk chains in dataflow order.
-fn check_device_local_order(s: &Schedule) -> Result<()> {
+/// Invariant 2 (local part): on each device stream, B(s,m) after F(s,m).
+fn collect_device_local_order(s: &Schedule, out: &mut Diagnostics) {
     for (dev, ops) in s.compute_order.iter().enumerate() {
         let mut pos: HashMap<CompOp, usize> = HashMap::new();
         for (i, op) in ops.iter().enumerate() {
@@ -76,25 +128,31 @@ fn check_device_local_order(s: &Schedule) -> Result<()> {
             if op.kind == OpKind::Backward {
                 let f = CompOp::fwd(op.pipe, op.stage, op.mb);
                 if let Some(&fi) = pos.get(&f) {
-                    ensure!(
-                        fi < pos[op],
-                        "device {dev}: {op} precedes its own forward {f}"
-                    );
+                    if fi >= pos[op] {
+                        out.push(Diagnostic {
+                            severity: Severity::Error,
+                            code: "sched-local-order",
+                            message: format!("device {dev}: {op} precedes its own forward {f}"),
+                            site: op_site(dev, op),
+                            witness: vec![op_site(dev, &f)],
+                        });
+                        return;
+                    }
                 }
             }
         }
     }
-    Ok(())
 }
 
 /// Invariant 3: sends and receives pair one-to-one across devices, local
 /// copies connect co-located chunks only.
-fn check_comm_pairing(s: &Schedule) -> Result<()> {
+fn collect_comm_pairing(s: &Schedule, out: &mut Diagnostics) {
     let p = &s.placement;
     // (from, to, kind, pipe, stage, mb) -> count. kind: 0 act, 1 grad.
-    let mut sends: HashMap<(usize, usize, u8, usize, usize, usize), i64> = HashMap::new();
+    // BTreeMap so the "unpaired" report is deterministic.
+    let mut sends: BTreeMap<(usize, usize, u8, usize, usize, usize), i64> = BTreeMap::new();
     for (dev, ops) in s.device_ops.iter().enumerate() {
-        for op in ops {
+        for (ix, op) in ops.iter().enumerate() {
             match *op {
                 Instr::SendAct { to, pipe, stage, mb } => {
                     *sends.entry((dev, to, 0, pipe, stage, mb)).or_default() += 1;
@@ -105,10 +163,14 @@ fn check_comm_pairing(s: &Schedule) -> Result<()> {
                     // rejecting it here keeps the simulator's entry-stage
                     // guard (`sim::engine`) a dead-stream diagnostic rather
                     // than a reachable state.
-                    ensure!(
-                        stage > 0,
-                        "device {dev}: RecvAct for entry stage (no producer exists)"
-                    );
+                    if stage == 0 {
+                        out.error(
+                            "comm-pairing",
+                            format!("device {dev}: RecvAct for entry stage (no producer exists)"),
+                            Site::at(dev, ix, op),
+                        );
+                        return;
+                    }
                     *sends.entry((from, dev, 0, pipe, stage - 1, mb)).or_default() -= 1;
                 }
                 Instr::SendGrad { to, pipe, stage, mb } => {
@@ -117,52 +179,91 @@ fn check_comm_pairing(s: &Schedule) -> Result<()> {
                 Instr::RecvGrad { from, pipe, stage, mb } => {
                     // Receiver's stage s consumes grad produced by s+1; the
                     // exit stage has no downstream producer.
-                    ensure!(
-                        stage + 1 < p.n_stages(),
-                        "device {dev}: RecvGrad for exit stage (no producer exists)"
-                    );
+                    if stage + 1 >= p.n_stages() {
+                        out.error(
+                            "comm-pairing",
+                            format!("device {dev}: RecvGrad for exit stage (no producer exists)"),
+                            Site::at(dev, ix, op),
+                        );
+                        return;
+                    }
                     *sends.entry((from, dev, 1, pipe, stage + 1, mb)).or_default() -= 1;
                 }
                 Instr::LocalCopyAct { pipe, stage, mb } => {
                     let _ = mb;
-                    ensure!(
-                        stage + 1 < p.n_stages(),
-                        "LocalCopyAct from the last stage"
-                    );
-                    ensure!(
-                        p.device(pipe, stage) == p.device(pipe, stage + 1),
-                        "LocalCopyAct between non-co-located stages {stage},{}",
-                        stage + 1
-                    );
-                    ensure!(
-                        p.device(pipe, stage) == dev,
-                        "LocalCopyAct on wrong device"
-                    );
+                    if stage + 1 >= p.n_stages() {
+                        out.error(
+                            "comm-pairing",
+                            "LocalCopyAct from the last stage",
+                            Site::at(dev, ix, op),
+                        );
+                        return;
+                    }
+                    if p.device(pipe, stage) != p.device(pipe, stage + 1) {
+                        out.error(
+                            "comm-pairing",
+                            format!(
+                                "LocalCopyAct between non-co-located stages {stage},{}",
+                                stage + 1
+                            ),
+                            Site::at(dev, ix, op),
+                        );
+                        return;
+                    }
+                    if p.device(pipe, stage) != dev {
+                        out.error(
+                            "comm-pairing",
+                            "LocalCopyAct on wrong device",
+                            Site::at(dev, ix, op),
+                        );
+                        return;
+                    }
                 }
                 Instr::LocalCopyGrad { pipe, stage, mb } => {
                     let _ = mb;
-                    ensure!(stage > 0, "LocalCopyGrad from the entry stage");
-                    ensure!(
-                        p.device(pipe, stage) == p.device(pipe, stage - 1),
-                        "LocalCopyGrad between non-co-located stages"
-                    );
-                    ensure!(
-                        p.device(pipe, stage) == dev,
-                        "LocalCopyGrad on wrong device"
-                    );
+                    if stage == 0 {
+                        out.error(
+                            "comm-pairing",
+                            "LocalCopyGrad from the entry stage",
+                            Site::at(dev, ix, op),
+                        );
+                        return;
+                    }
+                    if p.device(pipe, stage) != p.device(pipe, stage - 1) {
+                        out.error(
+                            "comm-pairing",
+                            "LocalCopyGrad between non-co-located stages",
+                            Site::at(dev, ix, op),
+                        );
+                        return;
+                    }
+                    if p.device(pipe, stage) != dev {
+                        out.error(
+                            "comm-pairing",
+                            "LocalCopyGrad on wrong device",
+                            Site::at(dev, ix, op),
+                        );
+                        return;
+                    }
                 }
                 _ => {}
             }
         }
     }
     for (k, v) in sends {
-        ensure!(v == 0, "unpaired P2P message {k:?} (imbalance {v})");
+        if v != 0 {
+            out.error(
+                "comm-pairing",
+                format!("unpaired P2P message {k:?} (imbalance {v})"),
+                Site::none(),
+            );
+            return;
+        }
     }
-    Ok(())
 }
 
 /// Invariant 4: flush semantics per device.
-fn check_sync_semantics(s: &Schedule) -> Result<()> {
+fn collect_sync_semantics(s: &Schedule, out: &mut Diagnostics) {
     for (dev, ops) in s.device_ops.iter().enumerate() {
         let mut held: Vec<usize> =
             s.placement.chunks_on[dev].iter().map(|&(_, st)| st).collect();
@@ -179,22 +280,34 @@ fn check_sync_semantics(s: &Schedule) -> Result<()> {
                     last_bwd.insert(stage, i);
                 }
                 Instr::AllReduceStart { stage } => {
-                    ensure!(
-                        ar_start.insert(stage, i).is_none(),
-                        "device {dev}: duplicate AllReduceStart s{stage}"
-                    );
+                    if ar_start.insert(stage, i).is_some() {
+                        out.error(
+                            "sync-order",
+                            format!("device {dev}: duplicate AllReduceStart s{stage}"),
+                            Site::at(dev, i, op),
+                        );
+                        return;
+                    }
                 }
                 Instr::AllReduceWait { stage } => {
-                    ensure!(
-                        ar_wait.insert(stage, i).is_none(),
-                        "device {dev}: duplicate AllReduceWait s{stage}"
-                    );
+                    if ar_wait.insert(stage, i).is_some() {
+                        out.error(
+                            "sync-order",
+                            format!("device {dev}: duplicate AllReduceWait s{stage}"),
+                            Site::at(dev, i, op),
+                        );
+                        return;
+                    }
                 }
                 Instr::OptimStep { stage } => {
-                    ensure!(
-                        optim.insert(stage, i).is_none(),
-                        "device {dev}: duplicate OptimStep s{stage}"
-                    );
+                    if optim.insert(stage, i).is_some() {
+                        out.error(
+                            "sync-order",
+                            format!("device {dev}: duplicate OptimStep s{stage}"),
+                            Site::at(dev, i, op),
+                        );
+                        return;
+                    }
                 }
                 _ => {}
             }
@@ -206,51 +319,95 @@ fn check_sync_semantics(s: &Schedule) -> Result<()> {
                 ar_wait.get(&st),
                 optim.get(&st),
             ) else {
-                bail!("device {dev}: stage {st} missing bwd/allreduce/optim");
+                out.error(
+                    "sync-order",
+                    format!("device {dev}: stage {st} missing bwd/allreduce/optim"),
+                    Site::device(dev),
+                );
+                return;
             };
-            ensure!(b < a, "device {dev}: AllReduceStart s{st} before last backward");
-            ensure!(a < w, "device {dev}: AllReduceWait s{st} before its start");
-            ensure!(w < o, "device {dev}: OptimStep s{st} before allreduce completion");
+            if b >= a {
+                out.push(Diagnostic {
+                    severity: Severity::Error,
+                    code: "sync-order",
+                    message: format!("device {dev}: AllReduceStart s{st} before last backward"),
+                    site: Site::at(dev, a, &ops[a]),
+                    witness: vec![Site::at(dev, b, &ops[b])],
+                });
+                return;
+            }
+            if a >= w {
+                out.push(Diagnostic {
+                    severity: Severity::Error,
+                    code: "sync-order",
+                    message: format!("device {dev}: AllReduceWait s{st} before its start"),
+                    site: Site::at(dev, w, &ops[w]),
+                    witness: vec![Site::at(dev, a, &ops[a])],
+                });
+                return;
+            }
+            if w >= o {
+                out.push(Diagnostic {
+                    severity: Severity::Error,
+                    code: "sync-order",
+                    message: format!("device {dev}: OptimStep s{st} before allreduce completion"),
+                    site: Site::at(dev, o, &ops[o]),
+                    witness: vec![Site::at(dev, w, &ops[w])],
+                });
+                return;
+            }
             if s.cfg.sync == SyncPolicy::Eager {
                 // Eager: start fires immediately after the last backward
                 // touching the stage (possibly interleaved with other
                 // stages' starts, but before any further compute op).
                 let next_comp = ops[b + 1..]
                     .iter()
-                    .position(|i| matches!(i, Instr::Forward { .. } | Instr::Backward { .. }))
-                    .map(|k| b + 1 + k)
-                    .unwrap_or(ops.len());
-                ensure!(
-                    a < next_comp,
-                    "device {dev}: eager AllReduceStart s{st} delayed past compute"
-                );
+                    .position(Instr::is_compute)
+                    .map_or(ops.len(), |k| b + 1 + k);
+                if a >= next_comp {
+                    out.push(Diagnostic {
+                        severity: Severity::Error,
+                        code: "sync-order",
+                        message: format!(
+                            "device {dev}: eager AllReduceStart s{st} delayed past compute"
+                        ),
+                        site: Site::at(dev, a, &ops[a]),
+                        witness: vec![Site::at(dev, next_comp, &ops[next_comp])],
+                    });
+                    return;
+                }
             }
         }
     }
-    Ok(())
 }
 
 /// Invariant 2 (global) + 5: streams re-time without deadlock; the merge
 /// never stretches a device beyond serialized execution (conflict-free by
 /// construction — retime would produce overlap-free intervals anyway, so
 /// here we assert the op multiset per device fits the makespan).
-fn check_retimes(s: &Schedule) -> Result<()> {
+fn collect_retimes(s: &Schedule, out: &mut Diagnostics) {
     let costs = Costs::default();
-    let t = retime(&s.compute_order, &s.placement, &costs)
-        .map_err(|e| anyhow::anyhow!("retime failed: {e}"))?;
+    let t = match retime(&s.compute_order, &s.placement, &costs) {
+        Ok(t) => t,
+        Err(e) => {
+            out.error("retime", format!("retime failed: {e}"), Site::none());
+            return;
+        }
+    };
     // Intervals on one device must not overlap (they cannot, by
     // construction of retime; this is a tripwire for retime regressions).
     for (dev, ops) in t.devices.iter().enumerate() {
         for w in ops.windows(2) {
-            ensure!(
-                w[0].end <= w[1].start,
-                "device {dev}: overlapping ops {} and {}",
-                w[0].op,
-                w[1].op
-            );
+            if w[0].end > w[1].start {
+                out.error(
+                    "retime",
+                    format!("device {dev}: overlapping ops {} and {}", w[0].op, w[1].op),
+                    Site::device(dev),
+                );
+                return;
+            }
         }
     }
-    Ok(())
 }
 
 #[cfg(test)]
@@ -258,6 +415,12 @@ mod tests {
     use super::*;
     use crate::schedule::ir::{ScheduleConfig, ScheduleKind};
     use crate::schedule::{build, build_with_costs};
+
+    fn first_msg(f: impl FnOnce(&mut Diagnostics)) -> Option<String> {
+        let mut d = Diagnostics::new();
+        f(&mut d);
+        d.first_error().map(|e| e.message.clone())
+    }
 
     #[test]
     fn all_kinds_validate_n_eq_d() {
@@ -290,7 +453,8 @@ mod tests {
     fn tampered_schedule_caught_missing_op() {
         let mut s = build(&ScheduleConfig::new(ScheduleKind::Dapple, 4, 4)).unwrap();
         s.compute_order[2].pop();
-        assert!(check_completeness(&s).is_err());
+        let msg = first_msg(|d| collect_completeness(&s, d)).unwrap();
+        assert!(msg.contains("missing compute op"), "{msg}");
     }
 
     #[test]
@@ -298,7 +462,8 @@ mod tests {
         let mut s = build(&ScheduleConfig::new(ScheduleKind::Dapple, 4, 4)).unwrap();
         let op = s.compute_order[1][0];
         s.compute_order[1].push(op);
-        assert!(check_completeness(&s).is_err());
+        let msg = first_msg(|d| collect_completeness(&s, d)).unwrap();
+        assert!(msg.contains("duplicate compute op"), "{msg}");
     }
 
     #[test]
@@ -307,8 +472,8 @@ mod tests {
         // (the simulator guards the same hazard as a deadlock report).
         let mut s = build(&ScheduleConfig::new(ScheduleKind::Dapple, 4, 4)).unwrap();
         s.device_ops[0].insert(0, Instr::RecvAct { from: 1, pipe: 0, stage: 0, mb: 0 });
-        let e = check_comm_pairing(&s).unwrap_err();
-        assert!(e.to_string().contains("entry stage"), "{e}");
+        let msg = first_msg(|d| collect_comm_pairing(&s, d)).unwrap();
+        assert!(msg.contains("entry stage"), "{msg}");
     }
 
     #[test]
@@ -316,8 +481,8 @@ mod tests {
         let mut s = build(&ScheduleConfig::new(ScheduleKind::Dapple, 4, 4)).unwrap();
         let last = s.placement.n_stages() - 1;
         s.device_ops[0].insert(0, Instr::RecvGrad { from: 1, pipe: 0, stage: last, mb: 0 });
-        let e = check_comm_pairing(&s).unwrap_err();
-        assert!(e.to_string().contains("exit stage"), "{e}");
+        let msg = first_msg(|d| collect_comm_pairing(&s, d)).unwrap();
+        assert!(msg.contains("exit stage"), "{msg}");
     }
 
     #[test]
@@ -329,7 +494,8 @@ mod tests {
             .position(|i| matches!(i, Instr::RecvAct { .. }))
             .unwrap();
         s.device_ops[1].remove(idx);
-        assert!(check_comm_pairing(&s).is_err());
+        let msg = first_msg(|d| collect_comm_pairing(&s, d)).unwrap();
+        assert!(msg.contains("unpaired P2P message"), "{msg}");
     }
 
     #[test]
@@ -358,11 +524,22 @@ mod tests {
         // Re-insert after the last compute op.
         let last_comp = s.device_ops[dev]
             .iter()
-            .rposition(|i| matches!(i, Instr::Forward { .. } | Instr::Backward { .. }))
+            .rposition(Instr::is_compute)
             .unwrap();
         if last_comp + 1 > i {
             s.device_ops[dev].insert(last_comp + 1, ar);
-            assert!(check_sync_semantics(&s).is_err());
+            let msg = first_msg(|d| collect_sync_semantics(&s, d)).unwrap();
+            assert!(msg.contains("delayed past compute"), "{msg}");
         }
+    }
+
+    #[test]
+    fn validate_first_error_matches_insertion_order() {
+        // A missing compute op must surface as the completeness message
+        // even though later passes (pairing, sync) would also complain.
+        let mut s = build(&ScheduleConfig::new(ScheduleKind::Dapple, 4, 4)).unwrap();
+        s.compute_order[2].pop();
+        let e = validate(&s).unwrap_err().to_string();
+        assert!(e.contains("missing compute op"), "{e}");
     }
 }

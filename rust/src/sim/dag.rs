@@ -625,6 +625,260 @@ impl CompiledDag {
     }
 }
 
+/// Why a lowered node can never fire — the static image of the event
+/// engine's parked states, reported by [`EdgeArena::lower`] so
+/// `schedule::lint` can diagnose them without running anything.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParkReason {
+    /// `RecvAct` at the entry stage: no producer can exist.
+    EntryStageRecv,
+    /// Receive whose matching send never happens (FIFO tag imbalance).
+    UnmatchedRecv,
+    /// `AllReduceWait` for a stage outside the placement.
+    OutOfRangeWait,
+    /// Collective barrier missing a member's `AllReduceStart`; the field
+    /// is the device that never launches it.
+    MissingMemberStart(usize),
+}
+
+/// The dependence *structure* of a schedule, exposed for static analysis
+/// (`schedule::lint`): the same lowering as [`CompiledDag::compile`] —
+/// program-order edges, FIFO-paired send→recv edges, collective
+/// member-start → barrier → wait edges, and the per-device comm-engine
+/// serialization chains — but total (out-of-range collective stages are
+/// recorded instead of panicking) and without weights or evaluation
+/// state. Node ids share the compiled arena's layout: device streams back
+/// to back (`base`), one synthetic barrier node per collective round
+/// appended after `n_real`.
+#[derive(Debug, Clone)]
+pub struct EdgeArena {
+    /// Pipeline devices.
+    pub d: usize,
+    /// Real (instruction) nodes; barrier nodes follow.
+    pub n_real: usize,
+    /// Total nodes including one barrier per collective round.
+    pub n_nodes: usize,
+    /// Device-stream offsets: device `dv`'s instruction `ix` is node
+    /// `base[dv] + ix`; `base[d] == n_real`.
+    pub base: Vec<u32>,
+    /// Real dependence edges (program order, paired messages, collective
+    /// start→barrier→wait).
+    pub edges: Vec<(u32, u32)>,
+    /// Per-device comm-engine serialization chains between successive
+    /// barriers — a pricing heuristic, not true dependence; kept separate
+    /// so a chain-only cycle is a fallback warning, not a deadlock.
+    pub chain_edges: Vec<(u32, u32)>,
+    /// Nodes that can never fire, with why. A barrier node may appear
+    /// once per missing member.
+    pub parked: Vec<(u32, ParkReason)>,
+    /// Model stage per barrier node (index `node - n_real`).
+    pub barrier_stage: Vec<usize>,
+    /// Collective round per barrier node.
+    pub barrier_round: Vec<usize>,
+    /// FIFO-paired messages.
+    pub n_msgs: usize,
+    /// `AllReduceStart` nodes whose stage lies outside the placement —
+    /// skipped during lowering ([`CompiledDag::compile`] panics on them).
+    pub oversized_starts: Vec<u32>,
+}
+
+impl EdgeArena {
+    /// Lower `s` into its dependence structure. Total: never panics and
+    /// never errors — pathological streams surface as `parked` entries,
+    /// `oversized_starts`, or cycles visible to [`EdgeArena::toposort`].
+    pub fn lower(s: &Schedule) -> EdgeArena {
+        let d = s.n_devices();
+        let n_stages = s.placement.n_stages();
+        let groups: Vec<Vec<usize>> =
+            (0..n_stages).map(|st| s.placement.allreduce_group(st)).collect();
+
+        let mut base = vec![0u32; d + 1];
+        for dv in 0..d {
+            base[dv + 1] = base[dv] + s.device_ops[dv].len() as u32;
+        }
+        let n_real = base[d] as usize;
+
+        let mut sends: Vec<(MsgKey, u32)> = Vec::new();
+        let mut recvs: Vec<(MsgKey, u32)> = Vec::new();
+        let mut parked: Vec<(u32, ParkReason)> = Vec::new();
+        let mut oversized_starts: Vec<u32> = Vec::new();
+
+        let mut colls: Vec<CollBuild> = Vec::new();
+        let mut coll_of: Vec<Vec<u32>> = vec![Vec::new(); n_stages];
+        let mut start_round = vec![0u32; d * n_stages];
+        let mut wait_round = vec![0u32; d * n_stages];
+        let mut chain_prev: Vec<Option<u32>> = vec![None; d];
+        let mut chains: Vec<(u32, u32)> = Vec::new();
+
+        for dv in 0..d {
+            for (ix, ins) in s.device_ops[dv].iter().enumerate() {
+                let id = base[dv] + ix as u32;
+                match *ins {
+                    Instr::SendAct { to, pipe, stage, mb } => {
+                        sends.push(((dv, to, false, pipe, stage, mb), id));
+                    }
+                    Instr::SendGrad { to, pipe, stage, mb } => {
+                        sends.push(((dv, to, true, pipe, stage, mb), id));
+                    }
+                    Instr::RecvAct { from, pipe, stage, mb } => match stage.checked_sub(1) {
+                        Some(p) => recvs.push(((from, dv, false, pipe, p, mb), id)),
+                        None => parked.push((id, ParkReason::EntryStageRecv)),
+                    },
+                    Instr::RecvGrad { from, pipe, stage, mb } => {
+                        recvs.push(((from, dv, true, pipe, stage + 1, mb), id));
+                    }
+                    Instr::AllReduceStart { stage } => {
+                        if stage >= n_stages {
+                            oversized_starts.push(id);
+                        } else {
+                            let r = &mut start_round[dv * n_stages + stage];
+                            let round = *r as usize;
+                            *r += 1;
+                            if groups[stage].contains(&dv) {
+                                let c = coll_id(&mut colls, &mut coll_of, stage, round);
+                                colls[c as usize].starts.push(id);
+                                if let Some(prev) = chain_prev[dv].replace(c) {
+                                    chains.push((prev, c));
+                                }
+                            }
+                        }
+                    }
+                    Instr::AllReduceWait { stage } => {
+                        if stage >= n_stages {
+                            parked.push((id, ParkReason::OutOfRangeWait));
+                        } else {
+                            let r = &mut wait_round[dv * n_stages + stage];
+                            let round = *r as usize;
+                            *r += 1;
+                            let c = coll_id(&mut colls, &mut coll_of, stage, round);
+                            colls[c as usize].waits.push(id);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+
+        let n_colls = colls.len();
+        let n_nodes = n_real + n_colls;
+        let bar = |c: u32| n_real as u32 + c;
+        let mut barrier_stage = vec![0usize; n_colls];
+        let mut barrier_round = vec![0usize; n_colls];
+        for rounds in &coll_of {
+            for (round, &c) in rounds.iter().enumerate() {
+                barrier_stage[c as usize] = colls[c as usize].stage;
+                barrier_round[c as usize] = round;
+            }
+        }
+
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for dv in 0..d {
+            for ix in 1..s.device_ops[dv].len() as u32 {
+                edges.push((base[dv] + ix - 1, base[dv] + ix));
+            }
+        }
+        // FIFO message pairing, identical to `compile`: j-th send of a tag
+        // feeds the j-th recv; surplus receives park.
+        sends.sort_unstable();
+        recvs.sort_unstable();
+        let mut n_msgs = 0usize;
+        let (mut si, mut ri) = (0usize, 0usize);
+        while si < sends.len() || ri < recvs.len() {
+            let key = match (sends.get(si), recvs.get(ri)) {
+                (Some(&(sk, _)), Some(&(rk, _))) => sk.min(rk),
+                (Some(&(sk, _)), None) => sk,
+                (None, Some(&(rk, _))) => rk,
+                (None, None) => unreachable!(),
+            };
+            let s0 = si;
+            while si < sends.len() && sends[si].0 == key {
+                si += 1;
+            }
+            let r0 = ri;
+            while ri < recvs.len() && recvs[ri].0 == key {
+                ri += 1;
+            }
+            let paired = (si - s0).min(ri - r0);
+            for j in 0..paired {
+                edges.push((sends[s0 + j].1, recvs[r0 + j].1));
+                n_msgs += 1;
+            }
+            for &(_, rnode) in &recvs[r0 + paired..ri] {
+                parked.push((rnode, ParkReason::UnmatchedRecv));
+            }
+        }
+        // Collective edges; members that never start park the barrier.
+        for (c, cb) in colls.iter().enumerate() {
+            let b = bar(c as u32);
+            let mut started: Vec<usize> = cb
+                .starts
+                .iter()
+                .map(|&snode| {
+                    // Device of a real node via the stream offsets.
+                    base.partition_point(|&off| off <= snode) - 1
+                })
+                .collect();
+            started.sort_unstable();
+            for &snode in &cb.starts {
+                edges.push((snode, b));
+            }
+            for &g in &groups[cb.stage] {
+                if started.binary_search(&g).is_err() {
+                    parked.push((b, ParkReason::MissingMemberStart(g)));
+                }
+            }
+            for &wnode in &cb.waits {
+                edges.push((b, wnode));
+            }
+        }
+        let chain_edges: Vec<(u32, u32)> =
+            chains.iter().map(|&(a, b)| (bar(a), bar(b))).collect();
+        parked.sort_unstable_by_key(|&(node, _)| node);
+
+        EdgeArena {
+            d,
+            n_real,
+            n_nodes,
+            base,
+            edges,
+            chain_edges,
+            parked,
+            barrier_stage,
+            barrier_round,
+            n_msgs,
+            oversized_starts,
+        }
+    }
+
+    /// (device, instruction index) of a real node; `None` for barriers.
+    pub fn site_of(&self, node: u32) -> Option<(usize, usize)> {
+        if node as usize >= self.n_real {
+            return None;
+        }
+        let dv = self.base.partition_point(|&off| off <= node) - 1;
+        Some((dv, (node - self.base[dv]) as usize))
+    }
+
+    /// Kahn order over the arena. `with_chains` adds the collective
+    /// serialization chains; `with_parked` gives parked nodes a permanent
+    /// indegree (the engine's view). Shorter than `n_nodes` iff nodes are
+    /// unreachable — through parking, or through a genuine cycle.
+    pub fn toposort(&self, with_chains: bool, with_parked: bool) -> Vec<u32> {
+        let mut extra = vec![0u32; self.n_nodes];
+        if with_parked {
+            for &(node, _) in &self.parked {
+                extra[node as usize] += 1;
+            }
+        }
+        toposort(
+            self.n_nodes,
+            &self.edges,
+            with_chains.then_some(self.chain_edges.as_slice()),
+            &extra,
+        )
+    }
+}
+
 /// Kahn's algorithm over the arena. `chains` (barrier serialization) are
 /// optional so a failed sort can be retried on real dependencies alone.
 /// `extra_indeg` entries are never satisfied — they park unmatchable nodes.

@@ -68,7 +68,7 @@ mod gridsearch;
 mod memory;
 
 pub use cost::{CostModel, LinkTopology, P2pEdge, RingHop};
-pub use dag::{CompiledDag, DagUnsupported, DagWeights};
+pub use dag::{CompiledDag, DagUnsupported, DagWeights, EdgeArena, ParkReason};
 pub use engine::{
     simulate_schedule, simulate_schedule_contended, simulate_schedule_iters,
     simulate_schedule_iters_contended, simulate_schedule_iters_network,

@@ -1,0 +1,113 @@
+//! Golden-lint snapshot: pins the full `bitpipe lint --json` report of
+//! every paper-baseline schedule family, byte for byte, so any drift in
+//! the static analyzer — diagnostic set, ordering, message wording, JSON
+//! shape, or the liveness high-water numbers — fails CI instead of
+//! silently changing the tool's output contract. The Python mirror
+//! (`.claude/skills/verify/pymirror/verify_lint.py`) reproduces the same
+//! bytes independently, so the snapshot also pins Rust/Python agreement.
+//!
+//! The pinned lines live in `rust/tests/golden_lints.txt` (one JSON line
+//! per configuration). Like the makespan snapshot, the file is recorded
+//! by the test itself on first run — or with `BITPIPE_BLESS=1` after an
+//! intentional analyzer change — and any divergence afterwards is a hard
+//! failure.
+
+use bitpipe::schedule::{build, lint, ScheduleConfig, ScheduleKind};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// The pinned grid: every paper baseline at the shallow and default
+/// depths (the same points the makespan snapshot covers).
+const GRID: [(usize, usize); 2] = [(4, 8), (8, 8)];
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden_lints.txt")
+}
+
+fn current_snapshot() -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    for (d, n) in GRID {
+        for kind in ScheduleKind::PAPER_BASELINES {
+            let cfg = ScheduleConfig::new(kind, d, n);
+            let s = build(&cfg).unwrap_or_else(|e| panic!("{kind} D={d} N={n}: {e}"));
+            let r = lint(&s);
+            assert!(!r.has_errors(), "{kind} D={d} N={n}: generator emitted errors: {:?}", r.diags);
+            out.push((format!("{} d{} n{}", kind.name(), d, n), r.to_json(&s)));
+        }
+    }
+    out
+}
+
+fn render(snapshot: &[(String, String)]) -> String {
+    let mut s = String::from(
+        "# Golden lint reports — `bitpipe lint --json` per paper baseline.\n\
+         # Format: <key> <json line>\n\
+         # Recorded by rust/tests/golden_lints.rs; regenerate with\n\
+         # BITPIPE_BLESS=1 cargo test --test golden_lints after an\n\
+         # intentional analyzer change. The Python mirror\n\
+         # (.claude/skills/verify/pymirror/verify_lint.py) must agree.\n",
+    );
+    for (key, json) in snapshot {
+        let _ = writeln!(s, "{key} {json}");
+    }
+    s
+}
+
+fn parse(text: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // The JSON payload starts at the first '{'.
+        match line.find('{') {
+            Some(p) => out.push((line[..p].trim().to_string(), line[p..].to_string())),
+            None => out.push((line.to_string(), String::new())),
+        }
+    }
+    out
+}
+
+#[test]
+fn lint_reports_match_golden_snapshot() {
+    let snapshot = current_snapshot();
+
+    // Unconditional invariants: every baseline is error- and warning-free
+    // and reports a positive stash high-water somewhere.
+    for (key, json) in &snapshot {
+        assert!(json.contains("\"error\":0,\"warn\":0"), "{key}: {json}");
+        assert!(json.contains("\"stash_high_water\":["), "{key}: {json}");
+    }
+
+    let path = golden_path();
+    let bless = std::env::var("BITPIPE_BLESS").is_ok();
+    if bless || !path.exists() {
+        std::fs::write(&path, render(&snapshot)).expect("write golden snapshot");
+        eprintln!(
+            "golden_lints: recorded {} entries to {} — commit the file to arm the gate",
+            snapshot.len(),
+            path.display()
+        );
+        return;
+    }
+
+    let want = parse(&std::fs::read_to_string(&path).expect("read golden snapshot"));
+    assert_eq!(
+        want.len(),
+        snapshot.len(),
+        "golden file entry count changed; re-record with BITPIPE_BLESS=1 if intentional"
+    );
+    let mut drift = String::new();
+    for ((gk, gv), (ck, cv)) in want.iter().zip(&snapshot) {
+        assert_eq!(gk, ck, "golden file order changed; re-record if intentional");
+        if gv != cv {
+            let _ = writeln!(drift, "  {ck}:\n    golden  {gv}\n    current {cv}");
+        }
+    }
+    assert!(
+        drift.is_empty(),
+        "lint-report drift against the golden snapshot:\n{drift}\
+         If this change is intentional, re-record with BITPIPE_BLESS=1 and commit."
+    );
+}

@@ -71,6 +71,30 @@ fn random_configs_build_and_validate() {
 }
 
 #[test]
+fn random_configs_are_lint_clean() {
+    // The static analyzer is strictly stronger than validate (it also
+    // checks deadlock-freedom, FIFO hazards, memory ceilings, and eager
+    // placement): every generated family must come out of it with zero
+    // errors AND zero warnings, under every draw.
+    forall(0x117, 80, &gen_draw(), |draw| {
+        let cfg = cfg_of(draw);
+        let s = build(&cfg).map_err(|e| format!("{cfg:?} failed to build: {e}"))?;
+        let r = schedule::lint(&s);
+        let (e, w, _) = r.counts();
+        if e > 0 || w > 0 {
+            let worst: Vec<String> = r
+                .diags
+                .iter()
+                .filter(|d| d.severity != schedule::Severity::Info)
+                .map(ToString::to_string)
+                .collect();
+            return Err(format!("{cfg:?}: lint not clean: {worst:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn device_ops_retime_and_simulate() {
     use bitpipe::config::{ClusterConfig, ParallelConfig, BERT_64};
     use bitpipe::sim::{simulate_schedule, CostModel};
