@@ -44,7 +44,7 @@ pub const ALL_IDS: [&str; 15] = [
 ];
 
 /// Extended set (appendix artifacts).
-pub const EXTRA_IDS: [&str; 3] = ["fig12", "fig13", "table7"];
+pub const EXTRA_IDS: [&str; 4] = ["fig12", "fig13", "table7", "tableb"];
 
 /// Dispatch one artifact by id ("table2", "fig9", ... or "all").
 pub fn run(id: &str) -> Result<Vec<EvalOutput>> {
@@ -68,6 +68,7 @@ pub fn run(id: &str) -> Result<Vec<EvalOutput>> {
         "table5" => one(table5()?),
         "table6" => one(table6()?),
         "table7" => one(table7()?),
+        "tableb" => one(tableb()?),
         "all" => {
             let mut out = Vec::new();
             for id in ALL_IDS.iter().chain(EXTRA_IDS.iter()) {

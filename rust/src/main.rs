@@ -70,7 +70,7 @@ fn print_usage() {
          inspect     print an artifact directory's manifest\n  \
          help        this message\n\n\
          Schedule kinds: gpipe dapple 1f1b-int gems chimera mixpipe bitpipe\n\
-         \x20                bitpipe-no-v v-shaped"
+         \x20                bitpipe-no-v v-shaped zero-bubble"
     );
 }
 

@@ -45,6 +45,11 @@ pub fn bubble_ratio_formula(kind: ScheduleKind, d: usize, n: usize, early_forwar
         // With N micro-batches alternating over two replicas the busy
         // fraction per device is ~ (tf+tb)/(D*(tf+tb)) per micro-batch slot.
         ScheduleKind::Gems => (d - 1.0) / (n + d - 1.0), // lower bound; GEMS >= GPipe
+        // ZB-H1's bubble is (D-1)(t_F + t_Bi - 2 t_W); under this repo's
+        // cost geometry (t_B = 2 t_F split evenly, so t_F = t_Bi = t_W)
+        // that is exactly zero. The greedy generator does not always reach
+        // it, so this is a lower bound on the measured ratio.
+        ScheduleKind::ZeroBubble => 0.0,
     }
 }
 
@@ -70,6 +75,12 @@ pub fn activations_memory_formula(kind: ScheduleKind, d: usize, n: usize) -> (f6
         ScheduleKind::MixPipe => ((df + 2.0) / 2.0, df),
         ScheduleKind::BitPipe | ScheduleKind::BitPipeNoV => ((df + 3.0) / 2.0, df),
         ScheduleKind::Gems => (1.0, 2.0),
+        // Split backward: device i stashes up to D-i in-flight activations
+        // plus deferred weight-grad pins (freed only at W); the forced
+        // queue release keeps the sum at D-i+1, so the range runs from 1
+        // on the last device (tight F/Bi/W rotation) to min(N, D+1) on
+        // the first.
+        ScheduleKind::ZeroBubble => (1.0, ((d + 1).min(n)) as f64),
     }
 }
 
@@ -100,7 +111,9 @@ pub fn comm_volume_formula(kind: ScheduleKind, d: usize, n: usize, v: usize) -> 
         chunks - 1 - colocated
     };
     match kind {
-        ScheduleKind::GPipe | ScheduleKind::Dapple => CommVolume {
+        // Zero-bubble is wire-identical to 1F1B: the weight-grad half of
+        // the split backward stays local, so only F and Bi cross devices.
+        ScheduleKind::GPipe | ScheduleKind::Dapple | ScheduleKind::ZeroBubble => CommVolume {
             p2p_messages: 2 * n * boundaries(d, 0),
             local_copies: 0,
             allreduce_grads: 0.0,
@@ -151,12 +164,14 @@ pub fn bubble_ratio_measured(s: &Schedule, costs: &Costs) -> Result<f64> {
 
 /// Static liveness high-water per device, in *chunk* units, walked over
 /// the full instruction streams (`device_ops`): an activation stash is
-/// born at each `Forward` and freed at the matching `Backward`, and the
-/// streams execute in order per device, so the program-order walk is
-/// exact — it equals (and therefore upper-bounds) the peak of any
-/// execution. Integer-exact; [`peak_activation_stash`] reports the same
-/// quantity in `M_a` units measured from `compute_order`, and
-/// `schedule::lint` cross-checks the two.
+/// born at each `Forward` and freed at the matching `Backward` — or,
+/// under a split backward, carried through `Bi` as a weight-grad pin and
+/// freed at the matching `W`. The streams execute in order per device, so
+/// the program-order walk is exact — it equals (and therefore
+/// upper-bounds) the peak of any execution. Integer-exact;
+/// [`peak_activation_stash`] reports the same quantity in `M_a` units
+/// measured from `compute_order`, and `schedule::lint` cross-checks the
+/// two.
 pub fn stash_high_water_chunks(s: &Schedule) -> Vec<u64> {
     s.device_ops
         .iter()
@@ -165,7 +180,7 @@ pub fn stash_high_water_chunks(s: &Schedule) -> Vec<u64> {
             for op in ops {
                 match op {
                     Instr::Forward { .. } => depth += 1,
-                    Instr::Backward { .. } => depth -= 1,
+                    Instr::Backward { .. } | Instr::BackwardWeight { .. } => depth -= 1,
                     _ => {}
                 }
                 peak = peak.max(depth);
@@ -188,7 +203,9 @@ pub fn peak_activation_stash(s: &Schedule) -> Vec<f64> {
             for op in ops {
                 match op.kind {
                     OpKind::Forward => depth += 1,
-                    OpKind::Backward => depth -= 1,
+                    OpKind::Backward | OpKind::BackwardWeight => depth -= 1,
+                    // Bi hands its stash slot to the weight-grad pin.
+                    OpKind::BackwardInput => {}
                 }
                 peak = peak.max(depth);
             }

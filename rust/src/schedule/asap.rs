@@ -50,10 +50,24 @@ impl Costs {
         self.chunk_f(v) * self.b_num / self.b_den
     }
 
+    /// Activation-grad half of a split backward: half the fused backward
+    /// (with the default 2x ratio, `Bi` == one forward).
+    pub fn chunk_bi(&self, v: usize) -> u64 {
+        self.chunk_b(v) / 2
+    }
+
+    /// Weight-grad half: the remainder, so `Bi + W == B` exactly even for
+    /// odd tick counts.
+    pub fn chunk_w(&self, v: usize) -> u64 {
+        self.chunk_b(v) - self.chunk_bi(v)
+    }
+
     pub fn of(&self, op: &CompOp, v: usize) -> u64 {
         match op.kind {
             OpKind::Forward => self.chunk_f(v),
             OpKind::Backward => self.chunk_b(v),
+            OpKind::BackwardInput => self.chunk_bi(v),
+            OpKind::BackwardWeight => self.chunk_w(v),
         }
     }
 }
@@ -115,7 +129,11 @@ impl TimedSchedule {
 /// * `F(p,s,m)` for `s>0` depends on `F(p,s-1,m)`;
 /// * `B(p,S-1,m)` depends on `F(p,S-1,m)` (loss is computed at the last
 ///   stage — its stash is the forward input);
-/// * `B(p,s,m)` for `s<S-1` depends on `B(p,s+1,m)` *and* `F(p,s,m)`.
+/// * `B(p,s,m)` for `s<S-1` depends on `B(p,s+1,m)` *and* `F(p,s,m)`;
+/// * split backward: `Bi(p,s,m)` depends on `F(p,s,m)` and (for `s<S-1`)
+///   `Bi(p,s+1,m)` — the activation-grad chain is the critical path — and
+///   `W(p,s,m)` depends only on its own `Bi(p,s,m)` (weight-grad work is
+///   free to defer).
 pub fn deps_of(op: &CompOp, n_stages: usize) -> Vec<CompOp> {
     let mut d = Vec::with_capacity(2);
     match op.kind {
@@ -129,6 +147,15 @@ pub fn deps_of(op: &CompOp, n_stages: usize) -> Vec<CompOp> {
             if op.stage + 1 < n_stages {
                 d.push(CompOp::bwd(op.pipe, op.stage + 1, op.mb));
             }
+        }
+        OpKind::BackwardInput => {
+            d.push(CompOp::fwd(op.pipe, op.stage, op.mb));
+            if op.stage + 1 < n_stages {
+                d.push(CompOp::bwd_input(op.pipe, op.stage + 1, op.mb));
+            }
+        }
+        OpKind::BackwardWeight => {
+            d.push(CompOp::bwd_input(op.pipe, op.stage, op.mb));
         }
     }
     d

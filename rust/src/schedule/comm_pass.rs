@@ -22,11 +22,14 @@ pub fn insert_comm(schedule: &mut Schedule) -> Result<()> {
     let n_stages = placement.n_stages();
     let d = placement.d;
 
-    // Last backward index per (device, model stage) for eager sync placement.
+    // Last backward index per (device, model stage) for eager sync
+    // placement. With a split backward the weight grad only exists after
+    // `W`, so `BackwardWeight` (not `BackwardInput`) is the stage's last
+    // gradient-producing op.
     let mut last_bwd: HashMap<(usize, StageId), usize> = HashMap::new();
     for dev in 0..d {
         for (i, op) in schedule.compute_order[dev].iter().enumerate() {
-            if op.kind == OpKind::Backward {
+            if matches!(op.kind, OpKind::Backward | OpKind::BackwardWeight) {
                 last_bwd.insert((dev, op.stage), i);
             }
         }
@@ -50,6 +53,12 @@ pub fn insert_comm(schedule: &mut Schedule) -> Result<()> {
             ops.push(match op.kind {
                 OpKind::Forward => Instr::Forward { pipe: op.pipe, stage: op.stage, mb: op.mb },
                 OpKind::Backward => Instr::Backward { pipe: op.pipe, stage: op.stage, mb: op.mb },
+                OpKind::BackwardInput => {
+                    Instr::BackwardInput { pipe: op.pipe, stage: op.stage, mb: op.mb }
+                }
+                OpKind::BackwardWeight => {
+                    Instr::BackwardWeight { pipe: op.pipe, stage: op.stage, mb: op.mb }
+                }
             });
             emit_post(op, dev, n_stages, placement, &mut ops);
             if let Some(stages) = eager_at.get(&i) {
@@ -111,7 +120,9 @@ fn emit_pre(
                 }
             }
         }
-        OpKind::Backward => {
+        // BackwardInput consumes the upstream gradient exactly like a fused
+        // backward; BackwardWeight needs no input beyond its own Bi's pin.
+        OpKind::Backward | OpKind::BackwardInput => {
             if op.stage + 1 < n_stages {
                 let src = placement.device(op.pipe, op.stage + 1);
                 if src != dev {
@@ -121,6 +132,7 @@ fn emit_pre(
                 }
             }
         }
+        OpKind::BackwardWeight => {}
     }
 }
 
@@ -143,7 +155,9 @@ fn emit_post(
                 }
             }
         }
-        OpKind::Backward => {
+        // The activation grad the upstream stage needs is produced by Bi
+        // (split) or the fused backward; W produces nothing to send.
+        OpKind::Backward | OpKind::BackwardInput => {
             if op.stage > 0 {
                 let dst = placement.device(op.pipe, op.stage - 1);
                 if dst != dev {
@@ -151,6 +165,7 @@ fn emit_post(
                 }
             }
         }
+        OpKind::BackwardWeight => {}
     }
 }
 

@@ -8,6 +8,15 @@
 //! `K = N/D` basic units (Fig 7), or, with early forwarding (Appendix B),
 //! by letting later units' forwards fill earlier units' bubbles under a
 //! peak-memory cap.
+//!
+//! The zero-bubble family ([`ScheduleKind::ZeroBubble`]) has its own
+//! generator, [`zero_bubble_order`]: a 1F1B skeleton whose backward is
+//! split into the critical-path activation-grad `Bi` and a deferred
+//! weight-grad `W`. The deferral follows a per-device `WeightGradStore`
+//! FIFO — each `Bi` enqueues its micro-batch, each `W` dequeues the head —
+//! and `W`s are released only to fill bubbles, when the queue exceeds its
+//! steady-state bound, or in the final drain. See the function docs for
+//! the exact discipline.
 
 use super::asap::{retime, Costs};
 use super::greedy::{greedy_order, greedy_pipe_order, GreedyPolicy, PipeJob};
@@ -17,13 +26,14 @@ use super::ir::{
 use super::slotted::slotted_order;
 use super::unidir::{dapple_order, gpipe_order, interleaved_order};
 use anyhow::{bail, ensure, Result};
+use std::collections::{HashMap, VecDeque};
 
 /// Stage -> device map for one *down* pipe of the given kind.
 fn down_device(kind: ScheduleKind, d: usize, s: usize) -> usize {
     match kind {
         // One stage per device, in order.
         ScheduleKind::GPipe | ScheduleKind::Dapple | ScheduleKind::Gems | ScheduleKind::Chimera
-        | ScheduleKind::MixPipe => s,
+        | ScheduleKind::MixPipe | ScheduleKind::ZeroBubble => s,
         // Looping: chunk c of device x is stage c*D + x.
         ScheduleKind::Interleaved | ScheduleKind::BitPipeNoV => s % d,
         // V-shape: forward through devices, then zig-zag back (Fig 4b).
@@ -185,12 +195,127 @@ fn peak_chunk_stash(order: &[Vec<CompOp>]) -> usize {
         for op in dev {
             match op.kind {
                 OpKind::Forward => depth += 1,
-                OpKind::Backward => depth -= 1,
+                OpKind::Backward | OpKind::BackwardWeight => depth -= 1,
+                // The stash slot transitions to a weight-grad pin: no net
+                // change until the matching W.
+                OpKind::BackwardInput => {}
             }
             peak = peak.max(depth);
         }
     }
     peak.max(0) as usize
+}
+
+/// Zero-bubble (ZB-H1-style) compute order: a 1F1B skeleton with the
+/// backward split into `Bi` (activation grad, critical path) and `W`
+/// (weight grad, deferred). Unidirectional, one stage per device (v = 1).
+///
+/// Discipline, per device `i` hosting stage `i`:
+///   * forwards are admitted under an in-flight cap of `D - i`, the 1F1B
+///     warmup depth — the activation ceiling this family inherits;
+///   * every `Bi` pushes its micro-batch onto the device's
+///     `WeightGradStore` FIFO; every `W` pops the head (strict FIFO per
+///     device chunk);
+///   * a queued `W` becomes a candidate only when (a) the queue is deeper
+///     than the deferral bound `D - 1 - i` — in steady state a device
+///     keeps one deferred `W` per downstream stage to absorb the ramp-down
+///     bubble — or (b) the device would otherwise idle (every other
+///     candidate starts strictly later than the `W` could), including the
+///     final drain when nothing else remains.
+///
+/// Emission is a deterministic global list schedule in integer ticks:
+/// repeatedly pick the candidate with the earliest dataflow-feasible start,
+/// breaking ties by lower device, then `Bi` < forced-`W` < `F` <
+/// idle-fill-`W`. The result re-times by construction and is mirrored
+/// line-for-line in the pymirror (`verify_streams_lib.py`).
+fn zero_bubble_order(
+    placement: &Placement,
+    mbs: &[MicroBatch],
+    costs: &Costs,
+) -> Vec<Vec<CompOp>> {
+    let d = placement.d;
+    let n_stages = placement.n_stages();
+    debug_assert_eq!(n_stages, d, "zero-bubble is v = 1, one stage per device");
+    let v = placement.v;
+    let n = mbs.len();
+    let mut done: HashMap<CompOp, u64> = HashMap::with_capacity(3 * n * d);
+    let mut avail = vec![0u64; d];
+    let mut next_f = vec![0usize; d];
+    let mut next_bi = vec![0usize; d];
+    let mut wstore: Vec<VecDeque<MicroBatch>> = vec![VecDeque::new(); d];
+    let mut out: Vec<Vec<CompOp>> = vec![Vec::new(); d];
+    let total = 3 * n * d;
+
+    // Earliest dataflow-feasible start of `op` on `dev`; None while a
+    // dependency has not been emitted yet.
+    let ready_at = |op: &CompOp, dev: usize, done: &HashMap<CompOp, u64>, avail: &[u64]| {
+        let mut start = avail[dev];
+        for dep in super::asap::deps_of(op, n_stages) {
+            match done.get(&dep) {
+                Some(&end) => start = start.max(end),
+                None => return None,
+            }
+        }
+        Some(start)
+    };
+
+    for _ in 0..total {
+        // (start, dev, class, op) — class: Bi 0, forced W 1, F 2, idle W 3.
+        let mut best: Option<(u64, usize, u8, CompOp)> = None;
+        for dev in 0..d {
+            let stage = dev;
+            let mut cands: Vec<(u64, u8, CompOp)> = Vec::new();
+            if next_bi[dev] < n {
+                let op = CompOp::bwd_input(0, stage, mbs[next_bi[dev]]);
+                if let Some(start) = ready_at(&op, dev, &done, &avail) {
+                    cands.push((start, 0, op));
+                }
+            }
+            if next_f[dev] < n && next_f[dev] - next_bi[dev] < d - dev {
+                let op = CompOp::fwd(0, stage, mbs[next_f[dev]]);
+                if let Some(start) = ready_at(&op, dev, &done, &avail) {
+                    cands.push((start, 2, op));
+                }
+            }
+            if let Some(&m) = wstore[dev].front() {
+                // A W's dependency is its own Bi, already emitted on this
+                // device, so it can always start at `avail[dev]`.
+                let start = avail[dev];
+                let forced = wstore[dev].len() > d - 1 - dev;
+                let idle_fill = cands.iter().all(|&(s, _, _)| start < s);
+                if forced || idle_fill {
+                    cands.push((start, if forced { 1 } else { 3 }, CompOp::bwd_weight(0, stage, m)));
+                }
+            }
+            for (start, class, op) in cands {
+                let better = match &best {
+                    None => true,
+                    Some(&(bs, bd, bc, _)) => (start, dev, class) < (bs, bd, bc),
+                };
+                if better {
+                    best = Some((start, dev, class, op));
+                }
+            }
+        }
+        let (start, dev, _, op) =
+            best.expect("zero-bubble scheduler stuck: no emittable candidate");
+        let end = start + costs.of(&op, v);
+        done.insert(op, end);
+        avail[dev] = end;
+        out[dev].push(op);
+        match op.kind {
+            OpKind::Forward => next_f[dev] += 1,
+            OpKind::BackwardInput => {
+                next_bi[dev] += 1;
+                wstore[dev].push_back(op.mb);
+            }
+            OpKind::BackwardWeight => {
+                wstore[dev].pop_front();
+            }
+            OpKind::Backward => unreachable!("zero-bubble emits split backwards only"),
+        }
+    }
+    out
 }
 
 /// Generate a schedule's compute orders (no comm ops yet; see
@@ -206,7 +331,7 @@ pub fn generate_compute(cfg: &ScheduleConfig, costs: &Costs) -> Result<Schedule>
     }
     match kind {
         ScheduleKind::GPipe | ScheduleKind::Dapple | ScheduleKind::Gems | ScheduleKind::Chimera
-        | ScheduleKind::MixPipe => {
+        | ScheduleKind::MixPipe | ScheduleKind::ZeroBubble => {
             ensure!(v == 1, "{kind} is non-interleaved; v must be 1 (got {v})")
         }
         _ => ensure!(v >= 2, "{kind} is interleaved; v must be >= 2 (got {v})"),
@@ -225,6 +350,7 @@ pub fn generate_compute(cfg: &ScheduleConfig, costs: &Costs) -> Result<Schedule>
     let compute_order: Vec<Vec<CompOp>> = match kind {
         ScheduleKind::GPipe => gpipe_order(&placement, 0, &all_mbs),
         ScheduleKind::Dapple => dapple_order(&placement, 0, &all_mbs),
+        ScheduleKind::ZeroBubble => zero_bubble_order(&placement, &all_mbs, costs),
         ScheduleKind::Interleaved => interleaved_order(&placement, 0, &all_mbs),
         ScheduleKind::VShaped => {
             // The V placement re-orders the second chunk round across

@@ -141,11 +141,14 @@ pub fn greedy_order(
             match op.kind {
                 OpKind::Forward => inflight[op.pipe] += 1,
                 OpKind::Backward => inflight[op.pipe] = inflight[op.pipe].saturating_sub(1),
+                // The greedy scheduler only frontiers fused F/B ops.
+                _ => unreachable!("split backward in greedy order"),
             }
         }
         match op.kind {
             OpKind::Forward => *next_f.get_mut(&(op.pipe, op.mb)).unwrap() += 1,
             OpKind::Backward => *next_b.get_mut(&(op.pipe, op.mb)).unwrap() -= 1,
+            _ => unreachable!("split backward in greedy order"),
         }
         last_op[dev] = Some(op);
         order[dev].push(op);
@@ -183,6 +186,7 @@ fn pick(
                     && match prev.kind {
                         OpKind::Forward => o.stage == prev.stage + 1,
                         OpKind::Backward => prev.stage == o.stage + 1,
+                        _ => false,
                     }
             };
             let (ca, cb) = (cont(&a.2), cont(&b.2));
@@ -277,6 +281,7 @@ mod tests {
                 match op.kind {
                     OpKind::Forward => depth += 1,
                     OpKind::Backward => depth -= 1,
+                    _ => unreachable!("split backward in greedy order"),
                 }
                 assert!(depth <= 2, "cap violated: {op}");
             }

@@ -6,6 +6,20 @@
 //! (the V-shape payoff: producer and consumer chunk co-located), collective
 //! gradient synchronization, and optimizer steps.
 //!
+//! Backward exists in two shapes. The *fused* [`Instr::Backward`] computes
+//! both gradient halves in one op — every classic family uses it. The
+//! *split* pair [`Instr::BackwardInput`] (activation gradient, `Bi`) and
+//! [`Instr::BackwardWeight`] (weight gradient, `W`) decouples them so a
+//! scheduler can defer weight-grad work into pipeline bubbles — the zero-
+//! bubble discipline ([`ScheduleKind::ZeroBubble`]): `Bi` sits on the
+//! critical path (it feeds the upstream stage), `W` only feeds the
+//! optimizer and can run whenever its device is otherwise idle, FIFO per
+//! (device, chunk). Every `Bi` must be followed by its matching `W` on the
+//! same device before the iteration's collectives — the validator and
+//! `schedule/lint.rs` enforce the pairing, and the memory model charges
+//! the activation stash until `Bi` *and* a weight-grad pin until `W`
+//! (see `sim/memory.rs`).
+//!
 //! The same IR drives three consumers:
 //!   * the **analysis engine** (`analysis.rs`) — bubble ratio, peak memory,
 //!     communication volume (paper Tables 2 and 6);
@@ -30,7 +44,15 @@ pub type PipeId = usize;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum OpKind {
     Forward,
+    /// Fused backward: activation grad + weight grad in one op (classic
+    /// families).
     Backward,
+    /// Activation-grad half of a split backward (`Bi`): on the critical
+    /// path, produces the gradient sent upstream.
+    BackwardInput,
+    /// Weight-grad half of a split backward (`W`): deferred off the
+    /// critical path, dequeued FIFO per (device, chunk).
+    BackwardWeight,
 }
 
 /// A single compute op: run chunk `stage` of pipeline replica `pipe` on
@@ -50,6 +72,14 @@ impl CompOp {
     pub fn bwd(pipe: PipeId, stage: StageId, mb: MicroBatch) -> Self {
         CompOp { kind: OpKind::Backward, pipe, stage, mb }
     }
+    /// Activation-grad half of a split backward.
+    pub fn bwd_input(pipe: PipeId, stage: StageId, mb: MicroBatch) -> Self {
+        CompOp { kind: OpKind::BackwardInput, pipe, stage, mb }
+    }
+    /// Weight-grad half of a split backward.
+    pub fn bwd_weight(pipe: PipeId, stage: StageId, mb: MicroBatch) -> Self {
+        CompOp { kind: OpKind::BackwardWeight, pipe, stage, mb }
+    }
     pub fn is_fwd(&self) -> bool {
         self.kind == OpKind::Forward
     }
@@ -57,7 +87,12 @@ impl CompOp {
 
 impl fmt::Display for CompOp {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let k = if self.is_fwd() { 'F' } else { 'B' };
+        let k = match self.kind {
+            OpKind::Forward => "F",
+            OpKind::Backward => "B",
+            OpKind::BackwardInput => "Bi",
+            OpKind::BackwardWeight => "W",
+        };
         write!(f, "{}{}(p{},s{})", k, self.mb, self.pipe, self.stage)
     }
 }
@@ -72,6 +107,15 @@ pub enum Instr {
     Forward { pipe: PipeId, stage: StageId, mb: MicroBatch },
     /// Run chunk backward (consumes the stash; accumulates weight grads).
     Backward { pipe: PipeId, stage: StageId, mb: MicroBatch },
+    /// Split backward, activation-grad half (`Bi`): produces the gradient
+    /// for `stage - 1` but leaves the weight grad to a deferred
+    /// [`Instr::BackwardWeight`]. The activation stash slot transitions to
+    /// a weight-grad pin (net memory change: zero) until the matching `W`.
+    BackwardInput { pipe: PipeId, stage: StageId, mb: MicroBatch },
+    /// Split backward, weight-grad half (`W`): consumes the pin left by
+    /// the matching [`Instr::BackwardInput`] (FIFO per device/chunk) and
+    /// accumulates weight grads. No communication.
+    BackwardWeight { pipe: PipeId, stage: StageId, mb: MicroBatch },
     /// Send the activation produced by local `stage` to the device holding
     /// `stage + 1` of the same pipe.
     SendAct { to: DeviceId, pipe: PipeId, stage: StageId, mb: MicroBatch },
@@ -98,18 +142,27 @@ pub enum Instr {
 }
 
 impl Instr {
-    /// The compute op, if this is a Forward/Backward.
+    /// The compute op, if this is a Forward/Backward/BackwardInput/
+    /// BackwardWeight.
     pub fn comp(&self) -> Option<CompOp> {
         match *self {
             Instr::Forward { pipe, stage, mb } => Some(CompOp::fwd(pipe, stage, mb)),
             Instr::Backward { pipe, stage, mb } => Some(CompOp::bwd(pipe, stage, mb)),
+            Instr::BackwardInput { pipe, stage, mb } => Some(CompOp::bwd_input(pipe, stage, mb)),
+            Instr::BackwardWeight { pipe, stage, mb } => Some(CompOp::bwd_weight(pipe, stage, mb)),
             _ => None,
         }
     }
 
-    /// Is this a compute op (Forward/Backward)?
+    /// Is this a compute op (Forward/Backward/BackwardInput/BackwardWeight)?
     pub fn is_compute(&self) -> bool {
-        matches!(self, Instr::Forward { .. } | Instr::Backward { .. })
+        matches!(
+            self,
+            Instr::Forward { .. }
+                | Instr::Backward { .. }
+                | Instr::BackwardInput { .. }
+                | Instr::BackwardWeight { .. }
+        )
     }
 }
 
@@ -118,6 +171,12 @@ impl fmt::Display for Instr {
         match *self {
             Instr::Forward { pipe, stage, mb } => write!(f, "F{}(p{},s{})", mb, pipe, stage),
             Instr::Backward { pipe, stage, mb } => write!(f, "B{}(p{},s{})", mb, pipe, stage),
+            Instr::BackwardInput { pipe, stage, mb } => {
+                write!(f, "Bi{}(p{},s{})", mb, pipe, stage)
+            }
+            Instr::BackwardWeight { pipe, stage, mb } => {
+                write!(f, "W{}(p{},s{})", mb, pipe, stage)
+            }
             Instr::SendAct { to, pipe, stage, mb } => {
                 write!(f, "SA{}(p{},s{})->d{}", mb, pipe, stage, to)
             }
@@ -226,10 +285,14 @@ pub enum ScheduleKind {
     /// 1F1B-Int order with the V placement; used to isolate the local-copy
     /// benefit.
     VShaped,
+    /// Zero-bubble-style 1F1B (Qi et al. 2023, ZB-H1 discipline): split
+    /// backward — `Bi` on the critical path, weight-grad `W` deferred FIFO
+    /// per device to fill the ramp-down bubbles. Unidirectional, v = 1.
+    ZeroBubble,
 }
 
 impl ScheduleKind {
-    pub const ALL: [ScheduleKind; 9] = [
+    pub const ALL: [ScheduleKind; 10] = [
         ScheduleKind::GPipe,
         ScheduleKind::Dapple,
         ScheduleKind::Interleaved,
@@ -239,6 +302,7 @@ impl ScheduleKind {
         ScheduleKind::BitPipe,
         ScheduleKind::BitPipeNoV,
         ScheduleKind::VShaped,
+        ScheduleKind::ZeroBubble,
     ];
 
     /// The five headline approaches of the paper's evaluation.
@@ -261,6 +325,7 @@ impl ScheduleKind {
             ScheduleKind::BitPipe => "bitpipe",
             ScheduleKind::BitPipeNoV => "bitpipe-no-v",
             ScheduleKind::VShaped => "v-shaped",
+            ScheduleKind::ZeroBubble => "zero-bubble",
         }
     }
 

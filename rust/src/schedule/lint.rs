@@ -15,9 +15,14 @@
 //!   reported with the *shortest* offending instruction cycle as a
 //!   witness instead of a simulator hang.
 //! * **Memory** — liveness high-water per device (activation born at `F`,
-//!   freed at the matching `B`; the per-device program-order walk is
-//!   exact, hence an upper bound on any execution), cross-checked against
-//!   `analysis::peak_activation_stash` and the family's Table-2 ceiling.
+//!   freed at the matching `B`; under a split backward the slot survives
+//!   `Bi` as a weight-grad pin and frees only at `W`; the per-device
+//!   program-order walk is exact, hence an upper bound on any execution),
+//!   cross-checked against `analysis::peak_activation_stash` and the
+//!   family's Table-2 ceiling.
+//! * **Split-backward pairing** — every `Bi` must be followed by its
+//!   matching `W` on the same device and chunk, dequeued FIFO
+//!   (`bw-missing-weight`, `bw-unmatched-weight`).
 //! * **Sync placement** — beyond `validate`'s ordering errors, the eager
 //!   policy is checked *two-sided*: a start that could have fired directly
 //!   after the last backward but is delayed past other work is a warning
@@ -180,6 +185,7 @@ pub fn lint(s: &Schedule) -> LintReport {
     validate::collect(s, &mut out);
     let stash = stash_high_water_chunks(s);
     lint_memory(s, &stash, &mut out);
+    lint_bw_pairing(s, &mut out);
     lint_sync_placement(s, &mut out);
     lint_fifo(s, &mut out);
     lint_deadlock(s, &mut out);
@@ -214,6 +220,14 @@ pub fn family_stash_ceiling(kind: ScheduleKind, d: usize, n: usize, v: usize) ->
         | ScheduleKind::MixPipe
         | ScheduleKind::BitPipe
         | ScheduleKind::BitPipeNoV => (2 * d * v) as u64,
+        // Zero-bubble: device 0 holds up to D in-flight activations (1F1B
+        // warmup cap) plus at most one weight-grad pin at a time — the
+        // deferral queue is force-drained once deeper than D-1, so a full
+        // queue never coexists with full warmup depth. Peak D+1 once
+        // N > D (N caps it below that). The generator's measured
+        // high-water reaches this exactly (pinned by
+        // `zero_bubble_stash_matches_ceiling` in rust/tests/lint_equiv.rs).
+        ScheduleKind::ZeroBubble => ((d + 1).min(n) * v) as u64,
     }
 }
 
@@ -230,7 +244,10 @@ fn lint_memory(s: &Schedule, stash: &[u64], out: &mut Diagnostics) {
         for (ix, ins) in ops.iter().enumerate() {
             match ins {
                 Instr::Forward { .. } => depth += 1,
-                Instr::Backward { .. } => {
+                // A split backward's Bi is memory-neutral (stash slot
+                // becomes a weight-grad pin); the fused B and the split W
+                // both free a slot.
+                Instr::Backward { .. } | Instr::BackwardWeight { .. } => {
                     depth -= 1;
                     if depth < 0 {
                         out.error(
@@ -294,6 +311,71 @@ fn lint_memory(s: &Schedule, stash: &[u64], out: &mut Diagnostics) {
     }
 }
 
+/// Split-backward pairing pass: per device and (pipe, stage) chunk, `Bi`
+/// enqueues its micro-batch and `W` must dequeue the FIFO head — the
+/// `WeightGradStore` discipline. A `W` with no pending `Bi` on its chunk
+/// (or out of FIFO order) is `bw-unmatched-weight`; a `Bi` never followed
+/// by its `W` is `bw-missing-weight` (its pin would leak past the
+/// iteration). Vacuous on fused-backward families.
+fn lint_bw_pairing(s: &Schedule, out: &mut Diagnostics) {
+    for (dv, ops) in s.device_ops.iter().enumerate() {
+        let mut pending: BTreeMap<(usize, usize), VecDeque<(usize, usize)>> = BTreeMap::new();
+        for (ix, ins) in ops.iter().enumerate() {
+            match *ins {
+                Instr::BackwardInput { pipe, stage, mb } => {
+                    pending.entry((pipe, stage)).or_default().push_back((mb, ix));
+                }
+                Instr::BackwardWeight { pipe, stage, mb } => {
+                    let q = pending.entry((pipe, stage)).or_default();
+                    match q.front().copied() {
+                        Some((m0, _)) if m0 == mb => {
+                            q.pop_front();
+                        }
+                        Some((m0, bix)) => {
+                            out.push(Diagnostic {
+                                severity: Severity::Error,
+                                code: "bw-unmatched-weight",
+                                message: format!(
+                                    "device {dv}: {ins} dequeues out of FIFO order; the oldest pending weight grad is mb {m0}"
+                                ),
+                                site: Site::at(dv, ix, ins),
+                                witness: vec![Site::at(dv, bix, &ops[bix])],
+                            });
+                            // Absorb the matching Bi if it is queued at all,
+                            // so one inversion reports once, not per op.
+                            if let Some(p) = q.iter().position(|&(m, _)| m == mb) {
+                                q.remove(p);
+                            }
+                        }
+                        None => {
+                            out.error(
+                                "bw-unmatched-weight",
+                                format!(
+                                    "device {dv}: {ins} has no pending Bi on this device/chunk"
+                                ),
+                                Site::at(dv, ix, ins),
+                            );
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        for ((pipe, stage), q) in pending {
+            for (mb, bix) in q {
+                let ins = &ops[bix];
+                out.error(
+                    "bw-missing-weight",
+                    format!(
+                        "device {dv}: Bi{mb}(p{pipe},s{stage}) is never followed by its weight-grad W; its memory pin leaks past the iteration"
+                    ),
+                    Site::at(dv, bix, ins),
+                );
+            }
+        }
+    }
+}
+
 /// Sync-placement pass: out-of-range collective/optimizer stages, and the
 /// two-sided eager check — between a stage's last backward and its
 /// `AllReduceStart`, only sends and other starts may appear, otherwise
@@ -307,7 +389,10 @@ fn lint_sync_placement(s: &Schedule, out: &mut Diagnostics) {
         let mut first_start: BTreeMap<usize, usize> = BTreeMap::new();
         for (ix, ins) in ops.iter().enumerate() {
             match *ins {
-                Instr::Backward { stage, .. } => {
+                // A split backward's weight grad is the last producer of the
+                // stage's weight gradient, so it — not the Bi — anchors the
+                // eager window, matching `validate`'s sync semantics.
+                Instr::Backward { stage, .. } | Instr::BackwardWeight { stage, .. } => {
                     last_bwd.insert(stage, ix);
                 }
                 Instr::AllReduceStart { stage } => {

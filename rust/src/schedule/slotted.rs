@@ -33,6 +33,8 @@ fn class_of(op: &CompOp) -> usize {
         (OpKind::Backward, 0) => 1,
         (OpKind::Forward, _) => 2,
         (OpKind::Backward, _) => 3,
+        // The slotted rotation only cycles fused F/B classes.
+        _ => unreachable!("split backward in slotted rotation"),
     }
 }
 
@@ -113,6 +115,7 @@ pub fn slotted_order(
                             }
                             nb - 1
                         }
+                        _ => unreachable!("split backward in slotted rotation"),
                     };
                     let op = CompOp { kind, pipe, stage, mb: m };
                     if placement.device(pipe, stage) != dev {
@@ -153,11 +156,13 @@ pub fn slotted_order(
                             OpKind::Backward => {
                                 inflight[op.pipe] = inflight[op.pipe].saturating_sub(1)
                             }
+                            _ => unreachable!("split backward in slotted rotation"),
                         }
                     }
                     match op.kind {
                         OpKind::Forward => *next_f.get_mut(&(op.pipe, op.mb)).unwrap() += 1,
                         OpKind::Backward => *next_b.get_mut(&(op.pipe, op.mb)).unwrap() -= 1,
+                        _ => unreachable!("split backward in slotted rotation"),
                     }
                     order[dev].push(op);
                     scheduled += 1;

@@ -93,6 +93,8 @@ pub fn to_csv(s: &Schedule, costs: &Costs) -> Result<String> {
             let k = match top.op.kind {
                 OpKind::Forward => "F",
                 OpKind::Backward => "B",
+                OpKind::BackwardInput => "Bi",
+                OpKind::BackwardWeight => "W",
             };
             let _ = writeln!(
                 out,

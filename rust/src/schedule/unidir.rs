@@ -203,6 +203,8 @@ mod tests {
                 match op.kind {
                     crate::schedule::ir::OpKind::Forward => depth += 1,
                     crate::schedule::ir::OpKind::Backward => depth -= 1,
+                    // dapple_order emits fused backwards only.
+                    _ => unreachable!("unexpected split backward in 1F1B order"),
                 }
                 peak = peak.max(depth);
             }

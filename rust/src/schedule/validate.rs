@@ -13,11 +13,13 @@
 //! The invariants, stated or implied by the paper:
 //!
 //! 1. **Completeness** (`sched-completeness`) — every (pipe, stage,
-//!    micro-batch) chunk runs its forward and backward exactly once, on
-//!    the device that hosts it.
+//!    micro-batch) chunk runs its forward exactly once, and exactly one
+//!    backward *shape*: either the fused `B`, or the split pair `Bi` + `W`
+//!    (both exactly once), on the device that hosts it.
 //! 2. **Dataflow order** (`sched-local-order`, `retime`) — within each
-//!    device stream, `B(s,m)` after `F(s,m)`; globally the streams
-//!    re-time without deadlock (checked by [`super::asap::retime`]).
+//!    device stream, `B(s,m)` (or `Bi(s,m)`) after `F(s,m)` and `W(s,m)`
+//!    after `Bi(s,m)`; globally the streams re-time without deadlock
+//!    (checked by [`super::asap::retime`]).
 //! 3. **Comm pairing** (`comm-pairing`) — every `SendAct`/`SendGrad` has
 //!    exactly one matching `RecvAct`/`RecvGrad` on the destination device
 //!    and vice versa; local copies only connect co-located chunks.
@@ -93,17 +95,42 @@ fn collect_completeness(s: &Schedule, out: &mut Diagnostics) {
             }
         }
     }
+    let missing = |out: &mut Diagnostics, op: CompOp| {
+        out.error(
+            "sched-completeness",
+            format!("missing compute op {op}"),
+            Site { device: None, index: None, instr: op.to_string() },
+        );
+    };
     for (m, &pipe) in s.pipe_of_mb.iter().enumerate() {
         for stage in 0..n_stages {
-            for kind in [OpKind::Forward, OpKind::Backward] {
-                let op = CompOp { kind, pipe, stage, mb: m };
-                if !seen.remove(&op) {
-                    out.error(
-                        "sched-completeness",
-                        format!("missing compute op {op}"),
-                        Site { device: None, index: None, instr: op.to_string() },
-                    );
-                    return;
+            let f = CompOp::fwd(pipe, stage, m);
+            if !seen.remove(&f) {
+                missing(out, f);
+                return;
+            }
+            // Backward comes in one of two shapes: the fused B, or the
+            // split Bi + W pair (both halves required).
+            let b = CompOp::bwd(pipe, stage, m);
+            if !seen.remove(&b) {
+                let bi = CompOp::bwd_input(pipe, stage, m);
+                let w = CompOp::bwd_weight(pipe, stage, m);
+                let have_bi = seen.remove(&bi);
+                let have_w = seen.remove(&w);
+                match (have_bi, have_w) {
+                    (true, true) => {}
+                    (true, false) => {
+                        missing(out, w);
+                        return;
+                    }
+                    (false, true) => {
+                        missing(out, bi);
+                        return;
+                    }
+                    (false, false) => {
+                        missing(out, b);
+                        return;
+                    }
                 }
             }
         }
@@ -117,7 +144,8 @@ fn collect_completeness(s: &Schedule, out: &mut Diagnostics) {
     }
 }
 
-/// Invariant 2 (local part): on each device stream, B(s,m) after F(s,m).
+/// Invariant 2 (local part): on each device stream, B(s,m) / Bi(s,m)
+/// after F(s,m), and W(s,m) after Bi(s,m).
 fn collect_device_local_order(s: &Schedule, out: &mut Diagnostics) {
     for (dev, ops) in s.compute_order.iter().enumerate() {
         let mut pos: HashMap<CompOp, usize> = HashMap::new();
@@ -125,19 +153,23 @@ fn collect_device_local_order(s: &Schedule, out: &mut Diagnostics) {
             pos.insert(*op, i);
         }
         for op in ops {
-            if op.kind == OpKind::Backward {
-                let f = CompOp::fwd(op.pipe, op.stage, op.mb);
-                if let Some(&fi) = pos.get(&f) {
-                    if fi >= pos[op] {
-                        out.push(Diagnostic {
-                            severity: Severity::Error,
-                            code: "sched-local-order",
-                            message: format!("device {dev}: {op} precedes its own forward {f}"),
-                            site: op_site(dev, op),
-                            witness: vec![op_site(dev, &f)],
-                        });
-                        return;
-                    }
+            let dep = match op.kind {
+                OpKind::Backward | OpKind::BackwardInput => {
+                    CompOp::fwd(op.pipe, op.stage, op.mb)
+                }
+                OpKind::BackwardWeight => CompOp::bwd_input(op.pipe, op.stage, op.mb),
+                OpKind::Forward => continue,
+            };
+            if let Some(&di) = pos.get(&dep) {
+                if di >= pos[op] {
+                    out.push(Diagnostic {
+                        severity: Severity::Error,
+                        code: "sched-local-order",
+                        message: format!("device {dev}: {op} precedes its dependency {dep}"),
+                        site: op_site(dev, op),
+                        witness: vec![op_site(dev, &dep)],
+                    });
+                    return;
                 }
             }
         }
@@ -276,7 +308,9 @@ fn collect_sync_semantics(s: &Schedule, out: &mut Diagnostics) {
         let mut optim: HashMap<usize, usize> = HashMap::new();
         for (i, op) in ops.iter().enumerate() {
             match *op {
-                Instr::Backward { stage, .. } => {
+                // The stage's gradient is complete at the fused backward
+                // or, for a split backward, only at the weight-grad W.
+                Instr::Backward { stage, .. } | Instr::BackwardWeight { stage, .. } => {
                     last_bwd.insert(stage, i);
                 }
                 Instr::AllReduceStart { stage } => {

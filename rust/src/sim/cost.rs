@@ -141,6 +141,13 @@ pub struct CostModel {
     pub chunk_fwd: f64,
     /// Backward time of one chunk on one micro-batch.
     pub chunk_bwd: f64,
+    /// Activation-gradient (Bi) half of a split backward — the even split
+    /// the schedule IR's `chunk_bi` mirrors in tick units.
+    pub chunk_bwd_input: f64,
+    /// Weight-gradient (W) half of a split backward; `chunk_bwd_input +
+    /// chunk_bwd_weight == chunk_bwd` so split and fused schedules price
+    /// the same total backward work.
+    pub chunk_bwd_weight: f64,
     /// Activation / gradient message bytes.
     pub msg_bytes: u64,
     /// Gradient bytes per *body* chunk's all-reduce (its transformer
@@ -246,6 +253,8 @@ impl CostModel {
         let mut cm = CostModel {
             chunk_fwd,
             chunk_bwd,
+            chunk_bwd_input: 0.5 * chunk_bwd,
+            chunk_bwd_weight: chunk_bwd - 0.5 * chunk_bwd,
             msg_bytes,
             grad_bytes,
             allreduce_group: group,

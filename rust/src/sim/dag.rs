@@ -59,7 +59,7 @@
 
 use super::cost::CostModel;
 use super::engine::{DeviceTrace, MultiIterTrace, SimError, LAUNCH};
-use crate::schedule::{Instr, Schedule};
+use crate::schedule::{Instr, OpKind, Schedule};
 use std::fmt;
 
 /// Message key, identical to the event engine's FIFO tag:
@@ -143,7 +143,9 @@ pub struct CompiledDag {
 const W_FWD: u32 = 0;
 const W_BWD: u32 = 1;
 const W_COPY: u32 = 2;
-const W_P2P: u32 = 3;
+const W_BI: u32 = 3;
+const W_WGT: u32 = 4;
+const W_P2P: u32 = 5;
 
 /// Per-class costs for one (model, parallel, cluster) point, read by the
 /// evaluation pass. Rebuilding this table is the *entire* cost of
@@ -228,6 +230,14 @@ impl CompiledDag {
                     }
                     Instr::Backward { .. } => {
                         wclass[id as usize] = W_BWD;
+                        NodeOp::Compute
+                    }
+                    Instr::BackwardInput { .. } => {
+                        wclass[id as usize] = W_BI;
+                        NodeOp::Compute
+                    }
+                    Instr::BackwardWeight { .. } => {
+                        wclass[id as usize] = W_WGT;
                         NodeOp::Compute
                     }
                     Instr::LocalCopyAct { .. } | Instr::LocalCopyGrad { .. } => {
@@ -438,7 +448,12 @@ impl CompiledDag {
             .map(|ops| {
                 let (mut depth, mut peak) = (0i64, 0i64);
                 for o in ops {
-                    depth += if o.is_fwd() { 1 } else { -1 };
+                    depth += match o.kind {
+                        OpKind::Forward => 1,
+                        OpKind::Backward | OpKind::BackwardWeight => -1,
+                        // Bi's stash slot survives as a weight-grad pin.
+                        OpKind::BackwardInput => 0,
+                    };
                     peak = peak.max(depth);
                 }
                 peak.max(0) as u32
@@ -474,6 +489,8 @@ impl CompiledDag {
         tab[W_FWD as usize] = costs.chunk_fwd;
         tab[W_BWD as usize] = costs.chunk_bwd;
         tab[W_COPY as usize] = costs.local_copy_time();
+        tab[W_BI as usize] = costs.chunk_bwd_input;
+        tab[W_WGT as usize] = costs.chunk_bwd_weight;
         for a in 0..d {
             for b in 0..d {
                 tab[W_P2P as usize + a * d + b] = costs.p2p_time(a, b);

@@ -1009,6 +1009,14 @@ impl<'a> Engine<'a> {
                     self.now[dev] += self.costs.chunk_bwd;
                     self.trace[dev].compute_busy += self.costs.chunk_bwd;
                 }
+                Instr::BackwardInput { .. } => {
+                    self.now[dev] += self.costs.chunk_bwd_input;
+                    self.trace[dev].compute_busy += self.costs.chunk_bwd_input;
+                }
+                Instr::BackwardWeight { .. } => {
+                    self.now[dev] += self.costs.chunk_bwd_weight;
+                    self.trace[dev].compute_busy += self.costs.chunk_bwd_weight;
+                }
                 Instr::SendAct { to, .. } | Instr::SendGrad { to, .. } => {
                     let slot = self.tables.slots[dev][self.ix[dev]];
                     self.send(dev, to, slot);
@@ -1266,6 +1274,14 @@ pub fn simulate_schedule_reference(
                     Instr::Backward { .. } => {
                         now[dev] += costs.chunk_bwd;
                         trace[dev].compute_busy += costs.chunk_bwd;
+                    }
+                    Instr::BackwardInput { .. } => {
+                        now[dev] += costs.chunk_bwd_input;
+                        trace[dev].compute_busy += costs.chunk_bwd_input;
+                    }
+                    Instr::BackwardWeight { .. } => {
+                        now[dev] += costs.chunk_bwd_weight;
+                        trace[dev].compute_busy += costs.chunk_bwd_weight;
                     }
                     Instr::SendAct { to, pipe, stage, mb } => {
                         now[dev] += LAUNCH;

@@ -1,6 +1,14 @@
 //! Static memory accounting per device (paper Fig 8 and Table 2):
 //! weights (+ grads + optimizer state) for every chunk a device holds, and
 //! peak activation stash measured from the schedule's compute order.
+//!
+//! Liveness rule: a stash slot is born at each `F` and freed at the
+//! matching fused `B`. Under a split backward, `Bi` (activation grad) is
+//! memory-neutral — the slot transitions to a weight-grad pin that lives
+//! until the matching deferred `W` frees it. Every stash walk in the
+//! codebase (here, `schedule::analysis`, `schedule::lint`, the DAG
+//! compiler's `peak_stash`, and the Python mirror) implements this same
+//! single-counter rule: `F` +1, `B`/`W` −1, `Bi` 0.
 
 use crate::config::{ModelConfig, ParallelConfig};
 use crate::schedule::{OpKind, Schedule};
@@ -61,7 +69,9 @@ pub fn memory_footprint(
         for op in &s.compute_order[dev] {
             match op.kind {
                 OpKind::Forward => depth += 1,
-                OpKind::Backward => depth -= 1,
+                OpKind::Backward | OpKind::BackwardWeight => depth -= 1,
+                // Bi's stash slot survives as a weight-grad pin until W.
+                OpKind::BackwardInput => {}
             }
             peak = peak.max(depth);
         }
@@ -182,7 +192,11 @@ mod tests {
                 .map(|ops| {
                     let (mut depth, mut peak) = (0i64, 0i64);
                     for op in ops {
-                        depth += if op.kind == OpKind::Forward { 1 } else { -1 };
+                        depth += match op.kind {
+                            OpKind::Forward => 1,
+                            OpKind::Backward | OpKind::BackwardWeight => -1,
+                            OpKind::BackwardInput => 0,
+                        };
                         peak = peak.max(depth);
                     }
                     peak.max(0) as u32

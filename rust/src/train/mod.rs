@@ -449,6 +449,11 @@ impl<'a> Worker<'a> {
         match *instr {
             Instr::Forward { pipe, stage, mb } => self.forward(iter, giter, pipe, stage, mb),
             Instr::Backward { pipe, stage, mb } => self.backward(giter, pipe, stage, mb),
+            // The reference runtime computes both halves of a split
+            // backward at Bi (numerically identical to the fused op); the
+            // deferred W is then a timing-only no-op here.
+            Instr::BackwardInput { pipe, stage, mb } => self.backward(giter, pipe, stage, mb),
+            Instr::BackwardWeight { .. } => Ok(()),
             Instr::SendAct { to, pipe, stage, mb } => {
                 let payload = self
                     .outbox_act

@@ -45,10 +45,17 @@ fn measure(kind: ScheduleKind, d: usize, n: usize) -> f64 {
     r.iter_time
 }
 
+/// Families pinned by the snapshot: the paper baselines plus the
+/// zero-bubble split-backward family (appended so pre-existing lines keep
+/// their keys and values).
+fn golden_families() -> impl Iterator<Item = ScheduleKind> {
+    ScheduleKind::PAPER_BASELINES.into_iter().chain([ScheduleKind::ZeroBubble])
+}
+
 fn current_snapshot() -> Vec<(String, f64)> {
     let mut out = Vec::new();
     for (d, n) in GRID {
-        for kind in ScheduleKind::PAPER_BASELINES {
+        for kind in golden_families() {
             let key = format!("{} d{} n{} b4 bert-64", kind.name(), d, n);
             out.push((key, measure(kind, d, n)));
         }
@@ -112,6 +119,11 @@ fn makespans_match_golden_snapshot() {
                 assert!(bit < v, "D={d} N={n}: BitPipe {bit} !< {kind} {v}");
             }
         }
+        // The deferred weight grads must pay off: zero-bubble beats plain
+        // 1F1B at every grid point.
+        let zb = at(ScheduleKind::ZeroBubble);
+        let dap = at(ScheduleKind::Dapple);
+        assert!(zb < dap, "D={d} N={n}: zero-bubble {zb} !< dapple {dap}");
     }
 
     let path = golden_path();

@@ -184,6 +184,97 @@ fn duplicated_message_pair_warns_fifo_ambiguity() {
 }
 
 #[test]
+fn zero_bubble_stash_matches_ceiling() {
+    // Acceptance pin: the measured stash high-water of the zero-bubble
+    // generator reaches its closed-form family ceiling exactly (device 0:
+    // D in-flight activations + D weight-grad pins).
+    for d in DS {
+        for n in NS {
+            if n < d {
+                continue;
+            }
+            let (_, s) = built(ScheduleKind::ZeroBubble, d, n);
+            let measured = lint(&s).stash_high_water.into_iter().max().unwrap();
+            let ceiling =
+                bitpipe::schedule::lint::family_stash_ceiling(ScheduleKind::ZeroBubble, d, n, 1);
+            assert_eq!(measured, ceiling, "D={d} N={n}");
+        }
+    }
+}
+
+#[test]
+fn weight_grad_before_its_bi_is_unmatched() {
+    // Hoist a W ahead of the Bi that feeds it: the WeightGradStore is
+    // empty at dequeue time. Statically an error; dynamically the stream
+    // still completes (W needs no message), so only the lint catches it.
+    let (cfg, mut s) = built(ScheduleKind::ZeroBubble, 4, 8);
+    let ops = &mut s.device_ops[0];
+    let wix = ops.iter().position(|i| matches!(i, Instr::BackwardWeight { .. })).unwrap();
+    let Instr::BackwardWeight { pipe, stage, mb } = ops[wix] else { unreachable!() };
+    let bix = ops
+        .iter()
+        .position(|i| {
+            matches!(i, Instr::BackwardInput { pipe: p, stage: st, mb: m }
+                if (*p, *st, *m) == (pipe, stage, mb))
+        })
+        .unwrap();
+    assert!(bix < wix, "generator must emit Bi before its W");
+    let w = ops.remove(wix);
+    ops.insert(bix, w);
+
+    let r = lint(&s);
+    let un = r.with_code("bw-unmatched-weight");
+    assert!(!un.is_empty(), "{:?}", r.diags);
+    assert!(un[0].site.instr.starts_with('W'), "{}", un[0].site.instr);
+    assert_eq!(un[0].site.device, Some(0));
+
+    let c = costs_for(&cfg);
+    simulate_schedule(&s, &c).unwrap();
+}
+
+#[test]
+fn dropped_weight_grads_leak_past_the_ceiling() {
+    // Delete every W on device 0: each Bi's pin is never released. The
+    // pairing pass flags every orphan and the memory pass sees the stash
+    // climb past the 2D family ceiling; the engine still completes.
+    let (cfg, mut s) = built(ScheduleKind::ZeroBubble, 4, 16);
+    s.device_ops[0].retain(|i| !matches!(i, Instr::BackwardWeight { .. }));
+
+    let r = lint(&s);
+    let missing = r.with_code("bw-missing-weight");
+    assert_eq!(missing.len(), 16, "{:?}", r.diags);
+    assert!(missing[0].site.instr.starts_with("Bi"), "{}", missing[0].site.instr);
+    assert!(
+        !r.with_code("mem-ceiling-exceeded").is_empty(),
+        "leaked pins must push the high-water past the family ceiling: {:?}",
+        r.diags
+    );
+    assert_eq!(r.stash_high_water[0], 16);
+
+    let c = costs_for(&cfg);
+    simulate_schedule(&s, &c).unwrap();
+}
+
+#[test]
+fn weight_grad_on_mismatched_chunk_flags_both_sides() {
+    // Retarget one W to a chunk its device never ran a Bi for: the W
+    // dequeues from an empty queue (unmatched) and its real Bi is left
+    // orphaned (missing) — both sides of the pairing invariant fire.
+    let (cfg, mut s) = built(ScheduleKind::ZeroBubble, 4, 8);
+    let ops = &mut s.device_ops[1];
+    let wix = ops.iter().position(|i| matches!(i, Instr::BackwardWeight { .. })).unwrap();
+    let Instr::BackwardWeight { pipe, stage, mb } = ops[wix] else { unreachable!() };
+    ops[wix] = Instr::BackwardWeight { pipe, stage: stage + 1, mb };
+
+    let r = lint(&s);
+    assert!(!r.with_code("bw-unmatched-weight").is_empty(), "{:?}", r.diags);
+    assert!(!r.with_code("bw-missing-weight").is_empty(), "{:?}", r.diags);
+
+    let c = costs_for(&cfg);
+    simulate_schedule(&s, &c).unwrap();
+}
+
+#[test]
 fn eager_start_delayed_past_a_recv_warns_but_validates() {
     // Regression for the one-sided eager check: validate only rejects a
     // start delayed past *compute*, so swapping an AllReduceStart with the
