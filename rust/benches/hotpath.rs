@@ -16,8 +16,9 @@
 //!
 //! Every run also writes `BENCH_hotpath.json` next to the manifest: one
 //! entry per case (median ns + run count) plus the named speedup ratios
-//! (dag cold/warm vs event-serial, contended StreamCache cold/warm vs the
-//! PR-4 `grid_search_opts` baseline), so the perf trajectory is recorded
+//! (dag cold/warm vs event-serial, batched k-lane warm vs scalar warm,
+//! incremental weight rebuild vs full, contended StreamCache cold/warm vs
+//! the PR-4 `grid_search_opts` baseline), so the perf trajectory is recorded
 //! machine-readably instead of scrolling away in CI logs (CI uploads the
 //! file as an artifact). Smoke-mode numbers are single-run and flagged
 //! `"smoke": true` — useful for wiring checks, not for comparisons.
@@ -27,9 +28,10 @@ use bitpipe::comm::{Fabric, Tag};
 use bitpipe::config::{ClusterConfig, ParallelConfig, BERT_64};
 use bitpipe::schedule::{self, retime, Costs, ScheduleConfig, ScheduleKind};
 use bitpipe::sim::{
-    grid_search, grid_search_cached, grid_search_contended_cached, grid_search_opts,
-    grid_search_opts_baseline, grid_search_serial, simulate_schedule, simulate_schedule_iters,
-    simulate_schedule_with, CompiledDag, CostModel, DagCache, GridSpace, StreamCache,
+    grid_search, grid_search_batched, grid_search_cached, grid_search_contended_cached,
+    grid_search_opts, grid_search_opts_baseline, grid_search_serial, simulate_schedule,
+    simulate_schedule_iters, simulate_schedule_with, CompiledDag, CostModel, DagCache, GridSpace,
+    LinkTopology, StreamCache,
 };
 use bitpipe::train::optim::{Adam, AdamConfig};
 use std::time::{Duration, Instant};
@@ -236,6 +238,80 @@ fn main() {
     if !smoke && warm_speedup < 5.0 {
         println!("  WARNING: warm-cache dag grid_search below the 5x sweep-layer target");
     }
+
+    // Batched multi-lane re-cost: the Table-4 shape — three GPU counts,
+    // three per-8-GPU minibatch scales, nine sweeps sharing candidate
+    // structures — evaluated k lanes per topo walk by one
+    // `grid_search_batched` call, against the scalar warm path looping
+    // `grid_search_cached` per sweep. Both run on a primed cache so the
+    // comparison isolates re-cost + evaluate work (no compiles). The
+    // >= 5x batched-vs-scalar-warm speedup is this PR's acceptance gate.
+    let mut sweeps: Vec<(usize, usize)> = Vec::new();
+    for g in [8usize, 16, 32] {
+        for bhat_per8 in [8usize, 16, 32] {
+            sweeps.push((g, bhat_per8 * g / 8));
+        }
+    }
+    let mut bcache = DagCache::new();
+    for &(g, mb) in &sweeps {
+        let _ = grid_search_cached(ScheduleKind::BitPipe, &BERT_64, &space, g, mb, &mut bcache)
+            .unwrap();
+    }
+    let (med_swarm, it_sw) = bench(sweep_budget, || {
+        for &(g, mb) in &sweeps {
+            let _ =
+                grid_search_cached(ScheduleKind::BitPipe, &BERT_64, &space, g, mb, &mut bcache)
+                    .unwrap();
+        }
+    });
+    rec.case("dag_warm_scalar 9 sweeps (Table-4 shape)", med_swarm, it_sw, "");
+    let (med_batch, it_bt) = bench(sweep_budget, || {
+        let _ = grid_search_batched(ScheduleKind::BitPipe, &BERT_64, &space, &sweeps, &mut bcache)
+            .unwrap();
+    });
+    let batch_speedup = med_swarm.as_secs_f64() / med_batch.as_secs_f64().max(1e-12);
+    rec.case(
+        "dag_warm_batched 9 sweeps (k-lane re-cost)",
+        med_batch,
+        it_bt,
+        &format!("  [{batch_speedup:.2}x vs scalar warm]"),
+    );
+    rec.speedup("dag_batched_warm_vs_scalar_warm", batch_speedup);
+    if !smoke && batch_speedup < 5.0 {
+        println!("  WARNING: batched warm sweep below the 5x re-cost target");
+    }
+
+    // Incremental weight rebuild: full `dag.weights(&CostModel)` per B
+    // move against cloning the previous table and rewriting only the
+    // B-dependent entries from `LinkTopology::batch_pricing`.
+    let cluster32 = ClusterConfig::paper_testbed(32);
+    let topo32 = LinkTopology::new(&cluster32, 4, 8);
+    let base_w = dag.weights(&cm);
+    let (med_full, it_f) = bench(budget, || {
+        for b in [1usize, 2, 4, 8] {
+            let pb = ParallelConfig::new(ScheduleKind::BitPipe, 4, 8, b, 32);
+            let cmb = CostModel::with_topology(&BERT_64, &pb, &cluster32, &topo32);
+            std::hint::black_box(dag.weights(&cmb));
+        }
+    });
+    rec.case("recost full weights() x4 B moves", med_full, it_f, "");
+    let (med_inc, it_i) = bench(budget, || {
+        for b in [1usize, 2, 4, 8] {
+            let pb = ParallelConfig::new(ScheduleKind::BitPipe, 4, 8, b, 32);
+            let bp = topo32.batch_pricing(&BERT_64, &pb, &cluster32);
+            let mut w = base_w.clone();
+            w.rebuild_for_batch_size(&bp);
+            std::hint::black_box(w);
+        }
+    });
+    let inc_speedup = med_full.as_secs_f64() / med_inc.as_secs_f64().max(1e-12);
+    rec.case(
+        "recost_incremental_weights x4 B moves",
+        med_inc,
+        it_i,
+        &format!("  [{inc_speedup:.2}x vs full rebuild]"),
+    );
+    rec.speedup("recost_incremental_vs_full", inc_speedup);
 
     // Contended sweep (requires the event engine): the PR-4 baseline —
     // rebuild every candidate's schedule, global settlement — against the

@@ -104,6 +104,35 @@ pub struct LinkTopology {
     entries: Vec<(LinkKind, LinkId, u32)>,
 }
 
+/// The B-dependent slice of a [`CostModel`]: exactly the entries a sweep
+/// move along the micro-batch axis changes. Everything else in the model —
+/// gradient volumes, all-reduce scalars and ring lowerings, optimizer
+/// times — depends only on (model, W, D, v, cluster) and survives a B
+/// move untouched. Computed by [`LinkTopology::batch_pricing`], and the
+/// single source of truth for these formulas: [`CostModel::with_topology`]
+/// consumes it too, so the incremental paths
+/// ([`super::dag::DagWeights::rebuild_for_batch_size`],
+/// [`CostModel::rebatched`]) cannot drift from the full build — they are
+/// bit-identical by construction, and pinned so by tests.
+#[derive(Debug, Clone)]
+pub struct BatchPricing {
+    /// Forward time of one chunk on one micro-batch.
+    pub chunk_fwd: f64,
+    /// Backward time (2x forward, paper premise).
+    pub chunk_bwd: f64,
+    /// Activation-gradient (Bi) half of a split backward.
+    pub chunk_bwd_input: f64,
+    /// Weight-gradient (W) half; `input + weight == chunk_bwd`.
+    pub chunk_bwd_weight: f64,
+    /// Activation / gradient message bytes.
+    pub msg_bytes: u64,
+    /// Same-device HBM->HBM copy time.
+    pub local_copy: f64,
+    /// Solo P2P times `[a * d + b]` over the topology's pipes —
+    /// operation-for-operation [`P2pEdge::solo_time`].
+    pub p2p: Vec<f64>,
+}
+
 impl LinkTopology {
     fn cluster_key(cluster: &ClusterConfig) -> (usize, usize, MappingPolicy) {
         (cluster.n_devices, cluster.devices_per_node, cluster.mapping)
@@ -131,6 +160,57 @@ impl LinkTopology {
             }
         }
         LinkTopology { w: w_groups, d, cluster_key: Self::cluster_key(cluster), entries }
+    }
+
+    /// Price the B-dependent entries of a cost model over this topology's
+    /// pipes, without touching the B-independent tables (all-reduce rings,
+    /// optimizer). Expression-for-expression the computation
+    /// [`CostModel::with_topology`] performs — `with_topology` calls this —
+    /// so an incremental rebuild from it is bit-identical to a full one.
+    /// Same preconditions as `with_topology`: `self` must have been built
+    /// for `cluster`, `parallel.w` and `parallel.d`.
+    pub fn batch_pricing(
+        &self,
+        model: &ModelConfig,
+        parallel: &ParallelConfig,
+        cluster: &ClusterConfig,
+    ) -> BatchPricing {
+        assert_eq!(
+            (self.w, self.d),
+            (parallel.w.max(1), parallel.d),
+            "link topology built for a different (W, D)"
+        );
+        assert_eq!(
+            self.cluster_key,
+            Self::cluster_key(cluster),
+            "link topology built for a different cluster"
+        );
+        let chunks = parallel.v * parallel.d;
+        // Layers per chunk (at least one; tiny models on deep pipelines
+        // saturate at 1 layer per chunk).
+        let layers_per_chunk = (model.n_layers + chunks - 1) / chunks;
+        let fwd_flops = model.layer_fwd_flops(parallel.b) * layers_per_chunk as u64;
+        // Small micro-batches under-utilize the device (occupancy/launch
+        // bound) — the effect behind paper Fig 11(b)'s B sensitivity.
+        let eff = cluster.mbs_efficiency(parallel.b);
+        let chunk_fwd = fwd_flops as f64 / (cluster.flops * eff);
+        let chunk_bwd = 2.0 * chunk_fwd;
+        let msg_bytes = model.message_bytes(parallel.b);
+        let p2p = self
+            .entries
+            .iter()
+            .map(|&(kind, _, _)| cluster.lat(kind) + msg_bytes as f64 / cluster.bw(kind))
+            .collect();
+        BatchPricing {
+            chunk_fwd,
+            chunk_bwd,
+            chunk_bwd_input: 0.5 * chunk_bwd,
+            chunk_bwd_weight: chunk_bwd - 0.5 * chunk_bwd,
+            msg_bytes,
+            local_copy: cluster.lat(LinkKind::Local)
+                + msg_bytes as f64 / cluster.bw(LinkKind::Local),
+            p2p,
+        }
     }
 }
 
@@ -207,27 +287,12 @@ impl CostModel {
         cluster: &ClusterConfig,
         topo: &LinkTopology,
     ) -> Self {
-        assert_eq!(
-            (topo.w, topo.d),
-            (parallel.w.max(1), parallel.d),
-            "link topology built for a different (W, D)"
-        );
-        assert_eq!(
-            topo.cluster_key,
-            LinkTopology::cluster_key(cluster),
-            "link topology built for a different cluster"
-        );
+        // The B-dependent entries come from the shared pricing helper (it
+        // also carries the (W, D, cluster) asserts); everything below is
+        // the B-independent remainder.
+        let bp = topo.batch_pricing(model, parallel, cluster);
         let chunks = parallel.v * parallel.d;
-        // Layers per chunk (at least one; tiny models on deep pipelines
-        // saturate at 1 layer per chunk).
         let layers_per_chunk = (model.n_layers + chunks - 1) / chunks;
-        let fwd_flops = model.layer_fwd_flops(parallel.b) * layers_per_chunk as u64;
-        // Small micro-batches under-utilize the device (occupancy/launch
-        // bound) — the effect behind paper Fig 11(b)'s B sensitivity.
-        let eff = cluster.mbs_efficiency(parallel.b);
-        let chunk_fwd = fwd_flops as f64 / (cluster.flops * eff);
-        let chunk_bwd = 2.0 * chunk_fwd;
-        let msg_bytes = model.message_bytes(parallel.b);
         let grad_bytes =
             model.params_per_layer() * layers_per_chunk as u64 * model.dtype_bytes as u64;
 
@@ -251,11 +316,11 @@ impl CostModel {
         };
 
         let mut cm = CostModel {
-            chunk_fwd,
-            chunk_bwd,
-            chunk_bwd_input: 0.5 * chunk_bwd,
-            chunk_bwd_weight: chunk_bwd - 0.5 * chunk_bwd,
-            msg_bytes,
+            chunk_fwd: bp.chunk_fwd,
+            chunk_bwd: bp.chunk_bwd,
+            chunk_bwd_input: bp.chunk_bwd_input,
+            chunk_bwd_weight: bp.chunk_bwd_weight,
+            msg_bytes: bp.msg_bytes,
             grad_bytes,
             allreduce_group: group,
             allreduce_link,
@@ -286,8 +351,7 @@ impl CostModel {
                 dp_copies,
             })
             .collect();
-        cm.local_copy = cm.cluster.lat(LinkKind::Local)
-            + cm.msg_bytes as f64 / cm.cluster.bw(LinkKind::Local);
+        cm.local_copy = bp.local_copy;
         // Heterogeneous per-stage gradient volumes: the entry chunk carries
         // the token/position embeddings, the exit chunk its own LM-head
         // projection copy — both all-reduce more bytes than a body chunk.
@@ -327,6 +391,58 @@ impl CostModel {
             .map(|stage| optim_of(cm.grad_bytes_of(stage, embed_bytes)))
             .collect();
         cm.optim_body = optim_of(cm.grad_bytes);
+        cm
+    }
+
+    /// This model re-priced for a different micro-batch size B: recompute
+    /// only the B-dependent entries ([`BatchPricing`]) and keep the
+    /// B-independent tables — all-reduce scalars, ring lowerings,
+    /// optimizer times, link identities — by clone. Bit-identical to a
+    /// full [`CostModel::with_topology`] build at `parallel` (pinned in
+    /// tests and by the contended-sweep differential); an order of
+    /// magnitude cheaper because the ring/optimizer tables never rebuild.
+    /// `self` must have been built for the same model, schedule kind, W, D,
+    /// v, and cluster — only `parallel.b` may differ.
+    pub fn rebatched(
+        &self,
+        model: &ModelConfig,
+        parallel: &ParallelConfig,
+        topo: &LinkTopology,
+    ) -> Self {
+        assert_eq!(
+            (parallel.w, parallel.d),
+            (self.w, self.d),
+            "rebatched across a different (W, D)"
+        );
+        assert_eq!(parallel.v * parallel.d, self.n_stages, "rebatched across a different v");
+        let twins = if parallel.kind.bidirectional() { 2 } else { 1 };
+        assert_eq!(
+            twins * parallel.w,
+            self.allreduce_group,
+            "rebatched across a different collective group"
+        );
+        let bp = topo.batch_pricing(model, parallel, &self.cluster);
+        // Model consistency: the gradient volume is B-independent, so a
+        // different model (or layer split) cannot slip through silently.
+        let chunks = parallel.v * parallel.d;
+        let layers_per_chunk = (model.n_layers + chunks - 1) / chunks;
+        assert_eq!(
+            model.params_per_layer() * layers_per_chunk as u64 * model.dtype_bytes as u64,
+            self.grad_bytes,
+            "rebatched against a different model"
+        );
+        let mut cm = self.clone();
+        cm.chunk_fwd = bp.chunk_fwd;
+        cm.chunk_bwd = bp.chunk_bwd;
+        cm.chunk_bwd_input = bp.chunk_bwd_input;
+        cm.chunk_bwd_weight = bp.chunk_bwd_weight;
+        cm.msg_bytes = bp.msg_bytes;
+        cm.local_copy = bp.local_copy;
+        // Edges keep their pipe identities and DP copy counts; only the
+        // payload changes (solo_time then reproduces bp.p2p bit for bit).
+        for e in &mut cm.edges {
+            e.bytes = bp.msg_bytes;
+        }
         cm
     }
 
@@ -661,6 +777,62 @@ mod tests {
                 let (a, b) = (fresh.ring_hops(st).unwrap(), hoisted.ring_hops(st).unwrap());
                 assert_eq!(a.len(), b.len());
                 for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.link, y.link);
+                    assert_eq!(x.work.to_bits(), y.work.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rebatched_matches_full_build_bitwise() {
+        // The incremental B-move: recompute only the BatchPricing slice,
+        // clone the rest — must be indistinguishable (exact f64 bits) from
+        // building the model from scratch at the new B.
+        let cluster = ClusterConfig::paper_testbed(16);
+        let topo = LinkTopology::new(&cluster, 2, 8);
+        let base_p = ParallelConfig::new(ScheduleKind::BitPipe, 2, 8, 1, 8);
+        let base = CostModel::with_topology(&BERT_64, &base_p, &cluster, &topo);
+        for b in [1usize, 2, 3, 4, 6, 8, 16] {
+            let p = ParallelConfig::new(ScheduleKind::BitPipe, 2, 8, b, 8);
+            let full = CostModel::with_topology(&BERT_64, &p, &cluster, &topo);
+            let incr = base.rebatched(&BERT_64, &p, &topo);
+            let bp = topo.batch_pricing(&BERT_64, &p, &cluster);
+            assert_eq!(incr.chunk_fwd.to_bits(), full.chunk_fwd.to_bits(), "B={b}");
+            assert_eq!(incr.chunk_bwd.to_bits(), full.chunk_bwd.to_bits());
+            assert_eq!(incr.chunk_bwd_input.to_bits(), full.chunk_bwd_input.to_bits());
+            assert_eq!(incr.chunk_bwd_weight.to_bits(), full.chunk_bwd_weight.to_bits());
+            assert_eq!(incr.msg_bytes, full.msg_bytes);
+            assert_eq!(incr.local_copy_time().to_bits(), full.local_copy_time().to_bits());
+            assert_eq!(bp.local_copy.to_bits(), full.local_copy_time().to_bits());
+            for x in 0..8 {
+                for y in 0..8 {
+                    assert_eq!(
+                        incr.p2p_time(x, y).to_bits(),
+                        full.p2p_time(x, y).to_bits(),
+                        "B={b} ({x},{y})"
+                    );
+                    // The pricing vector is the same arithmetic as the
+                    // edge's solo_time — the table the batched DAG
+                    // re-cost consumes directly.
+                    assert_eq!(
+                        bp.p2p[x * 8 + y].to_bits(),
+                        full.p2p_time(x, y).to_bits(),
+                        "B={b} ({x},{y})"
+                    );
+                    let (e1, e2) = (incr.p2p_edge(x, y), full.p2p_edge(x, y));
+                    assert_eq!(e1.link, e2.link);
+                    assert_eq!(e1.dp_copies, e2.dp_copies);
+                    assert_eq!(e1.bytes, e2.bytes);
+                }
+            }
+            // B-independent tables survive the move bit for bit.
+            for st in 0..16 {
+                assert_eq!(incr.allreduce_time(st).to_bits(), full.allreduce_time(st).to_bits());
+                assert_eq!(incr.optim_time(st).to_bits(), full.optim_time(st).to_bits());
+                let (a, b2) = (incr.ring_hops(st).unwrap(), full.ring_hops(st).unwrap());
+                assert_eq!(a.len(), b2.len());
+                for (x, y) in a.iter().zip(b2) {
                     assert_eq!(x.link, y.link);
                     assert_eq!(x.work.to_bits(), y.work.to_bits());
                 }

@@ -22,7 +22,12 @@
 //! cache: grid points (and whole sweeps) sharing a structure borrow the
 //! same [`CompiledDag`] and pay only a table rebuild plus one linear
 //! evaluation pass — no `BinaryHeap`, no hashing, no per-message
-//! allocation.
+//! allocation. [`CompiledDag::evaluate_batch`] goes one step further and
+//! prices k weight tables in a single traversal (SoA `[k]`-lane time
+//! vectors, bit-identical per lane to a solo run), and
+//! [`DagWeights::rebuild_for_batch_size`] makes the common sweep move —
+//! only B changes — a handful of table writes instead of a [`CostModel`]
+//! reconstruction.
 //!
 //! # Exact equivalence with the event engine
 //!
@@ -57,7 +62,7 @@
 //! [`CompiledDag::multi_iter_safe`] reports whether the precondition
 //! holds so callers can fall back otherwise.
 
-use super::cost::CostModel;
+use super::cost::{BatchPricing, CostModel};
 use super::engine::{DeviceTrace, MultiIterTrace, SimError, LAUNCH};
 use crate::schedule::{Instr, OpKind, Schedule};
 use std::fmt;
@@ -153,6 +158,40 @@ const W_P2P: u32 = 5;
 #[derive(Debug, Clone)]
 pub struct DagWeights {
     tab: Vec<f64>,
+}
+
+impl DagWeights {
+    /// Re-price this table for a different micro-batch size: overwrite the
+    /// B-dependent entries (compute classes, local copy, the D² P2P block)
+    /// from `bp` and keep the optimizer / all-reduce tail, which is
+    /// B-independent. Bit-identical to a full [`CompiledDag::weights`]
+    /// rebuild at the new B (pinned in `rust/tests/dag_equiv.rs`), without
+    /// reconstructing a [`CostModel`] — the common sweep move, priced
+    /// straight off the hoisted [`super::LinkTopology`].
+    ///
+    /// `self` must have been built by `weights` for the same structure,
+    /// model, W, and cluster, with only B differing, and `bp` by
+    /// [`super::LinkTopology::batch_pricing`] over that structure's depth.
+    pub fn rebuild_for_batch_size(&mut self, bp: &BatchPricing) {
+        let dd = bp.p2p.len();
+        assert!(
+            self.tab.len() >= W_P2P as usize + dd,
+            "pricing built for a different pipeline depth"
+        );
+        self.tab[W_FWD as usize] = bp.chunk_fwd;
+        self.tab[W_BWD as usize] = bp.chunk_bwd;
+        self.tab[W_COPY as usize] = bp.local_copy;
+        self.tab[W_BI as usize] = bp.chunk_bwd_input;
+        self.tab[W_WGT as usize] = bp.chunk_bwd_weight;
+        self.tab[W_P2P as usize..W_P2P as usize + dd].copy_from_slice(&bp.p2p);
+    }
+
+    /// The raw weight table (layout: 5 compute/copy classes, D² P2P block,
+    /// per-stage optimizer then all-reduce entries, extra optimizer tail).
+    /// Exposed for differential tests and the Python mirror.
+    pub fn table(&self) -> &[f64] {
+        &self.tab
+    }
 }
 
 /// Transient per-collective info gathered while walking the streams.
@@ -616,6 +655,201 @@ impl CompiledDag {
         Ok(MultiIterTrace { devices: trace, iter_finish, makespan })
     }
 
+    /// Batched re-cost: price `ws.len()` weight tables (k lanes) in **one**
+    /// pass over the shared topological order per iteration, with
+    /// structure-of-arrays `[k]`-lane time vectors — the same max/+
+    /// primitives as [`CompiledDag::evaluate`] applied per lane, one arena
+    /// traversal, lane-inner loops the compiler can vectorize. Each lane's
+    /// result is **bit-identical** (exact f64) to a solo `evaluate` call
+    /// with that table, including multi-iteration carried state: per lane,
+    /// the f64 operation sequence is literally the scalar one. Pinned
+    /// across the schedule-family grid in `rust/tests/dag_equiv.rs`.
+    ///
+    /// An empty batch returns no traces; a stuck structure fails the whole
+    /// batch with the same [`SimError`] every lane would report solo.
+    pub fn evaluate_batch(
+        &self,
+        ws: &[DagWeights],
+        iters: usize,
+    ) -> Result<Vec<MultiIterTrace>, SimError> {
+        let k = ws.len();
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        assert!(iters >= 1, "need at least one iteration");
+        assert!(
+            iters == 1 || self.multi_iter_safe,
+            "multi-iteration unrolling needs balanced per-iteration message tags; \
+             use the event engine for this schedule"
+        );
+        for w in ws {
+            assert_eq!(w.tab.len(), self.n_wclasses, "weights built for a different structure");
+        }
+        if !self.stuck.is_empty() {
+            return Err(SimError { stuck: self.stuck.clone() });
+        }
+        let d = self.d;
+        // Lane-major transpose of the weight tables: wtab[class * k + lane]
+        // keeps one node's k prices contiguous for the lane-inner loops.
+        let mut wtab = vec![0.0f64; self.n_wclasses * k];
+        for (lane, w) in ws.iter().enumerate() {
+            for (class, &c) in w.tab.iter().enumerate() {
+                wtab[class * k + lane] = c;
+            }
+        }
+        // SoA lane state, indexed [entity * k + lane].
+        let mut now = vec![0.0f64; d * k];
+        let mut comm_free = vec![0.0f64; d * k];
+        let mut compute_busy = vec![0.0f64; d * k];
+        let mut recv_blocked = vec![0.0f64; d * k];
+        let mut ar_blocked = vec![0.0f64; d * k];
+        // Send/copy counts are structural — identical in every lane — so
+        // they are tallied once and replicated into each lane's trace.
+        let mut sends = vec![0usize; d];
+        let mut copies = vec![0usize; d];
+        // +1: shared scratch slot for sends nothing ever receives.
+        let mut slot = vec![0.0f64; (self.n_msgs + 1) * k];
+        let mut launch_max = vec![0.0f64; self.n_colls * k];
+        let mut done = vec![0.0f64; self.n_colls * k];
+        let mut engine_buf = vec![0.0f64; k];
+        let mut iter_finish = vec![vec![0.0f64; iters]; k];
+        for it in 0..iters {
+            launch_max.fill(0.0);
+            for &nid in &self.topo {
+                let i = nid as usize;
+                match self.op[i] {
+                    NodeOp::Compute => {
+                        let base = self.dev[i] as usize * k;
+                        let wb = self.wclass[i] as usize * k;
+                        for lane in 0..k {
+                            let c = wtab[wb + lane];
+                            now[base + lane] += c;
+                            compute_busy[base + lane] += c;
+                        }
+                    }
+                    NodeOp::LocalCopy => {
+                        let dv = self.dev[i] as usize;
+                        let wb = self.wclass[i] as usize * k;
+                        for lane in 0..k {
+                            now[dv * k + lane] += wtab[wb + lane];
+                        }
+                        copies[dv] += 1;
+                    }
+                    NodeOp::Optim => {
+                        let base = self.dev[i] as usize * k;
+                        let wb = self.wclass[i] as usize * k;
+                        for lane in 0..k {
+                            now[base + lane] += wtab[wb + lane];
+                        }
+                    }
+                    NodeOp::Send { msg } => {
+                        let dv = self.dev[i] as usize;
+                        let base = dv * k;
+                        let wb = self.wclass[i] as usize * k;
+                        let sb = msg as usize * k;
+                        for lane in 0..k {
+                            now[base + lane] += LAUNCH;
+                            slot[sb + lane] = now[base + lane] + wtab[wb + lane];
+                        }
+                        sends[dv] += 1;
+                    }
+                    NodeOp::Recv { msg } => {
+                        let base = self.dev[i] as usize * k;
+                        let sb = msg as usize * k;
+                        for lane in 0..k {
+                            let arrival = slot[sb + lane];
+                            if arrival > now[base + lane] {
+                                recv_blocked[base + lane] += arrival - now[base + lane];
+                                now[base + lane] = arrival;
+                            }
+                        }
+                    }
+                    NodeOp::Launch => {
+                        let base = self.dev[i] as usize * k;
+                        for lane in 0..k {
+                            now[base + lane] += LAUNCH;
+                        }
+                    }
+                    NodeOp::ArStart { coll } => {
+                        let base = self.dev[i] as usize * k;
+                        let lb = coll as usize * k;
+                        for lane in 0..k {
+                            now[base + lane] += LAUNCH;
+                            if launch_max[lb + lane] < now[base + lane] {
+                                launch_max[lb + lane] = now[base + lane];
+                            }
+                        }
+                    }
+                    NodeOp::Barrier { coll } => {
+                        let c = coll as usize;
+                        let (lo, hi) =
+                            (self.members_off[c] as usize, self.members_off[c + 1] as usize);
+                        // Member-outer / lane-inner keeps each lane's max
+                        // accumulation in the scalar member order.
+                        engine_buf.fill(0.0);
+                        for &g in &self.members[lo..hi] {
+                            let gb = g as usize * k;
+                            for lane in 0..k {
+                                engine_buf[lane] = engine_buf[lane].max(comm_free[gb + lane]);
+                            }
+                        }
+                        let wb = self.wclass[i] as usize * k;
+                        for lane in 0..k {
+                            engine_buf[lane] =
+                                launch_max[c * k + lane].max(engine_buf[lane]) + wtab[wb + lane];
+                            done[c * k + lane] = engine_buf[lane];
+                        }
+                        for &g in &self.members[lo..hi] {
+                            let gb = g as usize * k;
+                            for lane in 0..k {
+                                comm_free[gb + lane] = engine_buf[lane];
+                            }
+                        }
+                    }
+                    NodeOp::ArWait { coll } => {
+                        let base = self.dev[i] as usize * k;
+                        let db = coll as usize * k;
+                        for lane in 0..k {
+                            let t = done[db + lane];
+                            if t > now[base + lane] {
+                                ar_blocked[base + lane] += t - now[base + lane];
+                                now[base + lane] = t;
+                            }
+                        }
+                    }
+                }
+            }
+            for (lane, ifin) in iter_finish.iter_mut().enumerate() {
+                let finish = &mut ifin[it];
+                for dv in 0..d {
+                    let t = now[dv * k + lane];
+                    if *finish < t {
+                        *finish = t;
+                    }
+                }
+            }
+        }
+        let out = iter_finish
+            .into_iter()
+            .enumerate()
+            .map(|(lane, ifin)| {
+                let devices = (0..d)
+                    .map(|dv| DeviceTrace {
+                        finish: now[dv * k + lane],
+                        compute_busy: compute_busy[dv * k + lane],
+                        recv_blocked: recv_blocked[dv * k + lane],
+                        allreduce_blocked: ar_blocked[dv * k + lane],
+                        sends: sends[dv],
+                        local_copies: copies[dv],
+                    })
+                    .collect();
+                let makespan = ifin.last().copied().unwrap_or(0.0);
+                MultiIterTrace { devices, iter_finish: ifin, makespan }
+            })
+            .collect();
+        Ok(out)
+    }
+
     /// Pipeline depth the structure was compiled for.
     pub fn n_devices(&self) -> usize {
         self.d
@@ -979,6 +1213,41 @@ mod tests {
         assert_eq!(t.iter_finish.len(), 3);
         for (a, b) in t.iter_finish.iter().zip(&want.iter_finish) {
             assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn batched_lanes_match_scalar_evaluate() {
+        // Spot check of the lane contract (the full family x k x iters
+        // battery lives in rust/tests/dag_equiv.rs): mixed-B lanes in one
+        // walk, each bit-identical to its solo run, counters included.
+        let kind = ScheduleKind::BitPipe;
+        let s = build(&ScheduleConfig::new(kind, 4, 8)).unwrap();
+        let dag = CompiledDag::compile(&s).unwrap();
+        let cluster = ClusterConfig::paper_testbed(4);
+        let ws: Vec<DagWeights> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&b| {
+                let p = ParallelConfig::new(kind, 1, 4, b, 8);
+                dag.weights(&CostModel::new(&BERT_64, &p, &cluster))
+            })
+            .collect();
+        assert!(dag.evaluate_batch(&[], 1).unwrap().is_empty());
+        let got = dag.evaluate_batch(&ws, 3).unwrap();
+        assert_eq!(got.len(), ws.len());
+        for (g, w) in got.iter().zip(&ws) {
+            let want = dag.evaluate(w, 3).unwrap();
+            assert_eq!(g.makespan.to_bits(), want.makespan.to_bits());
+            for (a, b) in g.iter_finish.iter().zip(&want.iter_finish) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (x, y) in g.devices.iter().zip(&want.devices) {
+                assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+                assert_eq!(x.compute_busy.to_bits(), y.compute_busy.to_bits());
+                assert_eq!(x.recv_blocked.to_bits(), y.recv_blocked.to_bits());
+                assert_eq!(x.allreduce_blocked.to_bits(), y.allreduce_blocked.to_bits());
+                assert_eq!((x.sends, x.local_copies), (y.sends, y.local_copies));
+            }
         }
     }
 

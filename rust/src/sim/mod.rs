@@ -67,7 +67,7 @@ mod engine;
 mod gridsearch;
 mod memory;
 
-pub use cost::{CostModel, LinkTopology, P2pEdge, RingHop};
+pub use cost::{BatchPricing, CostModel, LinkTopology, P2pEdge, RingHop};
 pub use dag::{CompiledDag, DagUnsupported, DagWeights, EdgeArena, ParkReason};
 pub use engine::{
     simulate_schedule, simulate_schedule_contended, simulate_schedule_iters,
@@ -80,9 +80,9 @@ pub use engine::{
 #[cfg(any(test, feature = "reference-sim"))]
 pub use engine::simulate_schedule_reference;
 pub use gridsearch::{
-    grid_search, grid_search_cached, grid_search_contended_cached, grid_search_contended_serial,
-    grid_search_opts, grid_search_opts_baseline, grid_search_serial, DagCache, GridPoint,
-    GridSpace, StreamCache,
+    grid_search, grid_search_batched, grid_search_cached, grid_search_contended_cached,
+    grid_search_contended_serial, grid_search_opts, grid_search_opts_baseline, grid_search_serial,
+    DagCache, GridPoint, GridSpace, StreamCache, RECOST_LANES,
 };
 pub use memory::{memory_footprint, memory_footprint_from_counts, MemoryFootprint};
 

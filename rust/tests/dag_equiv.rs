@@ -8,7 +8,8 @@
 use bitpipe::config::{ClusterConfig, MappingPolicy, ParallelConfig, BERT_64};
 use bitpipe::schedule::{build, ScheduleConfig, ScheduleKind, SyncPolicy};
 use bitpipe::sim::{
-    simulate_schedule, simulate_schedule_iters, CompiledDag, CostModel,
+    simulate_schedule, simulate_schedule_iters, CompiledDag, CostModel, DagWeights, LinkTopology,
+    MultiIterTrace,
 };
 use bitpipe::util::{forall, Gen};
 
@@ -87,6 +88,35 @@ fn check_equivalence(cfg: &ScheduleConfig, b: usize, iters: usize) -> Result<(),
     check_equivalence_with(cfg, &c, iters)
 }
 
+/// Bit-exact comparison of two multi-iteration traces: makespan, every
+/// iteration boundary, and every per-device field.
+fn cmp_traces(label: &str, got: &MultiIterTrace, want: &MultiIterTrace) -> Result<(), String> {
+    if got.makespan.to_bits() != want.makespan.to_bits() {
+        return Err(format!("{label}: makespan {} != {}", got.makespan, want.makespan));
+    }
+    for (k, (x, y)) in got.iter_finish.iter().zip(&want.iter_finish).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{label}: iteration {k} boundary {x} != {y}"));
+        }
+    }
+    for (dev, (a, b)) in got.devices.iter().zip(&want.devices).enumerate() {
+        for (what, x, y) in [
+            ("finish", a.finish, b.finish),
+            ("compute_busy", a.compute_busy, b.compute_busy),
+            ("recv_blocked", a.recv_blocked, b.recv_blocked),
+            ("allreduce_blocked", a.allreduce_blocked, b.allreduce_blocked),
+        ] {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{label}: dev {dev} {what}: {x} vs {y}"));
+            }
+        }
+        if (a.sends, a.local_copies) != (b.sends, b.local_copies) {
+            return Err(format!("{label}: dev {dev} op counters diverge"));
+        }
+    }
+    Ok(())
+}
+
 /// [`check_equivalence`] under an explicit cost model.
 fn check_equivalence_with(
     cfg: &ScheduleConfig,
@@ -104,33 +134,7 @@ fn check_equivalence_with(
         .map_err(|e| format!("{cfg:?}: dag evaluate: {e}"))?;
     let want = simulate_schedule_iters(&s, c, iters)
         .map_err(|e| format!("{cfg:?}: event engine: {e}"))?;
-    if got.makespan.to_bits() != want.makespan.to_bits() {
-        return Err(format!(
-            "{cfg:?} iters={iters}: dag makespan {} != event {}",
-            got.makespan, want.makespan
-        ));
-    }
-    for (k, (x, y)) in got.iter_finish.iter().zip(&want.iter_finish).enumerate() {
-        if x.to_bits() != y.to_bits() {
-            return Err(format!("{cfg:?}: iteration {k} boundary {x} != {y}"));
-        }
-    }
-    for (dev, (a, b)) in got.devices.iter().zip(&want.devices).enumerate() {
-        for (what, x, y) in [
-            ("finish", a.finish, b.finish),
-            ("compute_busy", a.compute_busy, b.compute_busy),
-            ("recv_blocked", a.recv_blocked, b.recv_blocked),
-            ("allreduce_blocked", a.allreduce_blocked, b.allreduce_blocked),
-        ] {
-            if x.to_bits() != y.to_bits() {
-                return Err(format!("{cfg:?}: dev {dev} {what}: {x} vs {y}"));
-            }
-        }
-        if (a.sends, a.local_copies) != (b.sends, b.local_copies) {
-            return Err(format!("{cfg:?}: dev {dev} op counters diverge"));
-        }
-    }
-    Ok(())
+    cmp_traces(&format!("{cfg:?} iters={iters}"), &got, &want)
 }
 
 #[test]
@@ -234,6 +238,110 @@ fn deadlocks_agree_with_event_engine() {
         v
     };
     assert_eq!(devs(&got), devs(&want));
+}
+
+/// Lane counts swept by the batched-evaluation battery: a degenerate
+/// single lane, an odd width, and the full `RECOST_LANES` stride.
+const KS: [usize; 3] = [1, 3, 8];
+
+/// Bit-exact agreement between every lane of `evaluate_batch` and k
+/// sequential scalar `evaluate` calls under the same per-lane tables.
+fn check_lanes(cfg: &ScheduleConfig, k: usize, iters: usize) -> Result<(), String> {
+    let s = build(cfg).map_err(|e| format!("{cfg:?}: build failed: {e}"))?;
+    let dag = CompiledDag::compile(&s)
+        .map_err(|e| format!("{cfg:?}: dag compile refused a generated schedule: {e}"))?;
+    let ws: Vec<DagWeights> =
+        (0..k).map(|lane| dag.weights(&costs_for(cfg, BS[lane % BS.len()]))).collect();
+    let batch = dag
+        .evaluate_batch(&ws, iters)
+        .map_err(|e| format!("{cfg:?} k={k}: evaluate_batch: {e}"))?;
+    if batch.len() != k {
+        return Err(format!("{cfg:?}: evaluate_batch returned {} lanes, want {k}", batch.len()));
+    }
+    for (lane, got) in batch.iter().enumerate() {
+        let want = dag
+            .evaluate(&ws[lane], iters)
+            .map_err(|e| format!("{cfg:?} lane {lane}: scalar evaluate: {e}"))?;
+        cmp_traces(&format!("{cfg:?} iters={iters} k={k} lane {lane}"), got, &want)?;
+    }
+    Ok(())
+}
+
+#[test]
+fn evaluate_batch_lanes_match_sequential_evaluate_bitwise() {
+    // The acceptance grid again, through the batched evaluator: every
+    // schedule family x D x N, lanes of k in {1, 3, 8} with the weight
+    // tables varying B per lane, single- and multi-iteration carried
+    // state. Every lane must reproduce the scalar f64 bits exactly.
+    for kind in ScheduleKind::ALL {
+        for &d in &DS {
+            for &n in &NS {
+                if n < d {
+                    continue;
+                }
+                let cfg = ScheduleConfig::new(kind, d, n);
+                for &k in &KS {
+                    for iters in [1usize, 3] {
+                        check_lanes(&cfg, k, iters).unwrap_or_else(|e| panic!("{e}"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn evaluate_batch_tail_padding_is_inert() {
+    // `grid_search_batched` pads short tail chunks by repeating the last
+    // real table. The padded lanes must reproduce that lane bit-for-bit
+    // and must not perturb the real lanes.
+    let cfg = ScheduleConfig::new(ScheduleKind::BitPipe, 8, 16);
+    let s = build(&cfg).unwrap();
+    let dag = CompiledDag::compile(&s).unwrap();
+    let real: Vec<DagWeights> = BS.iter().map(|&b| dag.weights(&costs_for(&cfg, b))).collect();
+    let mut padded = real.clone();
+    while padded.len() < 8 {
+        padded.push(real.last().unwrap().clone());
+    }
+    let got = dag.evaluate_batch(&padded, 2).unwrap();
+    let bare = dag.evaluate_batch(&real, 2).unwrap();
+    for lane in 0..real.len() {
+        cmp_traces(&format!("real lane {lane} with vs without padding"), &got[lane], &bare[lane])
+            .unwrap_or_else(|e| panic!("{e}"));
+    }
+    for lane in real.len()..padded.len() {
+        cmp_traces(&format!("pad lane {lane} vs source lane"), &got[lane], &got[real.len() - 1])
+            .unwrap_or_else(|e| panic!("{e}"));
+    }
+}
+
+#[test]
+fn rebuild_for_batch_size_matches_full_weights_bitwise() {
+    // Incremental re-pricing: starting from a B=1 table and chaining
+    // `rebuild_for_batch_size` through a random B walk must match a full
+    // `weights()` rebuild at every step, bit for bit — including the
+    // B-independent tail (optimizer, collectives) staying untouched.
+    forall(0xBA7C, 40, &gen_draw(), |draw| {
+        let cfg = cfg_of(draw);
+        let s = build(&cfg).map_err(|e| format!("{cfg:?}: build failed: {e}"))?;
+        let dag = CompiledDag::compile(&s)
+            .map_err(|e| format!("{cfg:?}: dag compile refused a generated schedule: {e}"))?;
+        let cluster = ClusterConfig::paper_testbed(cfg.d);
+        let topo = LinkTopology::new(&cluster, 1, cfg.d);
+        let p0 = ParallelConfig::new(cfg.kind, 1, cfg.d, 1, cfg.n);
+        let mut w = dag.weights(&CostModel::with_topology(&BERT_64, &p0, &cluster, &topo));
+        for b in [BS[draw.b_idx], 16, 2, 3] {
+            let p = ParallelConfig::new(cfg.kind, 1, cfg.d, b, cfg.n);
+            w.rebuild_for_batch_size(&topo.batch_pricing(&BERT_64, &p, &cluster));
+            let full = dag.weights(&CostModel::with_topology(&BERT_64, &p, &cluster, &topo));
+            for (i, (x, y)) in w.table().iter().zip(full.table()).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("{cfg:?} B={b}: weight class {i}: {x} vs {y}"));
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]
