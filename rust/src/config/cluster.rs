@@ -80,6 +80,21 @@ pub enum ResourceId {
 /// ([`ClusterConfig::dense_resources_of`]).
 pub const NO_RESOURCE: u32 = u32::MAX;
 
+/// Capacity of the sparse heterogeneity override tables on
+/// [`ClusterConfig`]. Fixed-size arrays keep the config `Copy` (it is
+/// stored by value throughout the cost pipeline); real degradation
+/// scenarios name a handful of stragglers or bad links, not a fleet.
+pub const MAX_OVERRIDES: usize = 8;
+
+/// Dense index of a link class into the per-kind multiplier table.
+fn kind_index(kind: LinkKind) -> usize {
+    match kind {
+        LinkKind::Local => 0,
+        LinkKind::NvLink => 1,
+        LinkKind::InfiniBand => 2,
+    }
+}
+
 /// How pipeline stages map onto physical devices (paper Fig 6).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MappingPolicy {
@@ -120,6 +135,25 @@ pub struct ClusterConfig {
     pub mapping: MappingPolicy,
     /// How concurrent IB flows share NIC hardware under contention.
     pub ib_model: IbModel,
+    /// Sparse per-device compute-time multipliers (`(dev, mult)`; a 1.2x
+    /// straggler takes 20% longer per chunk). Only the first
+    /// `n_stragglers` entries are live; later entries for the same device
+    /// shadow earlier ones. Populate via [`Self::with_straggler`].
+    pub stragglers: [(u32, f64); MAX_OVERRIDES],
+    /// Live prefix length of `stragglers`.
+    pub n_stragglers: u8,
+    /// Per-link-class bandwidth multipliers (indexed Local/NvLink/IB; a
+    /// 0.5 on IB halves every IB link). Populate via
+    /// [`Self::with_link_mult`].
+    pub link_mult: [f64; 3],
+    /// Sparse per-pipe bandwidth multipliers keyed by [`LinkId`] fields
+    /// (`(kind, src, dst, mult)`), composing multiplicatively with the
+    /// class-level `link_mult`. Only the first `n_link_overrides` entries
+    /// are live; later entries for the same pipe shadow earlier ones.
+    /// Populate via [`Self::with_link_override`].
+    pub link_overrides: [(LinkKind, u32, u32, f64); MAX_OVERRIDES],
+    /// Live prefix length of `link_overrides`.
+    pub n_link_overrides: u8,
 }
 
 impl Default for ClusterConfig {
@@ -136,6 +170,11 @@ impl Default for ClusterConfig {
             mem_capacity: 80 * (1 << 30),
             mapping: MappingPolicy::ReplicasTogether,
             ib_model: IbModel::NodeNic,
+            stragglers: [(0, 1.0); MAX_OVERRIDES],
+            n_stragglers: 0,
+            link_mult: [1.0; 3],
+            link_overrides: [(LinkKind::Local, 0, 0, 1.0); MAX_OVERRIDES],
+            n_link_overrides: 0,
         }
     }
 }
@@ -258,6 +297,99 @@ impl ClusterConfig {
             .collect()
     }
 
+    /// Register a compute-time multiplier for physical device `dev`:
+    /// every chunk on that device takes `mult`x as long (1.2 models a 20%
+    /// straggler). Errors when the sparse table is full, the device is out
+    /// of range, or the multiplier is not positive and finite.
+    pub fn with_straggler(mut self, dev: usize, mult: f64) -> Result<Self> {
+        ensure!(dev < self.n_devices, "straggler device {dev} out of range");
+        ensure!(mult.is_finite() && mult > 0.0, "straggler multiplier must be positive");
+        let n = self.n_stragglers as usize;
+        ensure!(n < MAX_OVERRIDES, "at most {MAX_OVERRIDES} straggler entries");
+        self.stragglers[n] = (dev as u32, mult);
+        self.n_stragglers += 1;
+        Ok(self)
+    }
+
+    /// Scale every link of class `kind` to `mult`x its base bandwidth
+    /// (0.5 on `InfiniBand` models a degraded fabric at half rate).
+    pub fn with_link_mult(mut self, kind: LinkKind, mult: f64) -> Result<Self> {
+        ensure!(mult.is_finite() && mult > 0.0, "link multiplier must be positive");
+        self.link_mult[kind_index(kind)] = mult;
+        Ok(self)
+    }
+
+    /// Scale the directed pipe carrying device `a` -> device `b` traffic
+    /// to `mult`x its (class-scaled) bandwidth — a single bad cable or
+    /// NIC. The pair is resolved through [`Self::link_id`], so for IB the
+    /// override covers the whole node pair, matching the pipe that
+    /// actually serializes the traffic.
+    pub fn with_link_override(mut self, a: usize, b: usize, mult: f64) -> Result<Self> {
+        ensure!(a < self.n_devices && b < self.n_devices, "link endpoints out of range");
+        ensure!(mult.is_finite() && mult > 0.0, "link multiplier must be positive");
+        let n = self.n_link_overrides as usize;
+        ensure!(n < MAX_OVERRIDES, "at most {MAX_OVERRIDES} link override entries");
+        let l = self.link_id(a, b);
+        self.link_overrides[n] = (l.kind, l.src as u32, l.dst as u32, mult);
+        self.n_link_overrides += 1;
+        Ok(self)
+    }
+
+    /// Compute-time multiplier of physical device `dev` (1.0 when no
+    /// straggler entry names it; the most recent entry wins).
+    pub fn compute_mult(&self, dev: usize) -> f64 {
+        let live = &self.stragglers[..self.n_stragglers as usize];
+        live.iter()
+            .rev()
+            .find(|&&(d, _)| d as usize == dev)
+            .map_or(1.0, |&(_, m)| m)
+    }
+
+    /// Combined bandwidth multiplier of one directed pipe: the class-level
+    /// factor times the most recent matching per-pipe override.
+    pub fn link_mult_of(&self, link: LinkId) -> f64 {
+        let class = self.link_mult[kind_index(link.kind)];
+        let live = &self.link_overrides[..self.n_link_overrides as usize];
+        let pair = live
+            .iter()
+            .rev()
+            .find(|&&(k, s, d, _)| {
+                k == link.kind && s as usize == link.src && d as usize == link.dst
+            })
+            .map_or(1.0, |&(_, _, _, m)| m);
+        class * pair
+    }
+
+    /// Effective bandwidth of one directed pipe with every heterogeneity
+    /// multiplier applied. With all multipliers at 1.0 this is IEEE-exactly
+    /// [`Self::bw`] of the link class (x1.0 is exact), which is what keeps
+    /// uniform configs bit-identical.
+    pub fn bw_over(&self, link: LinkId) -> f64 {
+        self.bw(link.kind) * self.link_mult_of(link)
+    }
+
+    /// Class-level scaled bandwidth (no per-pipe overrides) — what the
+    /// collective ring *scalar* prices against: all hops of a ring share
+    /// one closed-form time, so only the class-wide factor can apply.
+    pub fn bw_scaled(&self, kind: LinkKind) -> f64 {
+        self.bw(kind) * self.link_mult[kind_index(kind)]
+    }
+
+    /// True when no device carries a non-1.0 compute multiplier — the
+    /// cost model skips per-device pricing rows entirely in this case.
+    pub fn is_uniform_compute(&self) -> bool {
+        self.stragglers[..self.n_stragglers as usize].iter().all(|&(_, m)| m == 1.0)
+    }
+
+    /// True when any link-class or per-pipe bandwidth multiplier differs
+    /// from 1.0.
+    pub fn has_link_overrides(&self) -> bool {
+        self.link_mult.iter().any(|&m| m != 1.0)
+            || self.link_overrides[..self.n_link_overrides as usize]
+                .iter()
+                .any(|&(_, _, _, m)| m != 1.0)
+    }
+
     /// Bandwidth of a link class, bytes/s. Local copies are modeled at
     /// HBM copy bandwidth (fast but not free).
     pub fn bw(&self, kind: LinkKind) -> f64 {
@@ -284,10 +416,12 @@ impl ClusterConfig {
         b / (b + self.b_half)
     }
 
-    /// Time to move `bytes` over the link between devices `a` and `b`.
+    /// Time to move `bytes` over the link between devices `a` and `b`,
+    /// with any heterogeneity overrides applied to the pipe's bandwidth
+    /// (IEEE-exactly the base formula when every multiplier is 1.0).
     pub fn xfer_time(&self, a: usize, b: usize, bytes: u64) -> f64 {
-        let k = self.link(a, b);
-        self.lat(k) + bytes as f64 / self.bw(k)
+        let l = self.link_id(a, b);
+        self.lat(l.kind) + bytes as f64 / self.bw_over(l)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -295,6 +429,18 @@ impl ClusterConfig {
         ensure!(self.devices_per_node >= 1, "devices_per_node >= 1");
         ensure!(self.nvlink_bw > self.ib_bw, "NVLink must outpace IB");
         ensure!(self.flops > 0.0 && self.mem_capacity > 0, "positive compute/memory");
+        ensure!(self.n_stragglers as usize <= MAX_OVERRIDES, "straggler table overrun");
+        ensure!(self.n_link_overrides as usize <= MAX_OVERRIDES, "link table overrun");
+        for &(dev, m) in &self.stragglers[..self.n_stragglers as usize] {
+            ensure!((dev as usize) < self.n_devices, "straggler device {dev} out of range");
+            ensure!(m.is_finite() && m > 0.0, "straggler multiplier must be positive");
+        }
+        for &m in &self.link_mult {
+            ensure!(m.is_finite() && m > 0.0, "link multiplier must be positive");
+        }
+        for &(_, _, _, m) in &self.link_overrides[..self.n_link_overrides as usize] {
+            ensure!(m.is_finite() && m > 0.0, "link multiplier must be positive");
+        }
         Ok(())
     }
 
@@ -500,5 +646,67 @@ mod tests {
     fn default_validates() {
         ClusterConfig::default().validate().unwrap();
         ClusterConfig::single_node(8).validate().unwrap();
+    }
+
+    #[test]
+    fn straggler_and_link_overrides() {
+        let c = ClusterConfig::paper_testbed(16)
+            .with_straggler(3, 1.2)
+            .unwrap()
+            .with_link_mult(LinkKind::InfiniBand, 0.5)
+            .unwrap()
+            .with_link_override(0, 1, 0.25)
+            .unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.compute_mult(3), 1.2);
+        assert_eq!(c.compute_mult(0), 1.0);
+        assert!(!c.is_uniform_compute());
+        assert!(c.has_link_overrides());
+        // Class mult halves IB links; pair override quarters one NVLink pipe.
+        let ib = c.link_id(0, 8);
+        assert_eq!(c.bw_over(ib), c.bw(LinkKind::InfiniBand) * 0.5);
+        let nv = c.link_id(0, 1);
+        assert_eq!(c.bw_over(nv), c.bw(LinkKind::NvLink) * 0.25);
+        // The untouched reverse direction keeps its base rate.
+        assert_eq!(c.bw_over(c.link_id(1, 0)), c.bw(LinkKind::NvLink));
+        // Later entries shadow earlier ones.
+        let c = c.with_straggler(3, 2.0).unwrap();
+        assert_eq!(c.compute_mult(3), 2.0);
+    }
+
+    #[test]
+    fn uniform_overrides_are_exactly_neutral() {
+        // All-1.0 heterogeneity must be IEEE-exactly the base rates: the
+        // uniform-identity guarantee rides on x1.0 being exact.
+        let c = ClusterConfig::paper_testbed(16)
+            .with_straggler(0, 1.0)
+            .unwrap()
+            .with_link_mult(LinkKind::NvLink, 1.0)
+            .unwrap()
+            .with_link_override(0, 1, 1.0)
+            .unwrap();
+        assert!(c.is_uniform_compute());
+        assert!(!c.has_link_overrides());
+        let base = ClusterConfig::paper_testbed(16);
+        for (a, b) in [(0usize, 1usize), (0, 8), (3, 3)] {
+            let l = c.link_id(a, b);
+            assert_eq!(c.bw_over(l).to_bits(), base.bw(l.kind).to_bits());
+        }
+        assert_eq!(c.compute_mult(0).to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn override_builders_reject_bad_input() {
+        let c = ClusterConfig::paper_testbed(8);
+        assert!(c.with_straggler(8, 1.5).is_err(), "device out of range");
+        assert!(c.with_straggler(0, 0.0).is_err(), "zero multiplier");
+        assert!(c.with_straggler(0, f64::NAN).is_err(), "NaN multiplier");
+        assert!(c.with_link_mult(LinkKind::InfiniBand, -1.0).is_err());
+        assert!(c.with_link_override(0, 9, 0.5).is_err(), "endpoint out of range");
+        let mut full = c;
+        for _ in 0..MAX_OVERRIDES {
+            full = full.with_straggler(0, 1.1).unwrap();
+        }
+        assert!(full.with_straggler(0, 1.1).is_err(), "table full");
     }
 }

@@ -43,8 +43,8 @@ pub const ALL_IDS: [&str; 15] = [
     "fig10", "table5", "fig11", "table6",
 ];
 
-/// Extended set (appendix artifacts).
-pub const EXTRA_IDS: [&str; 4] = ["fig12", "fig13", "table7", "tableb"];
+/// Extended set (appendix artifacts + repo extensions).
+pub const EXTRA_IDS: [&str; 5] = ["fig12", "fig13", "table7", "tableb", "degradation"];
 
 /// Dispatch one artifact by id ("table2", "fig9", ... or "all").
 pub fn run(id: &str) -> Result<Vec<EvalOutput>> {
@@ -69,6 +69,7 @@ pub fn run(id: &str) -> Result<Vec<EvalOutput>> {
         "table6" => one(table6()?),
         "table7" => one(table7()?),
         "tableb" => one(tableb()?),
+        "degradation" => one(degradation()?),
         "all" => {
             let mut out = Vec::new();
             for id in ALL_IDS.iter().chain(EXTRA_IDS.iter()) {

@@ -243,6 +243,58 @@ pub fn table7() -> Result<EvalOutput> {
     Ok(EvalOutput { id: "table7", title: "Performance tuning: pipeline size D", body })
 }
 
+/// Degradation sweep (extension, not in the paper): how much of each
+/// schedule family's throughput survives a straggler. Device 0's compute
+/// is slowed by a multiplier ([`ClusterConfig::with_straggler`]) and each
+/// cell reports throughput retained relative to the healthy cluster —
+/// the question PAPERS.md's heterogeneity planners ask of Tables 4/7.
+pub fn degradation() -> Result<EvalOutput> {
+    const MULTS: [f64; 5] = [1.0, 1.1, 1.2, 1.5, 2.0];
+    let mut body = String::new();
+    for d in [4usize, 8] {
+        let n = 2 * d;
+        let mut t = Table::new(vec![
+            "approach", "healthy thr", "x1.1", "x1.2", "x1.5", "x2.0",
+        ]);
+        for kind in [
+            ScheduleKind::Dapple,
+            ScheduleKind::Interleaved,
+            ScheduleKind::MixPipe,
+            ScheduleKind::BitPipe,
+        ] {
+            let parallel = ParallelConfig::new(kind, 1, d, 4, n);
+            let mut cells = vec![kind.name().to_string()];
+            let mut healthy = f64::NAN;
+            for (i, &m) in MULTS.iter().enumerate() {
+                let cluster = ClusterConfig::paper_testbed(d).with_straggler(0, m)?;
+                let r = sim::simulate(&SimConfig::new(BERT_64, parallel, cluster))?;
+                if i == 0 {
+                    healthy = r.throughput;
+                    cells.push(format!("{healthy:.2}"));
+                } else {
+                    cells.push(format!("{:.1}%", 100.0 * r.throughput / healthy));
+                }
+            }
+            t.row(cells);
+        }
+        let _ = writeln!(
+            body,
+            "BERT-64, D={d}, N={n}, B=4, W=1 (straggler on device 0):\n{}",
+            t.render()
+        );
+    }
+    body.push_str(
+        "Throughput retained vs a 1.0x baseline as device 0 degrades. Pipelines step in\n\
+         lock-step, so one straggler gates every family roughly by its compute share;\n\
+         schedules with more bubble absorb slightly more of the slowdown.\n",
+    );
+    Ok(EvalOutput {
+        id: "degradation",
+        title: "Degradation sweep: throughput retained under a straggler",
+        body,
+    })
+}
+
 /// Table B (appendix extension, not in the paper): the zero-bubble split-
 /// backward family against every BitPipe variant and the 1F1B baseline —
 /// simulated throughput plus measured bubble ratio and peak stash, so the

@@ -8,6 +8,8 @@
 //!                    [--iters N [--warmup K]] [--contention]
 //!                    [--ib-model nic|pair] [--engine auto|event|dag]
 //!                    [--network inc|global]
+//!                    [--straggler DEV:MULT[,DEV:MULT...]]
+//!                    [--link-override local|nvlink|ib:MULT or A-B:MULT[,...]]
 //! bitpipe lint       [--kind bitpipe|all] [--d 4] [--n 8] [--v 2]
 //!                    [--sync eager|lazy] [--json]
 //! bitpipe eval-paper [--only table2,fig9,...] (default: all)
@@ -15,14 +17,16 @@
 //!                    [--dataset synthetic|corpus] [--lr 1e-3] [--seed 42]
 //!                    [--log-every 10] [--sync eager|lazy]
 //!                    [--save CKPT_DIR] [--resume CKPT_DIR]
-//! bitpipe inspect    --artifacts DIR
+//! bitpipe inspect    --artifacts DIR [--artifact NAME]
 //! ```
 //!
 //! All configuration is plain `--key value` flags (no external CLI crate);
 //! `bitpipe help` prints the command list.
 
 use anyhow::{bail, Context, Result};
-use bitpipe::config::{ClusterConfig, IbModel, MappingPolicy, ModelConfig, ParallelConfig};
+use bitpipe::config::{
+    ClusterConfig, IbModel, LinkKind, MappingPolicy, ModelConfig, ParallelConfig,
+};
 use bitpipe::schedule::{self, timeline, Costs, ScheduleConfig, ScheduleKind, SyncPolicy};
 use bitpipe::sim::{self, Engine, NetworkImpl, SimConfig};
 use bitpipe::train::{self, DatasetKind, TrainConfig};
@@ -226,6 +230,46 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
             other => bail!("--ib-model must be nic|pair, got {other:?}"),
         };
     }
+    // Heterogeneity: slowed devices and degraded links (comma-separated).
+    if let Some(spec) = get(flags, "straggler") {
+        for part in spec.split(',') {
+            let (dev, mult) = part
+                .split_once(':')
+                .with_context(|| format!("--straggler {part:?}: expected DEV:MULT"))?;
+            let dev: usize =
+                dev.parse().with_context(|| format!("--straggler {part:?}: bad device"))?;
+            let mult: f64 =
+                mult.parse().with_context(|| format!("--straggler {part:?}: bad multiplier"))?;
+            cluster = cluster.with_straggler(dev, mult)?;
+        }
+    }
+    if let Some(spec) = get(flags, "link-override") {
+        for part in spec.split(',') {
+            let (target, mult) = part
+                .split_once(':')
+                .with_context(|| format!("--link-override {part:?}: expected TARGET:MULT"))?;
+            let mult: f64 = mult
+                .parse()
+                .with_context(|| format!("--link-override {part:?}: bad multiplier"))?;
+            cluster = match target {
+                "local" => cluster.with_link_mult(LinkKind::Local, mult)?,
+                "nvlink" => cluster.with_link_mult(LinkKind::NvLink, mult)?,
+                "ib" => cluster.with_link_mult(LinkKind::InfiniBand, mult)?,
+                pair => {
+                    let (a, b) = pair.split_once('-').with_context(|| {
+                        format!("--link-override {part:?}: expected local|nvlink|ib or A-B")
+                    })?;
+                    let a: usize = a
+                        .parse()
+                        .with_context(|| format!("--link-override {part:?}: bad device"))?;
+                    let b: usize = b
+                        .parse()
+                        .with_context(|| format!("--link-override {part:?}: bad device"))?;
+                    cluster.with_link_override(a, b, mult)?
+                }
+            };
+        }
+    }
     let contention = flags.contains_key("contention");
     let engine = match get(flags, "engine").unwrap_or("auto") {
         "auto" => Engine::Auto,
@@ -365,6 +409,18 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
     let dir = get(flags, "artifacts").unwrap_or("artifacts");
     let manifest = bitpipe::runtime::Manifest::load(format!("{dir}/manifest.txt"))?;
+    // Single-artifact selector: print just that entry, or a proper error
+    // naming the available artifacts instead of a panic.
+    if let Some(name) = get(flags, "artifact") {
+        let meta = manifest.artifact(name).with_context(|| {
+            format!(
+                "no artifact {name:?} in {dir}/manifest.txt; available: {}",
+                manifest.artifact_names().join(" ")
+            )
+        })?;
+        println!("artifact {name} -> {}", meta.file);
+        return Ok(());
+    }
     println!("artifact directory: {dir}");
     println!(
         "model={} hidden={} seq={} batch={} vocab={} heads={}",
@@ -379,7 +435,9 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
         println!("params.{role} = {} f32", manifest.param_len(role).unwrap_or(0));
     }
     for name in manifest.artifact_names() {
-        let meta = manifest.artifact(name).unwrap();
+        let meta = manifest
+            .artifact(name)
+            .with_context(|| format!("manifest lists {name:?} but carries no entry for it"))?;
         println!("artifact {name} -> {}", meta.file);
     }
     for stage in 0..manifest.n_chunks {

@@ -22,6 +22,7 @@
 
 use crate::config::{ClusterConfig, LinkId, LinkKind, MappingPolicy, ModelConfig, ParallelConfig};
 use crate::schedule::{placement_for, DeviceId, Placement, StageId};
+use anyhow::{ensure, Result};
 
 /// One P2P edge of the simulated pipeline group: the payload and the
 /// physical pipe it travels on, rather than a precomputed scalar time.
@@ -79,6 +80,11 @@ pub struct RingHop {
     /// Solo work of the hop's flow, seconds: the scalar collective
     /// duration (step-synchronized hops are busy for all of it).
     pub work: f64,
+    /// Fixed wire-latency budget inside `work`, seconds: the `2(g-1)`
+    /// per-step latencies of this hop's link class, clamped to `work`.
+    /// Under contention the engine pays this part at wall rate (latency
+    /// is not shared bandwidth) and fair-shares only the remainder.
+    pub lat: f64,
     /// The directed pipe the hop occupies.
     pub link: LinkId,
     /// Dense flat-arena resource indices of the pipe (see
@@ -196,10 +202,14 @@ impl LinkTopology {
         let chunk_fwd = fwd_flops as f64 / (cluster.flops * eff);
         let chunk_bwd = 2.0 * chunk_fwd;
         let msg_bytes = model.message_bytes(parallel.b);
+        // Pipes are priced against their *overridden* bandwidth
+        // ([`ClusterConfig::bw_over`]) so the incremental DAG re-cost path
+        // sees the same degraded rates as the full edge tables; with all
+        // multipliers at 1.0 this is IEEE-exactly the base rate.
         let p2p = self
             .entries
             .iter()
-            .map(|&(kind, _, _)| cluster.lat(kind) + msg_bytes as f64 / cluster.bw(kind))
+            .map(|&(kind, link, _)| cluster.lat(kind) + msg_bytes as f64 / cluster.bw_over(link))
             .collect();
         BatchPricing {
             chunk_fwd,
@@ -208,7 +218,7 @@ impl LinkTopology {
             chunk_bwd_weight: chunk_bwd - 0.5 * chunk_bwd,
             msg_bytes,
             local_copy: cluster.lat(LinkKind::Local)
-                + msg_bytes as f64 / cluster.bw(LinkKind::Local),
+                + msg_bytes as f64 / cluster.bw_scaled(LinkKind::Local),
             p2p,
         }
     }
@@ -268,6 +278,19 @@ pub struct CostModel {
     optim: Vec<f64>,
     /// Body-chunk optimizer time, for out-of-range stages.
     optim_body: f64,
+    /// Per-stage compute ratios from a layer profile
+    /// ([`CostModel::with_layer_profile`]); empty means uniform splits.
+    stage_scale: Vec<f64>,
+    /// Per-pipeline-device compute multipliers, `[0, d)`: the *max* over
+    /// the W data-parallel replicas of each slot's straggler factor —
+    /// synchronous DP steps in lock-step, so the slowest replica gates.
+    /// Empty when the cluster is compute-uniform.
+    dev_mult: Vec<f64>,
+    /// Fast-path flag: true when no device or stage carries a non-1.0
+    /// compute factor. The pricing accessors then return the raw chunk
+    /// fields with **no multiplication at all**, which is what makes the
+    /// uniform case bit-identical to the pre-heterogeneity code.
+    uniform_compute: bool,
 }
 
 impl CostModel {
@@ -334,6 +357,9 @@ impl CostModel {
             n_stages: parallel.v * parallel.d,
             optim: Vec::new(),
             optim_body: 0.0,
+            stage_scale: Vec::new(),
+            dev_mult: Vec::new(),
+            uniform_compute: true,
         };
         // Precompute the per-instruction tables once; the event-queue
         // engine and the grid-search sweep hit these on every message.
@@ -345,7 +371,9 @@ impl CostModel {
             .map(|&(kind, link, dp_copies)| P2pEdge {
                 bytes: cm.msg_bytes,
                 lat: cm.cluster.lat(kind),
-                bw: cm.cluster.bw(kind),
+                // Effective (override-scaled) rate of this pipe; exactly
+                // the base class rate when every multiplier is 1.0.
+                bw: cm.cluster.bw_over(link),
                 link,
                 res: cm.cluster.dense_resources_of(link),
                 dp_copies,
@@ -391,7 +419,73 @@ impl CostModel {
             .map(|stage| optim_of(cm.grad_bytes_of(stage, embed_bytes)))
             .collect();
         cm.optim_body = optim_of(cm.grad_bytes);
+        // Per-device compute rows: only materialized when some device is a
+        // straggler, so the uniform fast path never even allocates. Each
+        // pipeline slot takes the slowest of its W replicas' factors —
+        // synchronous data parallelism steps in lock-step.
+        if !cluster.is_uniform_compute() {
+            let w_groups = parallel.w.max(1);
+            cm.dev_mult = (0..parallel.d)
+                .map(|dev| {
+                    (0..w_groups)
+                        .map(|g| {
+                            cluster.compute_mult(cluster.physical_device(
+                                cluster.mapping,
+                                g,
+                                dev,
+                                w_groups,
+                                parallel.d,
+                            ))
+                        })
+                        .fold(0.0f64, f64::max)
+                })
+                .collect();
+            cm.uniform_compute = false;
+        }
         cm
+    }
+
+    /// Re-split the per-stage costs along a measured layer profile:
+    /// `profile[stage]` is the relative compute weight of that stage's
+    /// layers (any positive scale; weights are normalized so their mean is
+    /// 1). Scales each stage's compute chunks (via the pricing accessors),
+    /// its all-reduce scalar + ring-hop work (heavier stages hold more
+    /// parameters), and its optimizer step. An all-1.0 profile is exactly
+    /// neutral bit-for-bit: the f64 sum of n ones is exact, so every ratio
+    /// is exactly 1.0 and `uniform_compute` stays set. Note that *equal
+    /// but non-1.0* weights may normalize to ratios a few ulps off 1.0 —
+    /// the uniform-identity guarantee is about 1.0 entries, not about
+    /// proportionality classes.
+    pub fn with_layer_profile(mut self, profile: &[f64]) -> Result<Self> {
+        ensure!(
+            profile.len() == self.n_stages,
+            "layer profile names {} stages, schedule has {}",
+            profile.len(),
+            self.n_stages
+        );
+        ensure!(
+            profile.iter().all(|&p| p.is_finite() && p > 0.0),
+            "layer profile weights must be positive and finite"
+        );
+        let sum: f64 = profile.iter().sum();
+        let n = self.n_stages as f64;
+        let ratios: Vec<f64> = profile.iter().map(|&p| p * n / sum).collect();
+        for (stage, &r) in ratios.iter().enumerate() {
+            self.allreduce[stage] *= r;
+            self.optim[stage] *= r;
+            // Ring hop work is pinned bit-for-bit to the stage scalar;
+            // scaling both sides by the same ratio preserves the pin. The
+            // latency budget cannot exceed the (possibly shrunken) work.
+            for h in &mut self.ring[stage] {
+                h.work *= r;
+                h.lat = h.lat.min(h.work);
+            }
+        }
+        if ratios.iter().any(|&r| r != 1.0) {
+            self.uniform_compute = false;
+        }
+        self.stage_scale = ratios;
+        Ok(self)
     }
 
     /// This model re-priced for a different micro-batch size B: recompute
@@ -542,6 +636,11 @@ impl CostModel {
             .map(|&link| RingHop {
                 bytes: 2.0 * (g - 1.0) * (bytes as f64 / g),
                 work: scalar,
+                // The hop pays its own link class's per-step latency once
+                // per ring step; clamped so the latency budget can never
+                // exceed the solo work (the scalar's bottleneck class may
+                // be slower than this hop's).
+                lat: (2.0 * (g - 1.0) * self.cluster.lat(link.kind)).min(scalar),
                 link,
                 res: self.cluster.dense_resources_of(link),
             })
@@ -549,12 +648,17 @@ impl CostModel {
     }
 
     /// Ring all-reduce time over `bytes` on the mapped bottleneck link.
+    /// Class-level bandwidth multipliers apply (a degraded IB fabric slows
+    /// IB-bottlenecked rings); per-pipe overrides do not — the scalar is
+    /// one closed form shared by every hop, so only class-wide factors can
+    /// price into it. Per-pipe degradation still bites under contention,
+    /// where each hop is a real flow on its own pipe.
     fn ring_time(&self, bytes: u64) -> f64 {
         let g = self.allreduce_group as f64;
         if self.allreduce_group <= 1 {
             return 0.0;
         }
-        let bw = self.cluster.bw(self.allreduce_link);
+        let bw = self.cluster.bw_scaled(self.allreduce_link);
         let lat = self.cluster.lat(self.allreduce_link);
         // Ring: 2(g-1) steps, each moving bytes/g.
         2.0 * (g - 1.0) * (bytes as f64 / g / bw + lat)
@@ -569,6 +673,61 @@ impl CostModel {
         match self.optim.get(stage) {
             Some(&t) => t,
             None => self.optim_body,
+        }
+    }
+
+    /// True when no device or stage carries a non-1.0 compute factor —
+    /// both backends then price compute from the raw chunk fields with no
+    /// per-node scaling (the uniform bit-identity fast path).
+    pub fn uniform_compute(&self) -> bool {
+        self.uniform_compute
+    }
+
+    /// Combined compute-time factor of (`dev`, `stage`): the device's
+    /// straggler multiplier times the stage's layer-profile ratio (each
+    /// 1.0 when absent; out-of-range indices from hand-built streams price
+    /// as 1.0). Only consulted on the heterogeneous path.
+    pub fn compute_scale(&self, dev: DeviceId, stage: StageId) -> f64 {
+        let d = self.dev_mult.get(dev).copied().unwrap_or(1.0);
+        let s = self.stage_scale.get(stage).copied().unwrap_or(1.0);
+        d * s
+    }
+
+    /// Forward time of one chunk on (`dev`, `stage`). Uniform clusters
+    /// return the raw field — no multiplication — so the pre-heterogeneity
+    /// arithmetic is preserved bit for bit.
+    pub fn fwd_time(&self, dev: DeviceId, stage: StageId) -> f64 {
+        if self.uniform_compute {
+            self.chunk_fwd
+        } else {
+            self.chunk_fwd * self.compute_scale(dev, stage)
+        }
+    }
+
+    /// Fused backward time of one chunk on (`dev`, `stage`).
+    pub fn bwd_time(&self, dev: DeviceId, stage: StageId) -> f64 {
+        if self.uniform_compute {
+            self.chunk_bwd
+        } else {
+            self.chunk_bwd * self.compute_scale(dev, stage)
+        }
+    }
+
+    /// Activation-gradient (Bi) time of a split backward on (`dev`, `stage`).
+    pub fn bwd_input_time(&self, dev: DeviceId, stage: StageId) -> f64 {
+        if self.uniform_compute {
+            self.chunk_bwd_input
+        } else {
+            self.chunk_bwd_input * self.compute_scale(dev, stage)
+        }
+    }
+
+    /// Weight-gradient (W) time of a split backward on (`dev`, `stage`).
+    pub fn bwd_weight_time(&self, dev: DeviceId, stage: StageId) -> f64 {
+        if self.uniform_compute {
+            self.chunk_bwd_weight
+        } else {
+            self.chunk_bwd_weight * self.compute_scale(dev, stage)
         }
     }
 
@@ -852,6 +1011,115 @@ mod tests {
         }
         assert!(c.local_copy_time() > 0.0);
         assert!(c.optim_time(0) > 0.0);
+    }
+
+    #[test]
+    fn straggler_scales_compute_not_wire() {
+        let p = ParallelConfig::new(ScheduleKind::BitPipe, 2, 8, 4, 8);
+        let cluster = ClusterConfig::paper_testbed(16);
+        let base = CostModel::new(&BERT_64, &p, &cluster);
+        assert!(base.uniform_compute());
+        // Physical device 0 is (w=0, d=0) under ReplicasTogether; its twin
+        // replica slot is physical 1 = (w=1, d=0). Slowing either gates
+        // pipeline slot 0 (sync DP takes the max over replicas).
+        let slow = CostModel::new(&BERT_64, &p, &cluster.with_straggler(1, 1.5).unwrap());
+        assert!(!slow.uniform_compute());
+        assert_eq!(slow.compute_scale(0, 0), 1.5);
+        assert_eq!(slow.compute_scale(1, 0), 1.0);
+        assert_eq!(slow.fwd_time(0, 0).to_bits(), (base.chunk_fwd * 1.5).to_bits());
+        assert_eq!(slow.fwd_time(1, 0).to_bits(), base.chunk_fwd.to_bits());
+        assert_eq!(slow.bwd_time(0, 0).to_bits(), (base.chunk_bwd * 1.5).to_bits());
+        // Wire pricing untouched by compute stragglers.
+        for a in 0..8 {
+            for b in 0..8 {
+                assert_eq!(slow.p2p_time(a, b).to_bits(), base.p2p_time(a, b).to_bits());
+            }
+        }
+        for st in 0..16 {
+            assert_eq!(slow.allreduce_time(st).to_bits(), base.allreduce_time(st).to_bits());
+        }
+    }
+
+    #[test]
+    fn link_overrides_reprice_edges_and_batch_pricing_together() {
+        // A degraded link must show up identically in the edge tables and
+        // the incremental BatchPricing path (the DAG re-cost consumes the
+        // latter; divergence would split the backends).
+        let p = ParallelConfig::new(ScheduleKind::BitPipe, 2, 8, 4, 8);
+        let cluster = ClusterConfig::paper_testbed(16)
+            .with_link_mult(LinkKind::InfiniBand, 0.5)
+            .unwrap();
+        let base = CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(16));
+        let deg = CostModel::new(&BERT_64, &p, &cluster);
+        let topo = LinkTopology::new(&cluster, 2, 8);
+        let bp = topo.batch_pricing(&BERT_64, &p, &cluster);
+        let mut slowed = 0;
+        for a in 0..8 {
+            for b in 0..8 {
+                assert_eq!(
+                    deg.p2p_time(a, b).to_bits(),
+                    bp.p2p[a * 8 + b].to_bits(),
+                    "({a},{b}): edges vs batch pricing"
+                );
+                if deg.p2p_edge(a, b).link.kind == LinkKind::InfiniBand {
+                    assert!(deg.p2p_time(a, b) > base.p2p_time(a, b), "({a},{b})");
+                    slowed += 1;
+                } else {
+                    assert_eq!(deg.p2p_time(a, b).to_bits(), base.p2p_time(a, b).to_bits());
+                }
+            }
+        }
+        assert!(slowed > 0);
+        // Compute untouched by link degradation.
+        assert!(deg.uniform_compute());
+        assert_eq!(deg.chunk_fwd.to_bits(), base.chunk_fwd.to_bits());
+    }
+
+    #[test]
+    fn layer_profile_rescales_stages_and_keeps_ring_pin() {
+        let c = model_costs(ScheduleKind::BitPipe, 2, 8); // 16 stages
+        let mut profile = vec![1.0; 16];
+        profile[3] = 2.0;
+        let heavy = c.clone().with_layer_profile(&profile).unwrap();
+        assert!(!heavy.uniform_compute());
+        let r3 = heavy.compute_scale(0, 3);
+        assert!(r3 > 1.0 && heavy.compute_scale(0, 4) < 1.0, "mean-normalized ratios");
+        assert_eq!(heavy.fwd_time(0, 3).to_bits(), (c.chunk_fwd * r3).to_bits());
+        // All-reduce/optimizer follow the profile, and the hop-work ==
+        // scalar bit-pin survives the scaling.
+        assert!(heavy.allreduce_time(3) > c.allreduce_time(3));
+        assert!(heavy.optim_time(3) > c.optim_time(3));
+        for st in 0..16 {
+            for h in heavy.ring_hops(st).unwrap() {
+                assert_eq!(h.work.to_bits(), heavy.allreduce_time(st).to_bits());
+                assert!(h.lat <= h.work);
+            }
+        }
+        // All-1.0 profiles are exactly neutral.
+        let neutral = c.clone().with_layer_profile(&[1.0; 16]).unwrap();
+        assert!(neutral.uniform_compute());
+        for st in 0..16 {
+            assert_eq!(neutral.allreduce_time(st).to_bits(), c.allreduce_time(st).to_bits());
+            assert_eq!(neutral.optim_time(st).to_bits(), c.optim_time(st).to_bits());
+        }
+        assert_eq!(neutral.fwd_time(0, 0).to_bits(), c.chunk_fwd.to_bits());
+        // Wrong length / non-positive weights are rejected.
+        assert!(c.clone().with_layer_profile(&[1.0; 3]).is_err());
+        profile[3] = -1.0;
+        assert!(c.clone().with_layer_profile(&profile).is_err());
+    }
+
+    #[test]
+    fn ring_hops_carry_clamped_latency_budgets() {
+        let c = model_costs(ScheduleKind::BitPipe, 2, 8);
+        for st in 0..16 {
+            for h in c.ring_hops(st).unwrap() {
+                let g = c.allreduce_group as f64;
+                let budget = 2.0 * (g - 1.0) * c.cluster.lat(h.link.kind);
+                assert_eq!(h.lat.to_bits(), budget.min(h.work).to_bits());
+                assert!(h.lat > 0.0 && h.lat <= h.work);
+            }
+        }
     }
 
     #[test]

@@ -120,6 +120,9 @@ pub struct CompiledDag {
     op: Vec<NodeOp>,
     /// Per-node index into the weight table.
     wclass: Vec<u32>,
+    /// Per-node model stage (compute nodes only; 0 elsewhere). Consulted
+    /// when a weight table carries per-(device, stage) compute scales.
+    stage: Vec<u32>,
     /// Complete topological order (empty when `stuck` is non-empty).
     topo: Vec<u32>,
     /// Collective member devices, flattened (`members_off` delimits).
@@ -158,6 +161,12 @@ const W_P2P: u32 = 5;
 #[derive(Debug, Clone)]
 pub struct DagWeights {
     tab: Vec<f64>,
+    /// Per-node compute-time multipliers for heterogeneous clusters /
+    /// non-uniform layer profiles: entry `i` scales node `i`'s class cost
+    /// (1.0 for non-compute nodes). `None` for uniform cost models — the
+    /// evaluation passes then take the historical arithmetic verbatim, so
+    /// the uniform case stays bit-identical (`rust/tests/hetero_identity.rs`).
+    node_scale: Option<Vec<f64>>,
 }
 
 impl DagWeights {
@@ -172,6 +181,8 @@ impl DagWeights {
     /// `self` must have been built by `weights` for the same structure,
     /// model, W, and cluster, with only B differing, and `bp` by
     /// [`super::LinkTopology::batch_pricing`] over that structure's depth.
+    /// Per-node compute scales (`node_scale`) are B-independent — the
+    /// device/stage multipliers carry over unchanged.
     pub fn rebuild_for_batch_size(&mut self, bp: &BatchPricing) {
         let dd = bp.p2p.len();
         assert!(
@@ -191,6 +202,12 @@ impl DagWeights {
     /// Exposed for differential tests and the Python mirror.
     pub fn table(&self) -> &[f64] {
         &self.tab
+    }
+
+    /// Per-node compute scales, present only for heterogeneous cost
+    /// models. Exposed for differential tests and the Python mirror.
+    pub fn node_scale(&self) -> Option<&[f64]> {
+        self.node_scale.as_deref()
     }
 }
 
@@ -239,6 +256,7 @@ impl CompiledDag {
         let mut dev = vec![u32::MAX; n_real];
         let mut op = Vec::with_capacity(n_real);
         let mut wclass = vec![0u32; n_real];
+        let mut stage_of = vec![0u32; n_real];
         let w_optim_base = W_P2P + (d * d) as u32;
         let w_ar_base = w_optim_base + n_stages as u32;
         let w_extra_base = w_ar_base + n_stages as u32;
@@ -263,20 +281,24 @@ impl CompiledDag {
                 let id = base[dv] + ix as u32;
                 dev[id as usize] = dv as u32;
                 let node = match *ins {
-                    Instr::Forward { .. } => {
+                    Instr::Forward { stage, .. } => {
                         wclass[id as usize] = W_FWD;
+                        stage_of[id as usize] = stage as u32;
                         NodeOp::Compute
                     }
-                    Instr::Backward { .. } => {
+                    Instr::Backward { stage, .. } => {
                         wclass[id as usize] = W_BWD;
+                        stage_of[id as usize] = stage as u32;
                         NodeOp::Compute
                     }
-                    Instr::BackwardInput { .. } => {
+                    Instr::BackwardInput { stage, .. } => {
                         wclass[id as usize] = W_BI;
+                        stage_of[id as usize] = stage as u32;
                         NodeOp::Compute
                     }
-                    Instr::BackwardWeight { .. } => {
+                    Instr::BackwardWeight { stage, .. } => {
                         wclass[id as usize] = W_WGT;
+                        stage_of[id as usize] = stage as u32;
                         NodeOp::Compute
                     }
                     Instr::LocalCopyAct { .. } | Instr::LocalCopyGrad { .. } => {
@@ -360,6 +382,7 @@ impl CompiledDag {
         members_off.push(0);
         dev.resize(n_nodes, u32::MAX);
         wclass.resize(n_nodes, 0);
+        stage_of.resize(n_nodes, 0);
         extra_indeg.resize(n_nodes, 0);
         let bar = |c: u32| n_real as u32 + c;
         for (c, cb) in colls.iter().enumerate() {
@@ -505,6 +528,7 @@ impl CompiledDag {
             dev,
             op,
             wclass,
+            stage: stage_of,
             topo,
             members,
             members_off,
@@ -545,7 +569,22 @@ impl CompiledDag {
         for (i, &st) in self.extra_optim.iter().enumerate() {
             tab[eb + i] = costs.optim_time(st);
         }
-        DagWeights { tab }
+        // Heterogeneous compute (stragglers / layer profiles): one scale
+        // per node, priced once here so the evaluation passes stay a table
+        // lookup plus one multiply. Uniform models skip the whole row.
+        let node_scale = (!costs.uniform_compute()).then(|| {
+            self.op
+                .iter()
+                .enumerate()
+                .map(|(i, o)| match o {
+                    NodeOp::Compute => {
+                        costs.compute_scale(self.dev[i] as usize, self.stage[i] as usize)
+                    }
+                    _ => 1.0,
+                })
+                .collect()
+        });
+        DagWeights { tab, node_scale }
     }
 
     /// Weighted longest-path evaluation: one linear pass over the
@@ -561,6 +600,9 @@ impl CompiledDag {
              use the event engine for this schedule"
         );
         assert_eq!(w.tab.len(), self.n_wclasses, "weights built for a different structure");
+        if let Some(s) = &w.node_scale {
+            assert_eq!(s.len(), self.op.len(), "compute scales built for a different structure");
+        }
         if !self.stuck.is_empty() {
             return Err(SimError { stuck: self.stuck.clone() });
         }
@@ -580,7 +622,10 @@ impl CompiledDag {
                 match self.op[i] {
                     NodeOp::Compute => {
                         let dv = self.dev[i] as usize;
-                        let c = w.tab[self.wclass[i] as usize];
+                        let mut c = w.tab[self.wclass[i] as usize];
+                        if let Some(s) = &w.node_scale {
+                            c *= s[i];
+                        }
                         now[dv] += c;
                         trace[dv].compute_busy += c;
                     }
@@ -684,6 +729,13 @@ impl CompiledDag {
         );
         for w in ws {
             assert_eq!(w.tab.len(), self.n_wclasses, "weights built for a different structure");
+            if let Some(s) = &w.node_scale {
+                assert_eq!(
+                    s.len(),
+                    self.op.len(),
+                    "compute scales built for a different structure"
+                );
+            }
         }
         if !self.stuck.is_empty() {
             return Err(SimError { stuck: self.stuck.clone() });
@@ -721,8 +773,11 @@ impl CompiledDag {
                     NodeOp::Compute => {
                         let base = self.dev[i] as usize * k;
                         let wb = self.wclass[i] as usize * k;
-                        for lane in 0..k {
-                            let c = wtab[wb + lane];
+                        for (lane, w) in ws.iter().enumerate() {
+                            let mut c = wtab[wb + lane];
+                            if let Some(s) = &w.node_scale {
+                                c *= s[i];
+                            }
                             now[base + lane] += c;
                             compute_busy[base + lane] += c;
                         }
@@ -1347,6 +1402,39 @@ mod tests {
         let t = dag.evaluate(&dag.weights(&c), 1).unwrap();
         let want = simulate_schedule(&s, &c).unwrap();
         assert_eq!(t.makespan.to_bits(), want.makespan.to_bits());
+    }
+
+    #[test]
+    fn heterogeneous_weights_match_event_engine_bitwise() {
+        // A straggler produces a node_scale row; the scaled DAG must still
+        // replay the event engine bit for bit, solo and batched (mixed
+        // hetero/uniform lanes), and cost strictly more than uniform.
+        let kind = ScheduleKind::BitPipe;
+        let s = build(&ScheduleConfig::new(kind, 4, 8)).unwrap();
+        let p = ParallelConfig::new(kind, 1, 4, 4, 8);
+        let slow = ClusterConfig::paper_testbed(4).with_straggler(1, 1.5).unwrap();
+        let ch = CostModel::new(&BERT_64, &p, &slow);
+        let cu = CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(4));
+        let dag = CompiledDag::compile(&s).unwrap();
+        let wh = dag.weights(&ch);
+        let wu = dag.weights(&cu);
+        assert!(wh.node_scale().is_some());
+        assert!(wu.node_scale().is_none());
+        let t = dag.evaluate(&wh, 2).unwrap();
+        let want = simulate_schedule_iters(&s, &ch, 2).unwrap();
+        for (a, b) in t.iter_finish.iter().zip(&want.iter_finish) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(t.makespan > dag.evaluate(&wu, 2).unwrap().makespan);
+        let got = dag.evaluate_batch(&[wh.clone(), wu.clone()], 2).unwrap();
+        for (g, wi) in got.iter().zip([&wh, &wu]) {
+            let solo = dag.evaluate(wi, 2).unwrap();
+            assert_eq!(g.makespan.to_bits(), solo.makespan.to_bits());
+            for (x, y) in g.devices.iter().zip(&solo.devices) {
+                assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+                assert_eq!(x.compute_busy.to_bits(), y.compute_busy.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -69,9 +69,12 @@
 //! (superseded by a later re-projection) pop and are discarded; this is
 //! what keeps multi-hop (two-resource) flows correct, since either
 //! endpoint's churn can re-time them. A flow's work is its solo transfer
-//! time (latency + bytes/bandwidth), so a flow that never shares any of
-//! its resources completes at exactly the fixed-duration engine's arrival
-//! time, bit for bit, and a shared flow only ever finishes later —
+//! time (latency + bytes/bandwidth), of which only the bytes/bandwidth
+//! part is fair-shared: the wire latency is a fixed term the flow pays
+//! once at wall rate regardless of sharers (`Xfer::lat_left`). A flow
+//! that never shares any of its resources completes at exactly the
+//! fixed-duration engine's arrival time, bit for bit, and a shared flow
+//! only ever finishes later —
 //! contended makespans are therefore bounded below by uncontended ones
 //! for the same schedule.
 //!
@@ -136,18 +139,20 @@
 //!   replicas, which identical instruction streams are. (Collective ring
 //!   flows need no such scaling: their rings already span all W
 //!   replicas' physical devices.)
-//! * A flow's work is its full solo time, *including* the wire latency,
-//!   so k sharers each pay ~k x latency (the *k x latency caveat* — this
-//!   paragraph is its canonical home; ROADMAP's latency-splitting item
-//!   points here). Strict flow models share only the bytes/bandwidth
-//!   term; folding the (micro-second) latency in keeps the solo-flow
-//!   bit-equality guarantee and errs pessimistic by at most
-//!   (k-1) x latency per transfer. Both settlement strategies inherit the
-//!   convention unchanged — a flow's `remaining` is solo-seconds however
-//!   it is chipped away. Ring flows inherit it per hop — a hop's work
-//!   folds in its 2(g-1) per-step latencies — which is also what keeps
-//!   the solo-ring duration equal to the scalar formula instead of
-//!   undershooting it.
+//! * A flow's `remaining` is still its full solo time (latency +
+//!   bytes/bandwidth — for rings, the whole-collective scalar), but the
+//!   wire-latency part is tracked separately (`Xfer::lat_left`) and
+//!   drains at wall rate however many flows share the pipe; only the
+//!   bytes part fair-shares. k sharers of one pipe therefore finish a
+//!   transfer of latency `l` and byte-time `w` at `l + k x w`, not
+//!   `k x (l + w)`: the historical *k x latency caveat* — each sharer
+//!   paying ~k x latency — is **fixed**, anchored by the pinned k-sharer
+//!   case in `rust/tests/network_equiv.rs`. Solo flows take the
+//!   unsplit arithmetic path (share 1 keeps the original expressions
+//!   verbatim), preserving the solo-flow/solo-ring bit-equality
+//!   guarantees. Ring flows carry a per-hop latency budget of their
+//!   2(g-1) per-step latencies, clamped to the hop's work
+//!   ([`super::cost::RingHop::lat`]).
 //!
 //! Transfer starts are enqueued as heap events at their virtual send time
 //! rather than applied immediately: a device may locally run far ahead of
@@ -426,11 +431,18 @@ struct Xfer {
     /// destination node's ingress NIC ([`NO_RESOURCE`] when single).
     res: (u32, u32),
     /// Remaining work in *solo seconds* — the time the rest of the
-    /// transfer would take alone (latency + bytes/bandwidth). With `k`
-    /// flows on the flow's most-loaded resource it drains at `1/k`
-    /// solo-seconds per wall second, so a never-shared flow reproduces
-    /// the fixed-duration arrival bit for bit.
+    /// transfer would take alone (latency + bytes/bandwidth). The first
+    /// `lat_left` of it is fixed wire latency draining at wall rate; the
+    /// remainder is shared work draining at `1/k` with `k` flows on the
+    /// flow's most-loaded resource. A never-shared flow reproduces the
+    /// fixed-duration arrival bit for bit (its `k == 1` path keeps the
+    /// pre-split arithmetic verbatim).
     remaining: f64,
+    /// Unpaid wire-latency budget inside `remaining` (invariant:
+    /// `lat_left <= remaining`). Latency is not shared bandwidth — it
+    /// always drains at wall rate, which is exactly the latency-split
+    /// fix: k sharers pay the latency once, not k times.
+    lat_left: f64,
     /// Virtual time `remaining` was last settled at (incremental
     /// settlement; unused under [`NetworkImpl::Global`]).
     settled: f64,
@@ -532,6 +544,35 @@ impl Network {
         scratch.dedup();
     }
 
+    /// Drain `dt` wall seconds of progress from one flow at share `k`:
+    /// the unpaid latency budget first, at wall rate (latency is not
+    /// shared bandwidth), then the remaining shared work at `1/k`. The
+    /// `k == 1` branch keeps the pre-latency-split expressions verbatim —
+    /// f64 addition is not associative, so this is what preserves the
+    /// solo-flow/solo-ring bit-equality anchors.
+    fn drain(x: &mut Xfer, dt: f64, k: f64) {
+        if k <= 1.0 {
+            x.remaining = (x.remaining - dt / k).max(0.0);
+            x.lat_left = (x.lat_left - dt).max(0.0);
+        } else {
+            let wall = x.lat_left.min(dt);
+            x.lat_left -= wall;
+            x.remaining = (x.remaining - wall - (dt - wall) / k).max(0.0);
+        }
+    }
+
+    /// Projected completion of a flow at share `k` from time `t`: the
+    /// latency budget passes at wall rate, the shared remainder at `1/k`.
+    /// The `k == 1` arm is the pre-split expression verbatim (see
+    /// [`Self::drain`]).
+    fn project(x: &Xfer, t: f64, k: f64) -> f64 {
+        if k <= 1.0 {
+            t + x.remaining * k
+        } else {
+            t + x.lat_left + (x.remaining - x.lat_left) * k
+        }
+    }
+
     /// Global settlement: advance every in-flight flow from the shared
     /// settle point to `t` at its current fair share.
     fn settle_global(&mut self, t: f64) {
@@ -540,8 +581,7 @@ impl Network {
             let Network { res, xfers, active, .. } = self;
             for &id in active.iter() {
                 let k = Self::share_of(res, &xfers[id]);
-                let x = &mut xfers[id];
-                x.remaining = (x.remaining - dt / k).max(0.0);
+                Self::drain(&mut xfers[id], dt, k);
             }
             self.last = t;
         }
@@ -551,7 +591,8 @@ impl Network {
     /// its own settle point at the share in effect over that interval.
     fn settle_flow(x: &mut Xfer, t: f64) {
         if t > x.settled {
-            x.remaining = (x.remaining - (t - x.settled) / x.share).max(0.0);
+            let (dt, k) = (t - x.settled, x.share);
+            Self::drain(x, dt, k);
         }
         x.settled = t;
     }
@@ -572,7 +613,7 @@ impl Network {
             }
             x.version += 1;
             heap.push(Event {
-                time: t + x.remaining * k,
+                time: Self::project(x, t, k),
                 kind: EvKind::XferDone { id, version: x.version },
             });
         }
@@ -795,15 +836,19 @@ impl<'a> Engine<'a> {
         let edge = self.costs.p2p_edge(dev, to);
         let net = self.net.as_mut().expect("contended send without a network");
         let id = net.xfers.len();
+        // The other W-1 data-parallel groups send identical messages at
+        // the same virtual time; `dp_copies` of them share this pipe, so
+        // the tracked copy carries dp_copies x its *byte* work — the
+        // replicas stream concurrently, so the wire latency is still paid
+        // once, not per copy. With dp_copies == 1 the total is
+        // `lat + (bytes/bw) * 1.0`, IEEE-exactly the edge's solo time,
+        // preserving the solo-flow bit-equality guarantee.
+        let byte_work = edge.bytes as f64 / edge.bw;
         net.xfers.push(Xfer {
             payload: Payload::Msg(slot),
             res: edge.res,
-            // The other W-1 data-parallel groups send identical messages at
-            // the same virtual time; `dp_copies` of them share this pipe,
-            // so the tracked copy carries dp_copies x its solo work
-            // (multiplying by 1.0 is exact, preserving the solo-flow
-            // bit-equality guarantee whenever no replica shares the pipe).
-            remaining: edge.solo_time() * f64::from(edge.dp_copies),
+            remaining: edge.lat + byte_work * f64::from(edge.dp_copies),
+            lat_left: edge.lat,
             settled: 0.0,
             share: 1.0,
             version: 0,
@@ -873,6 +918,7 @@ impl<'a> Engine<'a> {
                     payload: Payload::Ring(c),
                     res: hop.res,
                     remaining: hop.work,
+                    lat_left: hop.lat,
                     settled: 0.0,
                     share: 1.0,
                     version: 0,
@@ -1000,22 +1046,30 @@ impl<'a> Engine<'a> {
                 }
                 continue;
             }
+            // Compute is priced per (device, stage): stragglers and layer
+            // profiles scale it; on uniform clusters the accessors return
+            // the raw chunk fields (no multiplication), bit-identical to
+            // the flat pricing this loop used before heterogeneity.
             match ops[self.ix[dev]] {
-                Instr::Forward { .. } => {
-                    self.now[dev] += self.costs.chunk_fwd;
-                    self.trace[dev].compute_busy += self.costs.chunk_fwd;
+                Instr::Forward { stage, .. } => {
+                    let c = self.costs.fwd_time(dev, stage);
+                    self.now[dev] += c;
+                    self.trace[dev].compute_busy += c;
                 }
-                Instr::Backward { .. } => {
-                    self.now[dev] += self.costs.chunk_bwd;
-                    self.trace[dev].compute_busy += self.costs.chunk_bwd;
+                Instr::Backward { stage, .. } => {
+                    let c = self.costs.bwd_time(dev, stage);
+                    self.now[dev] += c;
+                    self.trace[dev].compute_busy += c;
                 }
-                Instr::BackwardInput { .. } => {
-                    self.now[dev] += self.costs.chunk_bwd_input;
-                    self.trace[dev].compute_busy += self.costs.chunk_bwd_input;
+                Instr::BackwardInput { stage, .. } => {
+                    let c = self.costs.bwd_input_time(dev, stage);
+                    self.now[dev] += c;
+                    self.trace[dev].compute_busy += c;
                 }
-                Instr::BackwardWeight { .. } => {
-                    self.now[dev] += self.costs.chunk_bwd_weight;
-                    self.trace[dev].compute_busy += self.costs.chunk_bwd_weight;
+                Instr::BackwardWeight { stage, .. } => {
+                    let c = self.costs.bwd_weight_time(dev, stage);
+                    self.now[dev] += c;
+                    self.trace[dev].compute_busy += c;
                 }
                 Instr::SendAct { to, .. } | Instr::SendGrad { to, .. } => {
                     let slot = self.tables.slots[dev][self.ix[dev]];

@@ -493,8 +493,26 @@ pub fn grid_search_cached(
     minibatch: usize,
     cache: &mut DagCache,
 ) -> Result<Vec<GridPoint>> {
-    let cands = candidates(kind, space, n_devices, minibatch);
     let cluster = ClusterConfig::paper_testbed(n_devices);
+    grid_search_on_cluster(kind, model, space, minibatch, &cluster, cache)
+}
+
+/// [`grid_search_cached`] on an explicit — possibly heterogeneous or
+/// degraded — cluster: stragglers and link overrides price into the
+/// weight tables (per-node compute scales on [`DagWeights`], overridden
+/// link rates in the P2P block), while the compiled structures stay
+/// cluster-independent, so one cache serves healthy and degraded sweeps
+/// alike. With an all-neutral cluster this is bit-identical to
+/// [`grid_search_cached`] (`rust/tests/hetero_identity.rs`).
+pub fn grid_search_on_cluster(
+    kind: ScheduleKind,
+    model: &ModelConfig,
+    space: &GridSpace,
+    minibatch: usize,
+    cluster: &ClusterConfig,
+    cache: &mut DagCache,
+) -> Result<Vec<GridPoint>> {
+    let cands = candidates(kind, space, cluster.n_devices, minibatch);
     if cluster.validate().is_err() || model.validate().is_err() {
         return Ok(Vec::new()); // every point would fail exactly this way
     }
@@ -512,7 +530,7 @@ pub fn grid_search_cached(
     let mut topos: Vec<((usize, usize), LinkTopology)> = Vec::new();
     let mut points: Vec<GridPoint> = cands
         .into_iter()
-        .filter_map(|p| evaluate_cached(model, &cluster, p, cache, &mut topos))
+        .filter_map(|p| evaluate_cached(model, cluster, p, cache, &mut topos))
         .collect();
     sort_points(&mut points);
     Ok(points)
@@ -1205,6 +1223,58 @@ mod tests {
         )
         .unwrap();
         assert!(cache.len() > after_first);
+    }
+
+    #[test]
+    fn degraded_sweep_neutral_identity_and_stragglers_only_slow() {
+        // Neutral overrides through grid_search_on_cluster are bit-identical
+        // to the plain sweep (sharing its cache), and a real straggler can
+        // only lower a layout's throughput, never raise it.
+        let space = GridSpace::bert64();
+        let mut cache = DagCache::new();
+        let base =
+            grid_search_cached(ScheduleKind::BitPipe, &BERT_64, &space, 16, 64, &mut cache)
+                .unwrap();
+        assert!(!base.is_empty());
+        let neutral = ClusterConfig::paper_testbed(16).with_straggler(0, 1.0).unwrap();
+        let same = grid_search_on_cluster(
+            ScheduleKind::BitPipe,
+            &BERT_64,
+            &space,
+            64,
+            &neutral,
+            &mut cache,
+        )
+        .unwrap();
+        assert_eq!(base.len(), same.len());
+        for (a, b) in base.iter().zip(&same) {
+            assert_eq!(a.result.throughput.to_bits(), b.result.throughput.to_bits());
+            assert_eq!(a.result.iter_time.to_bits(), b.result.iter_time.to_bits());
+        }
+        let slow = ClusterConfig::paper_testbed(16).with_straggler(0, 1.5).unwrap();
+        let degraded = grid_search_on_cluster(
+            ScheduleKind::BitPipe,
+            &BERT_64,
+            &space,
+            64,
+            &slow,
+            &mut cache,
+        )
+        .unwrap();
+        assert_eq!(base.len(), degraded.len(), "stragglers change speed, not feasibility");
+        for a in &degraded {
+            let key = (a.parallel.w, a.parallel.d, a.parallel.b, a.parallel.n);
+            let b = base
+                .iter()
+                .find(|p| (p.parallel.w, p.parallel.d, p.parallel.b, p.parallel.n) == key)
+                .expect("point missing from healthy sweep");
+            assert!(
+                a.result.throughput <= b.result.throughput + 1e-9,
+                "{key:?}: degraded {} > healthy {}",
+                a.result.throughput,
+                b.result.throughput
+            );
+        }
     }
 
     #[test]

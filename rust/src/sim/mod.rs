@@ -81,8 +81,9 @@ pub use engine::{
 pub use engine::simulate_schedule_reference;
 pub use gridsearch::{
     grid_search, grid_search_batched, grid_search_cached, grid_search_contended_cached,
-    grid_search_contended_serial, grid_search_opts, grid_search_opts_baseline, grid_search_serial,
-    DagCache, GridPoint, GridSpace, StreamCache, RECOST_LANES,
+    grid_search_contended_serial, grid_search_on_cluster, grid_search_opts,
+    grid_search_opts_baseline, grid_search_serial, DagCache, GridPoint, GridSpace, StreamCache,
+    RECOST_LANES,
 };
 pub use memory::{memory_footprint, memory_footprint_from_counts, MemoryFootprint};
 

@@ -1,0 +1,82 @@
+//! CLI-level tests for `bitpipe inspect` (the missing-artifact error path
+//! must be a proper error naming the available artifacts, not a panic) and
+//! the heterogeneity flags on `bitpipe simulate`.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+const MANIFEST: &str = "\
+model=gpt-tiny
+hidden=256
+seq=128
+batch=4
+vocab=512
+heads=8
+n_chunks=4
+layers_per_chunk=2
+artifact.fwd_embed=fwd_embed.hlo.txt
+artifact.bwd_embed=bwd_embed.hlo.txt
+params.embed=137216
+selfcheck.loss=6.291064
+";
+
+/// Write a minimal artifact dir and return its path.
+fn artifact_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bitpipe-cli-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), MANIFEST).unwrap();
+    dir
+}
+
+fn bitpipe(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_bitpipe")).args(args).output().expect("spawn bitpipe")
+}
+
+#[test]
+fn inspect_missing_artifact_is_an_error_listing_names() {
+    let dir = artifact_dir("missing");
+    let out = bitpipe(&["inspect", "--artifacts", dir.to_str().unwrap(), "--artifact", "nope"]);
+    assert!(!out.status.success(), "missing artifact must fail, not panic");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("nope"), "error must name the request: {err}");
+    assert!(
+        err.contains("bwd_embed") && err.contains("fwd_embed"),
+        "error must list the available artifacts: {err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn inspect_selects_one_artifact() {
+    let dir = artifact_dir("select");
+    let out =
+        bitpipe(&["inspect", "--artifacts", dir.to_str().unwrap(), "--artifact", "fwd_embed"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fwd_embed.hlo.txt"), "selector output: {text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn simulate_straggler_and_link_override_smoke() {
+    let out = bitpipe(&[
+        "simulate", "--kind", "bitpipe", "--d", "4", "--n", "8", "--straggler", "0:1.2",
+        "--link-override", "ib:0.5", "--contention",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("iteration time"), "simulate output: {text}");
+}
+
+#[test]
+fn simulate_rejects_malformed_hetero_flags() {
+    for args in [
+        ["simulate", "--d", "4", "--n", "8", "--straggler", "banana"].as_slice(),
+        ["simulate", "--d", "4", "--n", "8", "--straggler", "9:1.2"].as_slice(),
+        ["simulate", "--d", "4", "--n", "8", "--link-override", "ib:-1"].as_slice(),
+        ["simulate", "--d", "4", "--n", "8", "--link-override", "0:0.5"].as_slice(),
+    ] {
+        let out = bitpipe(args);
+        assert!(!out.status.success(), "{args:?} must be rejected");
+    }
+}

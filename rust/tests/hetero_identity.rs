@@ -1,0 +1,139 @@
+//! The uniform-identity guarantee behind the heterogeneity support: a
+//! [`ClusterConfig`] whose straggler / link-multiplier / link-override
+//! tables are populated but all-neutral (every multiplier exactly 1.0)
+//! must be **bit-identical** to the plain paper testbed on every backend —
+//! uncontended event engine, compiled DAG, batched DAG lanes, and the
+//! contended network. This is what lets `golden_makespans.txt` and the
+//! table4/table7 orderings stand without a re-bless: x1.0 and /1.0 are
+//! IEEE-exact identities, and uniform cost models skip the per-node scale
+//! row entirely ([`DagWeights::node_scale`] stays `None`).
+
+use bitpipe::config::{ClusterConfig, LinkKind, ParallelConfig, BERT_64};
+use bitpipe::schedule::{build, ScheduleConfig, ScheduleKind};
+use bitpipe::sim::{
+    grid_search_cached, grid_search_on_cluster, simulate_schedule_iters,
+    simulate_schedule_network, CompiledDag, Contention, CostModel, DagCache, GridSpace,
+    NetworkImpl,
+};
+
+/// The paper testbed with every heterogeneity table populated but neutral.
+fn neutral_cluster(n: usize) -> ClusterConfig {
+    ClusterConfig::paper_testbed(n)
+        .with_straggler(0, 1.0)
+        .unwrap()
+        .with_straggler(n - 1, 1.0)
+        .unwrap()
+        .with_link_mult(LinkKind::NvLink, 1.0)
+        .unwrap()
+        .with_link_mult(LinkKind::InfiniBand, 1.0)
+        .unwrap()
+        .with_link_override(0, 1, 1.0)
+        .unwrap()
+}
+
+fn assert_traces_identical(tag: &str, a: &bitpipe::sim::MultiIterTrace, b: &bitpipe::sim::MultiIterTrace) {
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{tag}: makespan");
+    for (x, y) in a.iter_finish.iter().zip(&b.iter_finish) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: iteration boundary");
+    }
+    for (dev, (x, y)) in a.devices.iter().zip(&b.devices).enumerate() {
+        assert_eq!(x.finish.to_bits(), y.finish.to_bits(), "{tag}: dev {dev} finish");
+        assert_eq!(
+            x.compute_busy.to_bits(),
+            y.compute_busy.to_bits(),
+            "{tag}: dev {dev} compute_busy"
+        );
+        assert_eq!(
+            x.recv_blocked.to_bits(),
+            y.recv_blocked.to_bits(),
+            "{tag}: dev {dev} recv_blocked"
+        );
+        assert_eq!(
+            x.allreduce_blocked.to_bits(),
+            y.allreduce_blocked.to_bits(),
+            "{tag}: dev {dev} allreduce_blocked"
+        );
+        assert_eq!((x.sends, x.local_copies), (y.sends, y.local_copies), "{tag}: dev {dev}");
+    }
+}
+
+#[test]
+fn neutral_overrides_are_bit_identical_on_every_backend() {
+    for kind in ScheduleKind::ALL {
+        for d in [4usize, 8] {
+            for n in [4usize, 8, 16] {
+                if n < d {
+                    continue;
+                }
+                let s = build(&ScheduleConfig::new(kind, d, n)).unwrap();
+                let p = ParallelConfig::new(kind, 1, d, 4, n);
+                let cb = CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(d));
+                let cn = CostModel::new(&BERT_64, &p, &neutral_cluster(d));
+                assert!(cn.uniform_compute(), "{kind}: neutral model must stay uniform");
+                let tag = format!("{kind} D={d} N={n}");
+
+                // Uncontended event engine, multi-iteration.
+                let eb = simulate_schedule_iters(&s, &cb, 2).unwrap();
+                let en = simulate_schedule_iters(&s, &cn, 2).unwrap();
+                assert_traces_identical(&format!("{tag} event"), &eb, &en);
+
+                // Contended event engine (incremental network).
+                let kb =
+                    simulate_schedule_network(&s, &cb, Contention::Full, NetworkImpl::Incremental)
+                        .unwrap();
+                let kn =
+                    simulate_schedule_network(&s, &cn, Contention::Full, NetworkImpl::Incremental)
+                        .unwrap();
+                assert_eq!(kb.makespan.to_bits(), kn.makespan.to_bits(), "{tag}: contended");
+
+                // Compiled DAG, scalar and batched lanes.
+                if let Ok(dag) = CompiledDag::compile(&s) {
+                    let wb = dag.weights(&cb);
+                    let wn = dag.weights(&cn);
+                    assert!(wn.node_scale().is_none(), "{tag}: neutral weights grew a scale row");
+                    for (x, y) in wb.table().iter().zip(wn.table()) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: weight table");
+                    }
+                    let db = dag.evaluate(&wb, 1).unwrap();
+                    let dn = dag.evaluate(&wn, 1).unwrap();
+                    assert_traces_identical(&format!("{tag} dag"), &db, &dn);
+                    let batch = dag.evaluate_batch(&[wb, wn], 1).unwrap();
+                    assert_traces_identical(&format!("{tag} batched[0]"), &batch[0], &db);
+                    assert_traces_identical(&format!("{tag} batched[1]"), &batch[1], &dn);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn neutral_grid_sweep_matches_plain_sweep_bitwise() {
+    // The sweep-level identity: grid_search_on_cluster with a neutral
+    // cluster reproduces the plain cached sweep byte for byte — points,
+    // order, and every f64 — so table4/table7 orderings cannot move.
+    let space = GridSpace::bert64();
+    let mut cache = DagCache::new();
+    let plain =
+        grid_search_cached(ScheduleKind::BitPipe, &BERT_64, &space, 16, 64, &mut cache).unwrap();
+    let neutral = neutral_cluster(16);
+    let hetero = grid_search_on_cluster(
+        ScheduleKind::BitPipe,
+        &BERT_64,
+        &space,
+        64,
+        &neutral,
+        &mut cache,
+    )
+    .unwrap();
+    assert!(!plain.is_empty());
+    assert_eq!(plain.len(), hetero.len());
+    for (a, b) in plain.iter().zip(&hetero) {
+        assert_eq!(
+            (a.parallel.w, a.parallel.d, a.parallel.b, a.parallel.n),
+            (b.parallel.w, b.parallel.d, b.parallel.b, b.parallel.n)
+        );
+        assert_eq!(a.result.throughput.to_bits(), b.result.throughput.to_bits());
+        assert_eq!(a.result.iter_time.to_bits(), b.result.iter_time.to_bits());
+        assert_eq!(a.result.peak_memory(), b.result.peak_memory());
+    }
+}

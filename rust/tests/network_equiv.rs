@@ -14,7 +14,7 @@
 //! thread counts (the canonical-order collection makes worker scheduling
 //! unobservable), and across the StreamCache fast path vs a serial sweep.
 
-use bitpipe::config::{ClusterConfig, IbModel, MappingPolicy, ParallelConfig, BERT_64};
+use bitpipe::config::{ClusterConfig, IbModel, LinkKind, MappingPolicy, ParallelConfig, BERT_64};
 use bitpipe::schedule::{build, placement_for, Instr, Schedule, ScheduleConfig, ScheduleKind};
 use bitpipe::sim::{
     grid_search_contended_serial, grid_search_opts, grid_search_opts_baseline,
@@ -178,6 +178,58 @@ fn queued_rings_agree_and_keep_the_solo_anchor() {
         (1.95..=2.05).contains(&ratio),
         "incremental: two rings through one NIC pair ratio {ratio}"
     );
+}
+
+#[test]
+fn k_sharers_pay_latency_once() {
+    // The latency-split pin: k concurrent transfers over one IB pipe
+    // finish ~(l + k*w) after launch — wire latency is a fixed term paid
+    // once, only the byte-time w fair-shares — not k*(l + w). The
+    // historical (k-1) x latency overcharge would add 8 or 16 us here,
+    // far outside the asserted l/2 window.
+    let build_case = |k: usize| {
+        let placement = placement_for(ScheduleKind::Dapple, 4, 1);
+        let cfg = ScheduleConfig::new(ScheduleKind::Dapple, 4, 4);
+        let mut device_ops = vec![Vec::new(); 4];
+        for mb in 0..k {
+            device_ops[0].push(Instr::SendAct { to: 2, pipe: 0, stage: 0, mb });
+            device_ops[2].push(Instr::RecvAct { from: 0, pipe: 0, stage: 1, mb });
+        }
+        Schedule {
+            cfg,
+            placement,
+            compute_order: vec![Vec::new(); 4],
+            device_ops,
+            pipe_of_mb: vec![0; 4],
+        }
+    };
+    let p = ParallelConfig::new(ScheduleKind::Dapple, 1, 4, 4, 4);
+    let cluster = ClusterConfig { n_devices: 4, devices_per_node: 2, ..Default::default() };
+    let c = CostModel::new(&BERT_64, &p, &cluster);
+    let l = cluster.lat(LinkKind::InfiniBand);
+    let w = BERT_64.message_bytes(4) as f64 / cluster.bw(LinkKind::InfiniBand);
+    let mks = |k: usize, imp: NetworkImpl| {
+        simulate_schedule_network(&build_case(k), &c, Contention::Full, imp)
+            .unwrap()
+            .makespan
+    };
+    for imp in [NetworkImpl::Incremental, NetworkImpl::Global] {
+        // Solo anchor: the unshared scalar transfer time plus launch skew.
+        let solo = mks(1, imp);
+        assert!((solo - (l + w)).abs() <= 2e-6, "{imp:?}: solo {solo} vs l+w {}", l + w);
+        for k in [2usize, 3] {
+            let extra = mks(k, imp) - solo;
+            let shared = (k - 1) as f64 * w;
+            assert!(extra >= shared - 1e-9, "{imp:?} k={k}: extra {extra} < {shared}");
+            assert!(
+                extra <= shared + 0.5 * l,
+                "{imp:?} k={k}: extra {extra} vs byte-share {shared} — \
+                 latency charged per sharer?"
+            );
+        }
+    }
+    // Both settlement strategies agree on the shared case too.
+    check_impls_agree("k=3 sharers one IB pipe", &build_case(3), &c, 1, Contention::Full);
 }
 
 #[test]
