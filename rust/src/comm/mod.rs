@@ -15,10 +15,22 @@
 //! tensors) moved, never copied. Messages queued under the *same* tag are
 //! delivered FIFO (a `VecDeque` per slot), mirroring the simulator's
 //! in-order pairing of duplicate tags.
+//!
+//! # Fail-fast poisoning
+//!
+//! A worker that dies (panic, fatal error) would historically leave every
+//! peer blocked on `recv` until the full receive timeout expired.
+//! [`Fabric::poison`] is the fail-fast path: it marks the fabric poisoned
+//! (first poisoner wins) and rings every mailbox's bell, so all blocked
+//! receivers wake promptly with [`CommError::Poisoned`] naming the dead
+//! worker. Messages already delivered still drain first — a receiver with
+//! its tensor waiting takes it even on a poisoned fabric — but nobody
+//! waits for data that can no longer arrive.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Message tag: (from, class, pipe, producer stage, micro-batch).
 ///
@@ -55,13 +67,19 @@ struct Mailbox {
 }
 
 /// The full-cluster fabric: `D` mailboxes. Cloneable handle; clones share
-/// the mailboxes and the receive timeout.
+/// the mailboxes, the poison flag, and the receive timeout.
 #[derive(Debug, Clone)]
 pub struct Fabric {
     boxes: Arc<Vec<Mailbox>>,
+    /// Device id of the worker that poisoned the fabric;
+    /// `usize::MAX` while healthy. First poisoner wins.
+    poisoned: Arc<AtomicUsize>,
     /// How long a `recv` waits before reporting a deadlock.
     timeout: Duration,
 }
+
+/// Sentinel for the healthy (un-poisoned) fabric.
+const HEALTHY: usize = usize::MAX;
 
 /// Default receive timeout — converts schedule deadlocks into errors
 /// instead of hangs (a schedule bug or a died peer would otherwise freeze
@@ -71,8 +89,13 @@ pub const RECV_TIMEOUT: Duration = Duration::from_secs(30);
 
 #[derive(Debug)]
 pub enum CommError {
-    /// Recv waited past the fabric's timeout (deadlock or dead peer).
-    Timeout { dev: usize, tag: Tag },
+    /// Recv waited past the fabric's timeout (deadlock or dead peer);
+    /// carries the waiting device, the tag it was blocked on, and how
+    /// long it actually waited.
+    Timeout { dev: usize, tag: Tag, elapsed: Duration },
+    /// The fabric was poisoned (a worker died) while device `dev` was
+    /// blocked waiting for `tag`; `by` names the dead worker.
+    Poisoned { dev: usize, tag: Tag, by: usize },
     /// Device id outside the fabric.
     BadDevice(usize),
 }
@@ -80,8 +103,20 @@ pub enum CommError {
 impl std::fmt::Display for CommError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            CommError::Timeout { dev, tag } => {
-                write!(f, "recv timeout on device {dev} for tag {tag:?} (deadlock or dead peer)")
+            CommError::Timeout { dev, tag, elapsed } => {
+                write!(
+                    f,
+                    "recv timeout on device {dev} for tag {tag:?} after {:.3}s \
+                     (deadlock or dead peer)",
+                    elapsed.as_secs_f64()
+                )
+            }
+            CommError::Poisoned { dev, tag, by } => {
+                write!(
+                    f,
+                    "recv on device {dev} for tag {tag:?} aborted: \
+                     fabric poisoned by worker {by} (peer died)"
+                )
             }
             CommError::BadDevice(dev) => write!(f, "device id {dev} out of range"),
         }
@@ -101,7 +136,31 @@ impl Fabric {
     pub fn with_timeout(n_devices: usize, timeout: Duration) -> Self {
         Fabric {
             boxes: Arc::new((0..n_devices).map(|_| Mailbox::default()).collect()),
+            poisoned: Arc::new(AtomicUsize::new(HEALTHY)),
             timeout,
+        }
+    }
+
+    /// Mark the fabric poisoned on behalf of a dead worker `by` and wake
+    /// every blocked receiver; they return [`CommError::Poisoned`]
+    /// promptly instead of burning their full receive timeout. Idempotent
+    /// — the first poisoner wins, later calls keep its identity.
+    pub fn poison(&self, by: usize) {
+        let _ = self.poisoned.compare_exchange(HEALTHY, by, Ordering::SeqCst, Ordering::SeqCst);
+        // Ring every bell *under its mailbox lock*: a receiver that
+        // checked the flag and is about to wait holds the lock until it
+        // parks, so it cannot miss this notification.
+        for mbox in self.boxes.iter() {
+            let _guard = mbox.slots.lock().unwrap();
+            mbox.bell.notify_all();
+        }
+    }
+
+    /// Who poisoned the fabric, if anyone.
+    pub fn poisoned_by(&self) -> Option<usize> {
+        match self.poisoned.load(Ordering::SeqCst) {
+            HEALTHY => None,
+            by => Some(by),
         }
     }
 
@@ -119,9 +178,12 @@ impl Fabric {
     }
 
     /// Block until a message under `tag` is available at device `dev`;
-    /// removes and returns it (FIFO among same-tag messages).
+    /// removes and returns it (FIFO among same-tag messages). Delivered
+    /// messages drain even on a poisoned fabric; only a receiver that
+    /// would have to *wait* observes [`CommError::Poisoned`].
     pub fn recv(&self, dev: usize, tag: Tag) -> Result<Vec<f32>, CommError> {
         let mbox = self.boxes.get(dev).ok_or(CommError::BadDevice(dev))?;
+        let start = Instant::now();
         let mut slots = mbox.slots.lock().unwrap();
         loop {
             if let Some(q) = slots.get_mut(&tag) {
@@ -132,10 +194,17 @@ impl Fabric {
                     return Ok(payload);
                 }
             }
-            let (guard, timeout) = mbox.bell.wait_timeout(slots, self.timeout).unwrap();
+            if let Some(by) = self.poisoned_by() {
+                return Err(CommError::Poisoned { dev, tag, by });
+            }
+            let elapsed = start.elapsed();
+            let Some(remaining) = self.timeout.checked_sub(elapsed) else {
+                return Err(CommError::Timeout { dev, tag, elapsed });
+            };
+            let (guard, timeout) = mbox.bell.wait_timeout(slots, remaining).unwrap();
             slots = guard;
             if timeout.timed_out() {
-                return Err(CommError::Timeout { dev, tag });
+                return Err(CommError::Timeout { dev, tag, elapsed: start.elapsed() });
             }
         }
     }
@@ -220,6 +289,56 @@ mod tests {
             t0.elapsed() < Duration::from_secs(5),
             "timeout did not honour the configured duration"
         );
+    }
+
+    #[test]
+    fn poison_wakes_blocked_recv_fast() {
+        // A blocked receiver on a fabric with a long timeout must fail
+        // well under that timeout once a peer poisons it.
+        let f = Fabric::with_timeout(2, Duration::from_secs(30));
+        let f2 = f.clone();
+        let h = thread::spawn(move || {
+            let t0 = Instant::now();
+            let e = f2.recv(0, Tag::act(1, 0, 0, 0)).unwrap_err();
+            (e, t0.elapsed())
+        });
+        thread::sleep(Duration::from_millis(20));
+        f.poison(1);
+        let (e, waited) = h.join().unwrap();
+        assert!(
+            matches!(e, CommError::Poisoned { dev: 0, by: 1, .. }),
+            "expected Poisoned, got {e}"
+        );
+        assert!(waited < Duration::from_secs(5), "poison took {waited:?} to propagate");
+    }
+
+    #[test]
+    fn poison_first_wins_and_delivered_messages_drain() {
+        let f = Fabric::new(2);
+        let tag = Tag::act(0, 0, 0, 0);
+        f.send(1, tag, vec![5.0]).unwrap();
+        f.poison(0);
+        f.poison(1); // later poisoner does not overwrite
+        assert_eq!(f.poisoned_by(), Some(0));
+        // Already-delivered data still drains...
+        assert_eq!(f.recv(1, tag).unwrap(), vec![5.0]);
+        // ...but a recv that would wait fails with the first poisoner.
+        let e = f.recv(1, tag).unwrap_err();
+        assert!(matches!(e, CommError::Poisoned { dev: 1, by: 0, .. }));
+    }
+
+    #[test]
+    fn timeout_error_carries_context() {
+        let f = Fabric::with_timeout(1, Duration::from_millis(30));
+        let tag = Tag::grad(0, 1, 2, 3);
+        match f.recv(0, tag).unwrap_err() {
+            CommError::Timeout { dev, tag: t, elapsed } => {
+                assert_eq!(dev, 0);
+                assert_eq!(t, tag);
+                assert!(elapsed >= Duration::from_millis(30));
+            }
+            other => panic!("expected Timeout, got {other}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,503 @@
+//! Fault injection: an explicit, time-ordered trace of degradation events
+//! the event engine replays against a run, plus a seeded generator and a
+//! checkpoint-restart recovery price model.
+//!
+//! A [`FaultPlan`] is *data*, not behaviour: every event carries absolute
+//! virtual-time boundaries, so the same plan replayed against the same
+//! schedule is bitwise deterministic — across repeated runs and across
+//! sweep thread counts. [`FaultPlan::random`] expands a `(seed,
+//! intensity)` pair into such an explicit trace; the candidate event
+//! stream is drawn from the seed *independently of intensity*, and
+//! intensity only (a) takes a longer prefix of that stream and (b) scales
+//! severities monotonically, so a higher-intensity plan strictly dominates
+//! a lower one event-for-event. Combined with the engine's degrade-only
+//! semantics this makes faulted makespans monotone in intensity — the
+//! invariant the resilience sweep and `rust/tests/faults.rs` pin.
+//!
+//! All faults are *degrade-only*: link rates multiply by `mult ∈ (0, 1]`,
+//! device compute by `mult >= 1`, and a stall only pushes a device clock
+//! forward. An empty plan is bit-identical to a fault-free run on every
+//! backend and mode (the engine takes the historical code paths verbatim
+//! when no fault state is attached).
+
+use super::cluster::LinkKind;
+use crate::util::prng::Prng;
+use anyhow::{bail, ensure, Context, Result};
+
+/// Which physical links a [`FaultEvent::LinkDegrade`] hits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultTarget {
+    /// Every link of one interconnect class (e.g. all Infiniband NICs —
+    /// the "flapping NIC fabric" scenario).
+    LinkClass(LinkKind),
+    /// The links between one device pair, both directions (an NVLink
+    /// brownout, or the NIC path between two specific nodes).
+    LinkPair { a: usize, b: usize },
+}
+
+/// One fault of a [`FaultPlan`]. Times are absolute virtual seconds of
+/// the simulated run (the same clock the engine's heap runs on).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// The targeted links run at `mult` of their healthy bandwidth over
+    /// `[t_start, t_end)` (`mult ∈ (0, 1]`; wire latency is propagation
+    /// delay and stays unscaled). Overlapping degradations of the same
+    /// link multiply.
+    LinkDegrade { target: FaultTarget, mult: f64, t_start: f64, t_end: f64 },
+    /// Device `dev`'s compute runs `mult >= 1` times slower over
+    /// `[t_start, t_end)`. Applies at each compute op's *dispatch*: an op
+    /// priced before the boundary keeps its price (see the engine docs).
+    DeviceSlow { dev: usize, mult: f64, t_start: f64, t_end: f64 },
+    /// Device `dev` freezes at `t` for `dur` seconds: its clock is pinned
+    /// to at least `t + dur`. Also the plan's proxy for a device
+    /// *failure* — [`RecoveryModel`] prices checkpoint-restart at stall
+    /// times ([`FaultPlan::stall_times`]).
+    DeviceStall { dev: usize, t: f64, dur: f64 },
+}
+
+impl FaultEvent {
+    /// First boundary time of the event.
+    pub fn start(&self) -> f64 {
+        match *self {
+            FaultEvent::LinkDegrade { t_start, .. }
+            | FaultEvent::DeviceSlow { t_start, .. } => t_start,
+            FaultEvent::DeviceStall { t, .. } => t,
+        }
+    }
+
+    /// Parse one CLI fault spec:
+    ///
+    /// * `link:ib:0.25@2.0..5.0` — all links of a class (`local`,
+    ///   `nvlink`, `ib`) at 0.25x bandwidth over [2.0, 5.0)s
+    /// * `link:0-1:0.5@1.0..2.0` — the device pair 0<->1
+    /// * `dev:3:slow:1.5@2.0..5.0` — device 3 compute 1.5x slower
+    /// * `dev:3:stall@1.5+0.4` — device 3 frozen at t=1.5s for 0.4s
+    pub fn parse(spec: &str) -> Result<FaultEvent> {
+        let err = || format!("bad fault spec {spec:?}");
+        let (head, rest) = spec.split_once(':').with_context(err)?;
+        match head {
+            "link" => {
+                let (sel, rest) = rest.split_once(':').with_context(err)?;
+                let (mult, window) = rest.split_once('@').with_context(err)?;
+                let (t0, t1) = window.split_once("..").with_context(err)?;
+                let target = match sel {
+                    "local" => FaultTarget::LinkClass(LinkKind::Local),
+                    "nvlink" => FaultTarget::LinkClass(LinkKind::NvLink),
+                    "ib" => FaultTarget::LinkClass(LinkKind::InfiniBand),
+                    pair => {
+                        let (a, b) = pair.split_once('-').with_context(err)?;
+                        FaultTarget::LinkPair { a: a.parse()?, b: b.parse()? }
+                    }
+                };
+                Ok(FaultEvent::LinkDegrade {
+                    target,
+                    mult: mult.parse()?,
+                    t_start: t0.parse()?,
+                    t_end: t1.parse()?,
+                })
+            }
+            "dev" => {
+                let (dev, rest) = rest.split_once(':').with_context(err)?;
+                let dev: usize = dev.parse()?;
+                if let Some(rest) = rest.strip_prefix("slow:") {
+                    let (mult, window) = rest.split_once('@').with_context(err)?;
+                    let (t0, t1) = window.split_once("..").with_context(err)?;
+                    Ok(FaultEvent::DeviceSlow {
+                        dev,
+                        mult: mult.parse()?,
+                        t_start: t0.parse()?,
+                        t_end: t1.parse()?,
+                    })
+                } else if let Some(rest) = rest.strip_prefix("stall@") {
+                    let (t, dur) = rest.split_once('+').with_context(err)?;
+                    Ok(FaultEvent::DeviceStall { dev, t: t.parse()?, dur: dur.parse()? })
+                } else {
+                    bail!("{}: expected dev:<D>:slow:... or dev:<D>:stall@...", err())
+                }
+            }
+            _ => bail!("{}: expected link:... or dev:...", err()),
+        }
+    }
+}
+
+/// An explicit, time-ordered trace of fault events for one simulated run.
+/// Built directly, parsed from CLI specs ([`FaultPlan::parse`]), or
+/// expanded from a seed ([`FaultPlan::random`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Events, ordered by start time (ties keep insertion order).
+    pub events: Vec<FaultEvent>,
+}
+
+/// Cap on the seeded generator's candidate stream. Real transient-fault
+/// scenarios name a handful of incidents per run, not a storm; the cap
+/// also bounds the engine's per-boundary recompute work.
+pub const MAX_RANDOM_FAULTS: usize = 16;
+
+impl FaultPlan {
+    /// A plan with no events — bit-identical to a fault-free run.
+    pub fn empty() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Build from explicit events, sorting by start time (stable: equal
+    /// starts keep the given order).
+    pub fn from_events(mut events: Vec<FaultEvent>) -> FaultPlan {
+        events.sort_by(|a, b| a.start().total_cmp(&b.start()));
+        FaultPlan { events }
+    }
+
+    /// Parse a comma-separated list of CLI fault specs (see
+    /// [`FaultEvent::parse`]).
+    pub fn parse(specs: &str) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for spec in specs.split(',').filter(|s| !s.trim().is_empty()) {
+            events.push(FaultEvent::parse(spec.trim())?);
+        }
+        Ok(FaultPlan::from_events(events))
+    }
+
+    /// Expand `(seed, intensity)` into an explicit trace over
+    /// `[0, horizon)` seconds on an `n_devices`-device cluster.
+    ///
+    /// Deterministic and *prefix-monotone in intensity*: the candidate
+    /// stream (times, kinds, targets, base severities) is drawn from the
+    /// seed alone; intensity selects a monotone prefix of it
+    /// (`ceil(intensity · MAX_RANDOM_FAULTS)` events, capped) and scales
+    /// each severity monotonically — link rate `1/(1 + intensity·s)`,
+    /// compute mult `1 + intensity·s`, stall length `intensity·s·h/8`.
+    /// `intensity = 0` is the empty plan.
+    pub fn random(seed: u64, intensity: f64, horizon: f64, n_devices: usize) -> Result<FaultPlan> {
+        ensure!(
+            intensity.is_finite() && intensity >= 0.0,
+            "fault intensity must be finite and >= 0 (got {intensity})"
+        );
+        ensure!(
+            horizon.is_finite() && horizon > 0.0,
+            "fault horizon must be finite and > 0 (got {horizon})"
+        );
+        ensure!(n_devices >= 1, "need at least one device");
+        let mut rng = Prng::new(seed);
+        // Fixed candidate stream: every draw happens regardless of
+        // intensity, so two intensities share the exact same candidates.
+        let mut candidates = Vec::with_capacity(MAX_RANDOM_FAULTS);
+        for _ in 0..MAX_RANDOM_FAULTS {
+            let t0 = rng.f64() * 0.9 * horizon;
+            let t1 = (t0 + (0.05 + 0.25 * rng.f64()) * horizon).min(horizon);
+            let kind = rng.below(3);
+            let dev = rng.range(0, n_devices);
+            let pair = rng.chance(0.5);
+            let peer = rng.range(0, n_devices.max(2));
+            let sev = 0.25 + 0.75 * rng.f64();
+            candidates.push((t0, t1, kind, dev, pair, peer, sev));
+        }
+        let count = ((intensity * MAX_RANDOM_FAULTS as f64).ceil() as usize).min(MAX_RANDOM_FAULTS);
+        let mut events = Vec::with_capacity(count);
+        for &(t0, t1, kind, dev, pair, peer, sev) in candidates.iter().take(count) {
+            events.push(match kind {
+                0 => {
+                    let target = if pair && n_devices >= 2 {
+                        let b = if peer == dev { (peer + 1) % n_devices } else { peer };
+                        FaultTarget::LinkPair { a: dev, b }
+                    } else {
+                        FaultTarget::LinkClass(LinkKind::InfiniBand)
+                    };
+                    FaultEvent::LinkDegrade {
+                        target,
+                        mult: 1.0 / (1.0 + intensity * sev),
+                        t_start: t0,
+                        t_end: t1,
+                    }
+                }
+                1 => FaultEvent::DeviceSlow {
+                    dev,
+                    mult: 1.0 + intensity * sev,
+                    t_start: t0,
+                    t_end: t1,
+                },
+                _ => FaultEvent::DeviceStall {
+                    dev,
+                    t: t0,
+                    dur: intensity * sev * horizon / 8.0,
+                },
+            });
+        }
+        Ok(FaultPlan::from_events(events))
+    }
+
+    /// Check every event against an `n_devices`-device cluster. The
+    /// engine assumes a validated plan; [`crate::sim::simulate_faulted`]
+    /// calls this on entry.
+    pub fn validate(&self, n_devices: usize) -> Result<()> {
+        for (i, ev) in self.events.iter().enumerate() {
+            let check_dev = |dev: usize| -> Result<()> {
+                ensure!(dev < n_devices, "fault {i}: device {dev} out of range (P={n_devices})");
+                Ok(())
+            };
+            match *ev {
+                FaultEvent::LinkDegrade { target, mult, t_start, t_end } => {
+                    ensure!(
+                        mult.is_finite() && mult > 0.0 && mult <= 1.0,
+                        "fault {i}: link mult must be in (0, 1] (got {mult}) — faults degrade"
+                    );
+                    ensure!(
+                        t_start.is_finite() && t_start >= 0.0 && t_end.is_finite(),
+                        "fault {i}: window times must be finite and >= 0"
+                    );
+                    ensure!(t_end > t_start, "fault {i}: empty window [{t_start}, {t_end})");
+                    if let FaultTarget::LinkPair { a, b } = target {
+                        check_dev(a)?;
+                        check_dev(b)?;
+                        ensure!(a != b, "fault {i}: link pair {a}-{b} is not a link");
+                    }
+                }
+                FaultEvent::DeviceSlow { dev, mult, t_start, t_end } => {
+                    check_dev(dev)?;
+                    ensure!(
+                        mult.is_finite() && mult >= 1.0,
+                        "fault {i}: slow mult must be >= 1 (got {mult}) — faults degrade"
+                    );
+                    ensure!(
+                        t_start.is_finite() && t_start >= 0.0 && t_end.is_finite(),
+                        "fault {i}: window times must be finite and >= 0"
+                    );
+                    ensure!(t_end > t_start, "fault {i}: empty window [{t_start}, {t_end})");
+                }
+                FaultEvent::DeviceStall { dev, t, dur } => {
+                    check_dev(dev)?;
+                    ensure!(
+                        t.is_finite() && t >= 0.0 && dur.is_finite() && dur >= 0.0,
+                        "fault {i}: stall needs finite t >= 0 and dur >= 0"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Start times of every [`FaultEvent::DeviceStall`] — the plan's
+    /// device-failure proxies, which [`RecoveryModel::wall_clock`] prices
+    /// as checkpoint-restart events.
+    pub fn stall_times(&self) -> Vec<f64> {
+        self.events
+            .iter()
+            .filter_map(|ev| match *ev {
+                FaultEvent::DeviceStall { t, .. } => Some(t),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// Deterministic checkpoint-restart price model: periodic checkpoints tax
+/// every interval, and each device failure rolls the run back to its last
+/// completed checkpoint and pays a reload. Used by the resilience sweep
+/// to report recovery overhead next to raw throughput-retained.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryModel {
+    /// Useful-work seconds between checkpoints (> 0).
+    pub ckpt_interval: f64,
+    /// Seconds to write one checkpoint (>= 0).
+    pub ckpt_cost: f64,
+    /// Seconds to restart and reload the last checkpoint after a failure
+    /// (>= 0).
+    pub reload_cost: f64,
+}
+
+impl Default for RecoveryModel {
+    /// Checkpoint every 10 iterations' worth of the golden-grid BERT
+    /// iteration (~0.1 s each), 20% of an interval to write, half an
+    /// interval to reload — round numbers in the regime the testbed's
+    /// NVMe-vs-HBM bandwidth ratio implies.
+    fn default() -> Self {
+        RecoveryModel { ckpt_interval: 1.0, ckpt_cost: 0.2, reload_cost: 0.5 }
+    }
+}
+
+impl RecoveryModel {
+    /// Wall-clock seconds to complete `work` seconds of useful training
+    /// given failures at the (wall-clock) times in `failures`. Closed
+    /// form, deterministic: failures are sorted with `f64::total_cmp`,
+    /// each one rolls progress back to the last checkpoint boundary and
+    /// pays `reload_cost`; checkpointing itself stretches useful work by
+    /// `(interval + ckpt_cost) / interval`. Failures landing after the
+    /// run finishes (or during a reload) are ignored.
+    pub fn wall_clock(&self, work: f64, failures: &[f64]) -> f64 {
+        assert!(self.ckpt_interval > 0.0, "checkpoint interval must be > 0");
+        let overhead = (self.ckpt_interval + self.ckpt_cost) / self.ckpt_interval;
+        let mut sorted: Vec<f64> = failures.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let mut wall = 0.0;
+        let mut progress = 0.0;
+        for &fw in &sorted {
+            if fw <= wall {
+                continue; // struck during a reload / before the restart
+            }
+            if fw >= wall + (work - progress) * overhead {
+                break; // the run finishes before this failure lands
+            }
+            progress += (fw - wall) / overhead;
+            progress = (progress / self.ckpt_interval).floor() * self.ckpt_interval;
+            wall = fw + self.reload_cost;
+        }
+        wall + (work - progress) * overhead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_every_spec_shape() {
+        let p = FaultPlan::parse(
+            "link:ib:0.25@2.0..5.0,link:0-1:0.5@1.0..2.0,dev:3:slow:1.5@2.0..5.0,dev:3:stall@1.5+0.4",
+        )
+        .unwrap();
+        assert_eq!(p.events.len(), 4);
+        // from_events sorted by start time.
+        assert_eq!(
+            p.events[0],
+            FaultEvent::LinkDegrade {
+                target: FaultTarget::LinkPair { a: 0, b: 1 },
+                mult: 0.5,
+                t_start: 1.0,
+                t_end: 2.0
+            }
+        );
+        assert_eq!(p.events[1], FaultEvent::DeviceStall { dev: 3, t: 1.5, dur: 0.4 });
+        assert!(matches!(
+            p.events[2],
+            FaultEvent::LinkDegrade { target: FaultTarget::LinkClass(LinkKind::InfiniBand), .. }
+        ));
+        p.validate(8).unwrap();
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "nope",
+            "link:ib:0.25",
+            "link:ib",
+            "dev:3:stall@1.5",
+            "dev:3:freeze@1.5+0.4",
+            "link:0:0.5@1.0..2.0",
+        ] {
+            assert!(FaultEvent::parse(bad).is_err(), "{bad} parsed");
+        }
+    }
+
+    #[test]
+    fn validate_enforces_degrade_only() {
+        let speedup = FaultPlan::from_events(vec![FaultEvent::LinkDegrade {
+            target: FaultTarget::LinkClass(LinkKind::InfiniBand),
+            mult: 1.5,
+            t_start: 0.0,
+            t_end: 1.0,
+        }]);
+        assert!(speedup.validate(4).is_err());
+        let fast_dev = FaultPlan::from_events(vec![FaultEvent::DeviceSlow {
+            dev: 0,
+            mult: 0.5,
+            t_start: 0.0,
+            t_end: 1.0,
+        }]);
+        assert!(fast_dev.validate(4).is_err());
+        let out_of_range =
+            FaultPlan::from_events(vec![FaultEvent::DeviceStall { dev: 9, t: 0.0, dur: 1.0 }]);
+        assert!(out_of_range.validate(4).is_err());
+        let empty_window = FaultPlan::from_events(vec![FaultEvent::DeviceSlow {
+            dev: 0,
+            mult: 2.0,
+            t_start: 1.0,
+            t_end: 1.0,
+        }]);
+        assert!(empty_window.validate(4).is_err());
+    }
+
+    #[test]
+    fn random_is_deterministic_and_prefix_monotone() {
+        let a = FaultPlan::random(7, 0.5, 10.0, 8).unwrap();
+        let b = FaultPlan::random(7, 0.5, 10.0, 8).unwrap();
+        assert_eq!(a, b);
+        assert!(FaultPlan::random(7, 0.0, 10.0, 8).unwrap().is_empty());
+        // Higher intensity keeps every lower-intensity event's identity
+        // (kind, target, window) and only worsens severities / appends.
+        let lo = FaultPlan::random(7, 0.25, 10.0, 8).unwrap();
+        let hi = FaultPlan::random(7, 1.0, 10.0, 8).unwrap();
+        assert!(hi.events.len() >= lo.events.len());
+        lo.validate(8).unwrap();
+        hi.validate(8).unwrap();
+        for ev in &lo.events {
+            let start = ev.start();
+            let twin = hi.events.iter().find(|h| h.start() == start).expect("prefix event kept");
+            match (*ev, *twin) {
+                (
+                    FaultEvent::LinkDegrade { mult: m_lo, target: t_lo, .. },
+                    FaultEvent::LinkDegrade { mult: m_hi, target: t_hi, .. },
+                ) => {
+                    assert_eq!(t_lo, t_hi);
+                    assert!(m_hi <= m_lo);
+                }
+                (
+                    FaultEvent::DeviceSlow { mult: m_lo, dev: d_lo, .. },
+                    FaultEvent::DeviceSlow { mult: m_hi, dev: d_hi, .. },
+                ) => {
+                    assert_eq!(d_lo, d_hi);
+                    assert!(m_hi >= m_lo);
+                }
+                (
+                    FaultEvent::DeviceStall { dur: d_lo, .. },
+                    FaultEvent::DeviceStall { dur: d_hi, .. },
+                ) => assert!(d_hi >= d_lo),
+                (a, b) => panic!("event kind changed with intensity: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn random_different_seeds_differ() {
+        let a = FaultPlan::random(1, 0.5, 10.0, 8).unwrap();
+        let b = FaultPlan::random(2, 0.5, 10.0, 8).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn recovery_no_failures_is_pure_checkpoint_tax() {
+        let m = RecoveryModel { ckpt_interval: 1.0, ckpt_cost: 0.2, reload_cost: 0.5 };
+        let t = m.wall_clock(10.0, &[]);
+        assert!((t - 12.0).abs() < 1e-12, "{t}");
+    }
+
+    #[test]
+    fn recovery_failure_rolls_back_to_boundary() {
+        let m = RecoveryModel { ckpt_interval: 1.0, ckpt_cost: 0.0, reload_cost: 0.5 };
+        // Failure at wall 2.5 (progress 2.5): roll back to 2.0, pay 0.5
+        // reload, then 8.0 of work remain -> 2.5 + 0.5 + 8.0 = 11.0.
+        let t = m.wall_clock(10.0, &[2.5]);
+        assert!((t - 11.0).abs() < 1e-12, "{t}");
+        // A failure after completion changes nothing.
+        let t = m.wall_clock(10.0, &[99.0]);
+        assert!((t - 10.0).abs() < 1e-12, "{t}");
+    }
+
+    #[test]
+    fn recovery_more_failures_never_faster() {
+        let m = RecoveryModel::default();
+        let one = m.wall_clock(10.0, &[3.0]);
+        let two = m.wall_clock(10.0, &[3.0, 7.0]);
+        assert!(two >= one, "{two} < {one}");
+        assert!(one >= m.wall_clock(10.0, &[]));
+    }
+
+    #[test]
+    fn stall_times_are_the_failure_proxies() {
+        let p = FaultPlan::parse("dev:0:stall@1.0+0.1,link:ib:0.5@0.0..1.0,dev:1:stall@3.0+0.1")
+            .unwrap();
+        assert_eq!(p.stall_times(), vec![1.0, 3.0]);
+    }
+}

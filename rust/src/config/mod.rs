@@ -6,12 +6,14 @@
 //! file/CLI parser (`parse_kv`) so the launcher needs no external crates.
 
 mod cluster;
+mod fault;
 mod model;
 mod parallel;
 
 pub use cluster::{
     ClusterConfig, IbModel, LinkId, LinkKind, MappingPolicy, ResourceId, NO_RESOURCE,
 };
+pub use fault::{FaultEvent, FaultPlan, FaultTarget, RecoveryModel, MAX_RANDOM_FAULTS};
 pub use model::{ModelConfig, BERT_64, GPT_96, GPT_TINY, GPT_SMALL};
 pub use parallel::ParallelConfig;
 

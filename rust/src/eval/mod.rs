@@ -44,7 +44,8 @@ pub const ALL_IDS: [&str; 15] = [
 ];
 
 /// Extended set (appendix artifacts + repo extensions).
-pub const EXTRA_IDS: [&str; 5] = ["fig12", "fig13", "table7", "tableb", "degradation"];
+pub const EXTRA_IDS: [&str; 6] =
+    ["fig12", "fig13", "table7", "tableb", "degradation", "resilience"];
 
 /// Dispatch one artifact by id ("table2", "fig9", ... or "all").
 pub fn run(id: &str) -> Result<Vec<EvalOutput>> {
@@ -70,6 +71,7 @@ pub fn run(id: &str) -> Result<Vec<EvalOutput>> {
         "table7" => one(table7()?),
         "tableb" => one(tableb()?),
         "degradation" => one(degradation()?),
+        "resilience" => one(resilience()?),
         "all" => {
             let mut out = Vec::new();
             for id in ALL_IDS.iter().chain(EXTRA_IDS.iter()) {

@@ -4,7 +4,7 @@
 //! family against the BitPipe portfolio (Table B).
 
 use super::EvalOutput;
-use crate::config::{ClusterConfig, ParallelConfig, BERT_64, GPT_96};
+use crate::config::{ClusterConfig, ParallelConfig, RecoveryModel, BERT_64, GPT_96};
 use crate::schedule::{self, analysis, Costs, ScheduleConfig, ScheduleKind, SyncPolicy};
 use crate::sim::{self, GridSpace, SimConfig};
 use crate::util::Table;
@@ -291,6 +291,73 @@ pub fn degradation() -> Result<EvalOutput> {
     Ok(EvalOutput {
         id: "degradation",
         title: "Degradation sweep: throughput retained under a straggler",
+        body,
+    })
+}
+
+/// Resilience sweep (extension, not in the paper): how much throughput
+/// each schedule family retains under seeded, time-varying fault traces
+/// ([`crate::config::FaultPlan::random`]) of rising intensity — degraded
+/// IB links, slowed devices, mid-iteration stalls — replayed by the event
+/// engine's fault arm. All families at one D share the same seeded trace,
+/// so columns compare like with like. The last column prices
+/// checkpoint-restart ([`RecoveryModel`]) on the worst trace: its stalls
+/// read as device failures over a ten-iteration run, each rolling progress
+/// back to the last checkpoint boundary.
+pub fn resilience() -> Result<EvalOutput> {
+    const INTENSITIES: [f64; 5] = [0.0, 0.25, 0.5, 0.75, 1.0];
+    const SEED: u64 = 42;
+    const HORIZON: f64 = 2.0;
+    let recovery = RecoveryModel::default();
+    let mut body = String::new();
+    for d in [4usize, 8] {
+        let n = 2 * d;
+        let layouts: Vec<ParallelConfig> = [
+            ScheduleKind::Dapple,
+            ScheduleKind::Interleaved,
+            ScheduleKind::MixPipe,
+            ScheduleKind::BitPipe,
+            ScheduleKind::ZeroBubble,
+        ]
+        .into_iter()
+        .map(|kind| ParallelConfig::new(kind, 1, d, 4, n))
+        .collect();
+        let cluster = ClusterConfig::paper_testbed(d);
+        let points =
+            sim::resilience_sweep(&BERT_64, &cluster, &layouts, &INTENSITIES, SEED, HORIZON)?;
+        let mut t = Table::new(vec![
+            "approach", "healthy thr", "i=0.25", "i=0.50", "i=0.75", "i=1.00", "w/ recovery",
+        ]);
+        for (li, layout) in layouts.iter().enumerate() {
+            let chunk = &points[li * INTENSITIES.len()..(li + 1) * INTENSITIES.len()];
+            let healthy = chunk[0].result.throughput;
+            let mut cells = vec![layout.kind.name().to_string(), format!("{healthy:.2}")];
+            for p in &chunk[1..] {
+                cells.push(format!("{:.1}%", 100.0 * p.result.throughput / healthy));
+            }
+            let worst = chunk.last().expect("at least one intensity");
+            let work = 10.0 * worst.result.iter_time;
+            let wall = recovery.wall_clock(work, &worst.plan.stall_times());
+            let thr = 10.0 * layout.minibatch_size() as f64 / wall;
+            cells.push(format!("{:.1}%", 100.0 * thr / healthy));
+            t.row(cells);
+        }
+        let _ = writeln!(
+            body,
+            "BERT-64, D={d}, N={n}, B=4, W=1 (seeded trace {SEED}, horizon {HORIZON:.1}s):\n{}",
+            t.render()
+        );
+    }
+    body.push_str(
+        "Throughput retained vs the healthy run as the seeded fault trace intensifies.\n\
+         Families with more bubble (DAPPLE) absorb early-window faults for free, while\n\
+         BitPipe's doubled concurrency and zero-bubble's deferred W expose more of the\n\
+         iteration to a mid-pipeline stall; the recovery column adds the checkpoint tax\n\
+         and rollback-reload cost when the trace's stalls are read as failures.\n",
+    );
+    Ok(EvalOutput {
+        id: "resilience",
+        title: "Resilience sweep: throughput retained under fault traces",
         body,
     })
 }

@@ -10,13 +10,17 @@
 //!                    [--network inc|global]
 //!                    [--straggler DEV:MULT[,DEV:MULT...]]
 //!                    [--link-override local|nvlink|ib:MULT or A-B:MULT[,...]]
+//!                    [--fault SPEC[,SPEC...]] (repeatable; e.g.
+//!                      link:ib:0.25@2.0..5.0  dev:3:slow:1.5@2.0..5.0
+//!                      dev:3:stall@1.5+0.4)
+//!                    [--fault-seed N [--fault-intensity I] [--fault-horizon T]]
 //! bitpipe lint       [--kind bitpipe|all] [--d 4] [--n 8] [--v 2]
 //!                    [--sync eager|lazy] [--json]
 //! bitpipe eval-paper [--only table2,fig9,...] (default: all)
 //! bitpipe train      --artifacts DIR --kind bitpipe --d 4 --n 8 --steps 50
 //!                    [--dataset synthetic|corpus] [--lr 1e-3] [--seed 42]
 //!                    [--log-every 10] [--sync eager|lazy]
-//!                    [--save CKPT_DIR] [--resume CKPT_DIR]
+//!                    [--save CKPT_DIR [--save-every K]] [--resume CKPT_DIR]
 //! bitpipe inspect    --artifacts DIR [--artifact NAME]
 //! ```
 //!
@@ -25,7 +29,7 @@
 
 use anyhow::{bail, Context, Result};
 use bitpipe::config::{
-    ClusterConfig, IbModel, LinkKind, MappingPolicy, ModelConfig, ParallelConfig,
+    ClusterConfig, FaultPlan, IbModel, LinkKind, MappingPolicy, ModelConfig, ParallelConfig,
 };
 use bitpipe::schedule::{self, timeline, Costs, ScheduleConfig, ScheduleKind, SyncPolicy};
 use bitpipe::sim::{self, Engine, NetworkImpl, SimConfig};
@@ -78,21 +82,32 @@ fn print_usage() {
     );
 }
 
-/// `--key value` pairs (plus bare `--flag` booleans).
+/// `--key value` pairs (plus bare `--flag` booleans). A repeated flag
+/// accumulates comma-joined, so `--fault A --fault B` equals
+/// `--fault A,B` (every list-valued flag already splits on commas).
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
-    let mut out = HashMap::new();
+    let mut out: HashMap<String, String> = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
         let Some(key) = a.strip_prefix("--") else {
             bail!("expected --flag, got {a:?}");
         };
-        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-            out.insert(key.to_string(), args[i + 1].clone());
+        let value = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
             i += 2;
+            args[i - 1].clone()
         } else {
-            out.insert(key.to_string(), "true".to_string());
             i += 1;
+            "true".to_string()
+        };
+        match out.entry(key.to_string()) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                let joined = format!("{},{}", e.get(), value);
+                e.insert(joined);
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(value);
+            }
         }
     }
     Ok(out)
@@ -106,6 +121,13 @@ fn get_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Resu
     match get(flags, key) {
         None => Ok(default),
         Some(v) => v.parse().with_context(|| format!("--{key} {v}: not an integer")),
+    }
+}
+
+fn get_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> Result<f64> {
+    match get(flags, key) {
+        None => Ok(default),
+        Some(v) => v.parse().with_context(|| format!("--{key} {v}: not a number")),
     }
 }
 
@@ -287,13 +309,30 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     if get(flags, "network").is_some() && !contention {
         bail!("--network only applies with --contention");
     }
+    // Fault injection: explicit `--fault` specs (repeatable or
+    // comma-separated) plus an optional seeded trace, merged into one
+    // time-ordered plan replayed by the event engine.
+    let mut fault_events = Vec::new();
+    if let Some(spec) = get(flags, "fault") {
+        fault_events.extend(FaultPlan::parse(spec)?.events);
+    }
+    if let Some(seed) = get(flags, "fault-seed") {
+        let seed: u64 =
+            seed.parse().with_context(|| format!("--fault-seed {seed}: not an integer"))?;
+        let intensity = get_f64(flags, "fault-intensity", 1.0)?;
+        let horizon = get_f64(flags, "fault-horizon", 2.0)?;
+        fault_events.extend(FaultPlan::random(seed, intensity, horizon, d)?.events);
+    } else if flags.contains_key("fault-intensity") || flags.contains_key("fault-horizon") {
+        bail!("--fault-intensity/--fault-horizon only apply with --fault-seed");
+    }
+    let faults = FaultPlan::from_events(fault_events);
 
     let cfg = SimConfig::new(model, parallel, cluster)
         .with_contention(contention)
         .with_engine(engine)
         .with_network(network);
     println!(
-        "model={} kind={} W={w} D={d} B={b} N={n} (mini-batch {}){}{}",
+        "model={} kind={} W={w} D={d} B={b} N={n} (mini-batch {}){}{}{}",
         model.name,
         kind,
         parallel.minibatch_size(),
@@ -302,6 +341,11 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
             Engine::Auto => "",
             Engine::Event => " [event engine]",
             Engine::Dag => " [dag engine]",
+        },
+        if faults.is_empty() {
+            String::new()
+        } else {
+            format!(" [{} fault event(s)]", faults.events.len())
         },
     );
 
@@ -315,7 +359,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     if iters > 1 {
         // Multi-iteration run: per-iteration times + steady-state stats.
         let warmup = get_usize(flags, "warmup", 1.min(iters - 1))?;
-        let mr = sim::simulate_iters(&cfg, iters, warmup)?;
+        let mr = sim::simulate_iters_faulted(&cfg, iters, warmup, &faults)?;
         for (k, t) in mr.iter_times.iter().enumerate() {
             let label = if k < warmup { " (warmup)" } else { "" };
             println!("  iter {k}: {:.4} s{label}", t);
@@ -329,7 +373,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         return Ok(());
     }
 
-    let r = sim::simulate(&cfg)?;
+    let r = sim::simulate_faulted(&cfg, &faults)?;
     println!("iteration time: {:.4} s", r.iter_time);
     println!("throughput:     {:.2} samples/s", r.throughput);
     println!("bubble frac:    {:.4}", r.bubble_fraction);
@@ -377,6 +421,10 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         other => bail!("--dataset must be synthetic|corpus, got {other:?}"),
     };
     cfg.save_to = get(flags, "save").map(Into::into);
+    cfg.save_every = get_usize(flags, "save-every", 0)?;
+    if cfg.save_every > 0 && cfg.save_to.is_none() {
+        bail!("--save-every only applies with --save");
+    }
     cfg.resume_from = get(flags, "resume").map(Into::into);
 
     println!(

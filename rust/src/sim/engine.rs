@@ -161,6 +161,49 @@
 //! asynchronous for the *sender* either way; collective flows enter at
 //! the latest member launch time (or later, behind a queued predecessor).
 //!
+//! # Fault injection (time-varying degradation)
+//!
+//! [`simulate_schedule_iters_faulted`] replays a
+//! [`crate::config::FaultPlan`] — an explicit, time-ordered trace of
+//! `LinkDegrade` / `DeviceSlow` windows and `DeviceStall` events —
+//! against the streams. Every window boundary is pushed onto the event
+//! heap up front as a `Fault` event (rank 0: at equal times a boundary
+//! applies before any transfer or compute observes it, and boundaries
+//! apply in plan order). The semantics, pinned by `rust/tests/faults.rs`
+//! and mirrored 1:1 in the pymirror:
+//!
+//! * **Link windows** scale a set of dense resources (resolved through
+//!   [`CostModel::p2p_edge`], so class selectors like `ib` catch exactly
+//!   the wires flows actually ride). At a boundary the affected rates are
+//!   recomputed *from scratch* as the product of all active windows (never
+//!   multiplied back out — fp-deterministic), then only the flows
+//!   occupying an affected resource are settled at their old rate and
+//!   re-projected at the new one, riding the PR-5 incremental-settlement
+//!   and versioned re-projection machinery. A flow on a degraded resource
+//!   progresses at `rate/k` — its effective share becomes `k / rate`, so a
+//!   *solo* flow on a degraded link slows down too (latency still drains
+//!   at wall rate; only byte-work is scaled). Fixed-duration transfers
+//!   ([`Contention::Off`]) are priced at their dispatch-time rate — a
+//!   window opening mid-flight does not re-time them (documented policy).
+//!   Analytic collectives (`Off`/`P2pOnly`) are *not* fault-scaled;
+//!   under [`Contention::Full`] ring flows ride the degraded wires
+//!   naturally.
+//! * **Compute windows** (`DeviceSlow`) multiply a device's op costs at
+//!   dispatch: an op started before the window at full speed finishes at
+//!   full speed; the first op dispatched inside the window pays the
+//!   multiplier (the applies-at-next-dispatch policy — ops are atomic).
+//! * **Stalls** pin a device clock forward: `now[dev] =
+//!   max(now[dev], t + dur)` — a device idle past the stall is
+//!   unaffected, a busy one loses exactly the overlap.
+//!
+//! An **empty plan attaches no fault state at all**: the engine's healthy
+//! arithmetic is the pre-fault expressions verbatim, so empty-plan runs
+//! are bit-identical to [`simulate_schedule_iters_network`] on every
+//! mode and strategy. Plans only ever slow things down (degrade-only by
+//! [`FaultPlan::validate`]), and a fixed plan is bitwise-deterministic
+//! across repeated runs and thread counts — the trace is expanded before
+//! the run and the event order is total.
+//!
 //! The pre-event-queue spin-loop executor survives as
 //! `simulate_schedule_reference`, but only for differential testing: it
 //! is compiled under `cfg(any(test, feature = "reference-sim"))` and is
@@ -170,7 +213,7 @@
 //! every schedule family.
 
 use super::cost::CostModel;
-use crate::config::NO_RESOURCE;
+use crate::config::{FaultEvent, FaultPlan, FaultTarget, NO_RESOURCE};
 use crate::schedule::{Instr, Schedule, StageId};
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -353,6 +396,11 @@ impl StreamTables {
 /// What a heap event does when it fires.
 #[derive(Debug, Clone, Copy)]
 enum EvKind {
+    /// A fault-plan boundary (a degradation window opening or closing, or
+    /// a stall landing). Carries the index into the engine's sorted
+    /// boundary schedule; only pushed when a non-empty [`FaultPlan`] is
+    /// attached, so fault-free heaps never contain one.
+    Fault { idx: usize },
     /// A transfer's projected completion (contended mode). Carries the
     /// projection version; stale events are discarded on pop.
     XferDone { id: usize, version: u64 },
@@ -365,15 +413,19 @@ enum EvKind {
 }
 
 impl EvKind {
-    /// Total tie-break order at equal times: deliver completions first
-    /// (messages become visible before devices resume), then flow starts,
-    /// then devices in ascending id — the same device order the
-    /// pre-contention engine used, keeping uncontended traces bit-stable.
+    /// Total tie-break order at equal times: fault boundaries first (the
+    /// network mutates before anything else observes the instant), then
+    /// completions (messages become visible before devices resume), then
+    /// flow starts, then devices in ascending id — the same device order
+    /// the pre-contention engine used. Without fault events the *relative*
+    /// order of the remaining kinds is unchanged, which is what keeps
+    /// empty-plan runs bit-identical to the pre-fault engine.
     fn rank(&self) -> (u8, usize, u64) {
         match *self {
-            EvKind::XferDone { id, version } => (0, id, version),
-            EvKind::XferStart { id } => (1, id, 0),
-            EvKind::Dev(dev) => (2, dev, 0),
+            EvKind::Fault { idx } => (0, idx, 0),
+            EvKind::XferDone { id, version } => (1, id, version),
+            EvKind::XferStart { id } => (2, id, 0),
+            EvKind::Dev(dev) => (3, dev, 0),
         }
     }
 }
@@ -501,6 +553,27 @@ impl Network {
         k.max(1) as f64
     }
 
+    /// Effective share under fault-degraded link rates: a resource running
+    /// at rate `r ∈ (0, 1]` stretches its flows' shared byte-work by
+    /// `1/r`, so the flow behaves as `k / r_min` sharers of a healthy
+    /// pipe — a solo flow on a half-rate link is `k_eff = 2`, draining its
+    /// bytes at half speed while its wire latency still passes at wall
+    /// rate ([`Self::drain`]'s `k > 1` branch). With no fault state
+    /// (`rates` empty) or healthy rates this *is* [`Self::share_of`],
+    /// expression for expression — the empty-plan bit-identity anchor.
+    fn eff_share(res: &[Vec<usize>], rates: &[f64], x: &Xfer) -> f64 {
+        let k = Self::share_of(res, x);
+        if rates.is_empty() {
+            return k;
+        }
+        let r = FaultRt::edge_rate(rates, x.res);
+        if r < 1.0 {
+            k / r
+        } else {
+            k
+        }
+    }
+
     fn slot(&mut self, r: u32) -> &mut Vec<usize> {
         let i = r as usize;
         if i >= self.res.len() {
@@ -574,13 +647,14 @@ impl Network {
     }
 
     /// Global settlement: advance every in-flight flow from the shared
-    /// settle point to `t` at its current fair share.
-    fn settle_global(&mut self, t: f64) {
+    /// settle point to `t` at its current fair share (fault-degraded
+    /// rates included — `rates` is empty on fault-free runs).
+    fn settle_global(&mut self, t: f64, rates: &[f64]) {
         if t > self.last {
             let dt = t - self.last;
             let Network { res, xfers, active, .. } = self;
             for &id in active.iter() {
-                let k = Self::share_of(res, &xfers[id]);
+                let k = Self::eff_share(res, rates, &xfers[id]);
                 Self::drain(&mut xfers[id], dt, k);
             }
             self.last = t;
@@ -601,11 +675,11 @@ impl Network {
     /// share counts, bumping versions so older projections go stale.
     /// Under incremental settlement each touched flow is settled first
     /// and caches its new share; untouched flows keep their projections.
-    fn reproject_scratch(&mut self, t: f64, heap: &mut BinaryHeap<Event>) {
+    fn reproject_scratch(&mut self, t: f64, heap: &mut BinaryHeap<Event>, rates: &[f64]) {
         let ids = std::mem::take(&mut self.scratch);
         let incremental = self.imp == NetworkImpl::Incremental;
         for &id in &ids {
-            let k = Self::share_of(&self.res, &self.xfers[id]);
+            let k = Self::eff_share(&self.res, rates, &self.xfers[id]);
             let x = &mut self.xfers[id];
             if incremental {
                 Self::settle_flow(x, t);
@@ -622,9 +696,9 @@ impl Network {
 
     /// Flow `id` enters the network at `t`: settle, occupy its resources,
     /// re-project everyone whose share the arrival can have changed.
-    fn insert(&mut self, id: usize, t: f64, heap: &mut BinaryHeap<Event>) {
+    fn insert(&mut self, id: usize, t: f64, heap: &mut BinaryHeap<Event>, rates: &[f64]) {
         match self.imp {
-            NetworkImpl::Global => self.settle_global(t),
+            NetworkImpl::Global => self.settle_global(t, rates),
             NetworkImpl::Incremental => {
                 // Nothing to settle yet: the new flow starts its own
                 // clock here (dt = 0 in the reproject below).
@@ -636,21 +710,209 @@ impl Network {
         self.occupy(id);
         self.active.push(id);
         self.collect_sharers(id);
-        self.reproject_scratch(t, heap);
+        self.reproject_scratch(t, heap, rates);
     }
 
     /// Flow `id` completes at `t`: settle, release its resources,
     /// re-project the remaining sharers.
-    fn remove(&mut self, id: usize, t: f64, heap: &mut BinaryHeap<Event>) {
+    fn remove(&mut self, id: usize, t: f64, heap: &mut BinaryHeap<Event>, rates: &[f64]) {
         match self.imp {
-            NetworkImpl::Global => self.settle_global(t),
+            NetworkImpl::Global => self.settle_global(t, rates),
             NetworkImpl::Incremental => Self::settle_flow(&mut self.xfers[id], t),
         }
         self.xfers[id].done = true;
         self.release(id);
         self.active.retain(|&i| i != id);
         self.collect_sharers(id);
-        self.reproject_scratch(t, heap);
+        self.reproject_scratch(t, heap, rates);
+    }
+
+    /// Fill `scratch` with every active flow occupying any of the dense
+    /// resources in `affected` (sorted, deduped) — the set a fault
+    /// boundary must settle and re-project, and nobody else: a rate
+    /// change is invisible to flows whose resources it does not touch,
+    /// exactly like an occupancy change (PR-5 incremental settlement).
+    fn gather_occupants(&mut self, affected: &[u32]) {
+        self.scratch.clear();
+        for &r in affected {
+            if let Some(l) = self.res.get(r as usize) {
+                self.scratch.extend_from_slice(l);
+            }
+        }
+        self.scratch.sort_unstable();
+        self.scratch.dedup();
+    }
+}
+
+/// One link-degradation fault, pre-resolved against the cost model: its
+/// window, bandwidth multiplier, and the dense resources it degrades.
+#[derive(Debug)]
+struct LinkFault {
+    mult: f64,
+    t0: f64,
+    t1: f64,
+    /// Sorted dense resource indices the fault hits (the resources of the
+    /// targeted pipeline-device pairs' pipes, both directions).
+    res: Vec<u32>,
+}
+
+/// What one fault boundary does when its heap event fires.
+#[derive(Debug, Clone, Copy)]
+enum FaultBoundary {
+    /// A link window opened or closed: recompute the rates of the
+    /// resources link fault `ev` touches and re-project their occupants.
+    Link { ev: usize },
+    /// A compute window opened or closed: recompute device `dev`'s
+    /// multiplier. Compute ops take it at their next *dispatch* — an op
+    /// priced before the boundary keeps its price (documented policy,
+    /// pinned by `rust/tests/faults.rs`).
+    Slow { dev: usize },
+    /// A stall landed: pin device `dev`'s clock to at least `until`.
+    Stall { dev: usize, until: f64 },
+}
+
+/// Runtime fault state, attached to the engine only when a non-empty
+/// [`FaultPlan`] is supplied — `None` leaves every historical code path
+/// (and every heap content) untouched, which is the empty-plan
+/// bit-identity guarantee `rust/tests/faults.rs` pins.
+#[derive(Debug)]
+struct FaultRt {
+    links: Vec<LinkFault>,
+    /// `(dev, mult, t0, t1)` per [`FaultEvent::DeviceSlow`], in plan
+    /// order (the deterministic product order of overlapping windows).
+    slows: Vec<(usize, f64, f64, f64)>,
+    /// Boundary schedule, sorted by time (ties keep plan order); heap
+    /// fault events carry indices into it.
+    boundaries: Vec<(f64, FaultBoundary)>,
+    /// Current rate of each dense resource, 1.0 healthy, ∈ (0, 1] —
+    /// recomputed from scratch (never divided back out) at each link
+    /// boundary so repeated crossings are bitwise reproducible.
+    rates: Vec<f64>,
+    /// Current compute multiplier per device (>= 1), recomputed at each
+    /// slow boundary.
+    dev_mult: Vec<f64>,
+}
+
+impl FaultRt {
+    /// Resolve a validated plan against the cost model: link targets
+    /// become dense resource sets (via the same [`CostModel::p2p_edge`]
+    /// table the engine's flows use, so fault resources and flow
+    /// resources can never disagree), and window edges become a sorted
+    /// boundary schedule.
+    fn new(plan: &FaultPlan, costs: &CostModel, d: usize) -> FaultRt {
+        let mut links = Vec::new();
+        let mut slows = Vec::new();
+        let mut boundaries = Vec::new();
+        for ev in &plan.events {
+            match *ev {
+                FaultEvent::LinkDegrade { target, mult, t_start, t_end } => {
+                    let i = links.len();
+                    links.push(LinkFault {
+                        mult,
+                        t0: t_start,
+                        t1: t_end,
+                        res: Self::link_resources(costs, d, target),
+                    });
+                    boundaries.push((t_start, FaultBoundary::Link { ev: i }));
+                    boundaries.push((t_end, FaultBoundary::Link { ev: i }));
+                }
+                FaultEvent::DeviceSlow { dev, mult, t_start, t_end } => {
+                    slows.push((dev, mult, t_start, t_end));
+                    boundaries.push((t_start, FaultBoundary::Slow { dev }));
+                    boundaries.push((t_end, FaultBoundary::Slow { dev }));
+                }
+                FaultEvent::DeviceStall { dev, t, dur } => {
+                    boundaries.push((t, FaultBoundary::Stall { dev, until: t + dur }));
+                }
+            }
+        }
+        boundaries.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let n_res = links
+            .iter()
+            .flat_map(|l| l.res.iter())
+            .map(|&r| r as usize + 1)
+            .max()
+            .unwrap_or(0)
+            .max(costs.cluster.n_resources());
+        FaultRt { links, slows, boundaries, rates: vec![1.0; n_res], dev_mult: vec![1.0; d] }
+    }
+
+    /// Dense resources of every pipe a [`FaultTarget`] names, resolved
+    /// through the cost model's precomputed edge table over pipeline
+    /// devices (both directions of each pair — links are full-duplex but
+    /// a fault hits the hardware, not one direction).
+    fn link_resources(costs: &CostModel, d: usize, target: FaultTarget) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut push_pair = |out: &mut Vec<u32>, a: usize, b: usize| {
+            let res = costs.p2p_edge(a, b).res;
+            out.push(res.0);
+            if res.1 != NO_RESOURCE {
+                out.push(res.1);
+            }
+        };
+        match target {
+            FaultTarget::LinkPair { a, b } => {
+                push_pair(&mut out, a, b);
+                push_pair(&mut out, b, a);
+            }
+            FaultTarget::LinkClass(kind) => {
+                for a in 0..d {
+                    for b in 0..d {
+                        if a != b && costs.p2p_edge(a, b).link.kind == kind {
+                            push_pair(&mut out, a, b);
+                        }
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Current rate of the slower of a flow's resources (1.0 when the
+    /// rates table is absent or the indices are out of range).
+    fn edge_rate(rates: &[f64], res: (u32, u32)) -> f64 {
+        let mut r = rates.get(res.0 as usize).copied().unwrap_or(1.0);
+        if res.1 != NO_RESOURCE {
+            r = r.min(rates.get(res.1 as usize).copied().unwrap_or(1.0));
+        }
+        r
+    }
+
+    /// Recompute the rates of the resources link fault `ev` touches as
+    /// the product of every degradation active at `t` (window `[t0,
+    /// t1)`), in plan order — always the same expression, so crossing the
+    /// same boundary state twice yields bitwise-identical rates.
+    fn recompute_link_rates(&mut self, ev: usize, t: f64) {
+        for i in 0..self.links[ev].res.len() {
+            let r = self.links[ev].res[i];
+            let mut rate = 1.0;
+            for lf in &self.links {
+                if lf.t0 <= t && t < lf.t1 && lf.res.binary_search(&r).is_ok() {
+                    rate *= lf.mult;
+                }
+            }
+            self.rates[r as usize] = rate;
+        }
+    }
+
+    /// Recompute device `dev`'s compute multiplier as the product of its
+    /// degradation windows active at `t`, in plan order.
+    fn recompute_dev_mult(&mut self, dev: usize, t: f64) {
+        let mut mult = 1.0;
+        for &(d2, m, t0, t1) in &self.slows {
+            if d2 == dev && t0 <= t && t < t1 {
+                mult *= m;
+            }
+        }
+        self.dev_mult[dev] = mult;
+    }
+
+    /// Rates slice for share computations: empty when no fault state is
+    /// attached (the fast path every fault-free run takes).
+    fn rates_of(faults: &Option<FaultRt>) -> &[f64] {
+        faults.as_ref().map_or(&[], |f| f.rates.as_slice())
     }
 }
 
@@ -734,6 +996,10 @@ struct Engine<'a> {
     /// every member's queue — the flow-world `comm_free` serialization.
     comm_q: Vec<VecDeque<usize>>,
 
+    /// Fault-plan runtime state; `None` (every fault-free run, including
+    /// empty plans) leaves all historical code paths untouched.
+    faults: Option<FaultRt>,
+
     heap: BinaryHeap<Event>,
     remaining: usize,
     iter_finish: Vec<f64>,
@@ -747,6 +1013,7 @@ impl<'a> Engine<'a> {
         iters: usize,
         mode: Contention,
         network: NetworkImpl,
+        faults: Option<&FaultPlan>,
     ) -> Engine<'a> {
         let d = s.n_devices();
         let per_iter: usize = s.device_ops.iter().map(|o| o.len()).sum();
@@ -775,6 +1042,7 @@ impl<'a> Engine<'a> {
             colls: Vec::new(),
             pending: Vec::new(),
             comm_q: vec![VecDeque::new(); d],
+            faults: faults.filter(|p| !p.is_empty()).map(|p| FaultRt::new(p, costs, d)),
             heap: BinaryHeap::new(),
             remaining: per_iter * iters,
             iter_finish: vec![0.0; iters],
@@ -821,11 +1089,29 @@ impl<'a> Engine<'a> {
             self.send_contended(dev, to, slot);
             return;
         }
-        let arrival = self.now[dev] + self.costs.p2p_time(dev, to);
+        let arrival = self.now[dev] + self.p2p_time_faulted(dev, to);
         self.msgs[slot as usize].push_back(arrival);
         if let Some(waiter) = self.msg_waiters[slot as usize].take() {
             self.wake(waiter, arrival);
         }
+    }
+
+    /// Fixed-duration P2P pricing under faults: the whole transfer is
+    /// priced at the rate in effect at *dispatch* (the fixed-duration
+    /// analogue of the applies-at-next-dispatch compute policy — there is
+    /// no in-flight flow to re-project), with wire latency unscaled as in
+    /// the contended model. Without fault state, or with this edge
+    /// healthy, this is exactly [`CostModel::p2p_time`] — the historical
+    /// expression, verbatim.
+    fn p2p_time_faulted(&self, dev: usize, to: usize) -> f64 {
+        if let Some(f) = &self.faults {
+            let edge = self.costs.p2p_edge(dev, to);
+            let r = FaultRt::edge_rate(&f.rates, edge.res);
+            if r < 1.0 {
+                return edge.lat + (edge.bytes as f64 / edge.bw) / r;
+            }
+        }
+        self.costs.p2p_time(dev, to)
     }
 
     /// Contended send: register the flow and defer its wire entry to the
@@ -860,8 +1146,9 @@ impl<'a> Engine<'a> {
     /// A flow enters the wire at time `t`: settle, occupy its resources,
     /// and re-project the flows it now shares with.
     fn on_xfer_start(&mut self, id: usize, t: f64) {
+        let rates = FaultRt::rates_of(&self.faults);
         let net = self.net.as_mut().expect("transfer event without a network");
-        net.insert(id, t, &mut self.heap);
+        net.insert(id, t, &mut self.heap, rates);
     }
 
     /// A flow's projected completion fires at time `t`. Stale projections
@@ -870,12 +1157,13 @@ impl<'a> Engine<'a> {
     /// and delivers its payload — a P2P message, or one ring hop of a
     /// collective (whose last hop completes the collective).
     fn on_xfer_done(&mut self, id: usize, version: u64, t: f64) {
+        let rates = FaultRt::rates_of(&self.faults);
         let net = self.net.as_mut().expect("transfer event without a network");
         let x = net.xfers[id];
         if x.done || x.version != version {
             return;
         }
-        net.remove(id, t, &mut self.heap);
+        net.remove(id, t, &mut self.heap, rates);
         match x.payload {
             Payload::Msg(slot) => {
                 self.msgs[slot as usize].push_back(t);
@@ -889,6 +1177,57 @@ impl<'a> Engine<'a> {
                     self.complete_collective(c, t);
                 }
             }
+        }
+    }
+
+    /// A fault boundary fires at `t`. Link boundaries mutate the dense
+    /// resource rates and re-settle/re-project *only* the flows occupying
+    /// a mutated resource (riding the incremental-settlement machinery:
+    /// under [`NetworkImpl::Incremental`] each touched flow settles its
+    /// elapsed interval at its cached pre-boundary share before caching
+    /// the new one; under [`NetworkImpl::Global`] everyone settles at the
+    /// old rates first). Slow boundaries recompute the device multiplier,
+    /// which compute ops read at their next dispatch. Stall boundaries
+    /// pin the device clock forward — blocked devices keep the push
+    /// because every wake maxes against `now`.
+    fn on_fault(&mut self, idx: usize, t: f64) {
+        let b = self.faults.as_ref().expect("fault event without fault state").boundaries[idx].1;
+        match b {
+            FaultBoundary::Stall { dev, until } => {
+                if self.now[dev] < until {
+                    self.now[dev] = until;
+                }
+            }
+            FaultBoundary::Slow { dev } => {
+                self.faults.as_mut().expect("fault state").recompute_dev_mult(dev, t);
+            }
+            FaultBoundary::Link { ev } => {
+                if let (Some(net), Some(f)) = (self.net.as_mut(), self.faults.as_ref()) {
+                    if net.imp == NetworkImpl::Global {
+                        net.settle_global(t, &f.rates);
+                    }
+                }
+                self.faults.as_mut().expect("fault state").recompute_link_rates(ev, t);
+                if let (Some(net), Some(f)) = (self.net.as_mut(), self.faults.as_ref()) {
+                    net.gather_occupants(&f.links[ev].res);
+                    net.reproject_scratch(t, &mut self.heap, &f.rates);
+                }
+            }
+        }
+    }
+
+    /// Scale a compute duration by the device's current fault multiplier.
+    /// The policy is applies-at-next-dispatch: the multiplier in effect
+    /// when the op is priced covers the whole op, even if a window opens
+    /// or closes mid-op — and a device running locally ahead of a not-yet
+    /// -fired boundary still uses the old multiplier (pinned by
+    /// `rust/tests/faults.rs`). Fault-free runs skip the multiply
+    /// entirely.
+    #[inline]
+    fn fault_scaled(&self, dev: usize, c: f64) -> f64 {
+        match &self.faults {
+            Some(f) if f.dev_mult[dev] != 1.0 => c * f.dev_mult[dev],
+            _ => c,
         }
     }
 
@@ -1052,22 +1391,22 @@ impl<'a> Engine<'a> {
             // the flat pricing this loop used before heterogeneity.
             match ops[self.ix[dev]] {
                 Instr::Forward { stage, .. } => {
-                    let c = self.costs.fwd_time(dev, stage);
+                    let c = self.fault_scaled(dev, self.costs.fwd_time(dev, stage));
                     self.now[dev] += c;
                     self.trace[dev].compute_busy += c;
                 }
                 Instr::Backward { stage, .. } => {
-                    let c = self.costs.bwd_time(dev, stage);
+                    let c = self.fault_scaled(dev, self.costs.bwd_time(dev, stage));
                     self.now[dev] += c;
                     self.trace[dev].compute_busy += c;
                 }
                 Instr::BackwardInput { stage, .. } => {
-                    let c = self.costs.bwd_input_time(dev, stage);
+                    let c = self.fault_scaled(dev, self.costs.bwd_input_time(dev, stage));
                     self.now[dev] += c;
                     self.trace[dev].compute_busy += c;
                 }
                 Instr::BackwardWeight { stage, .. } => {
-                    let c = self.costs.bwd_weight_time(dev, stage);
+                    let c = self.fault_scaled(dev, self.costs.bwd_weight_time(dev, stage));
                     self.now[dev] += c;
                     self.trace[dev].compute_busy += c;
                 }
@@ -1134,12 +1473,18 @@ impl<'a> Engine<'a> {
 
     fn run(mut self) -> Result<MultiIterTrace, SimError> {
         let d = self.s.n_devices();
+        if let Some(f) = &self.faults {
+            for (idx, &(t, _)) in f.boundaries.iter().enumerate() {
+                self.heap.push(Event { time: t, kind: EvKind::Fault { idx } });
+            }
+        }
         for dev in 0..d {
             self.heap.push(Event { time: 0.0, kind: EvKind::Dev(dev) });
         }
         while let Some(ev) = self.heap.pop() {
             match ev.kind {
                 EvKind::Dev(dev) => self.run_device(dev),
+                EvKind::Fault { idx } => self.on_fault(idx, ev.time),
                 EvKind::XferStart { id } => self.on_xfer_start(id, ev.time),
                 EvKind::XferDone { id, version } => self.on_xfer_done(id, version, ev.time),
             }
@@ -1253,6 +1598,39 @@ pub fn simulate_schedule_iters_network(
     simulate_streams_lowered(s, costs, iters, mode, network, &tables)
 }
 
+/// Single-iteration run replaying a [`FaultPlan`] (see
+/// [`simulate_schedule_iters_faulted`]).
+pub fn simulate_schedule_faulted(
+    s: &Schedule,
+    costs: &CostModel,
+    mode: Contention,
+    faults: &FaultPlan,
+) -> Result<SimTrace, SimError> {
+    let t = simulate_schedule_iters_faulted(s, costs, 1, mode, NetworkImpl::default(), faults)?;
+    Ok(SimTrace { devices: t.devices, makespan: t.makespan })
+}
+
+/// Multi-iteration run replaying a [`FaultPlan`] against the streams:
+/// link windows degrade dense resource rates (in-flight flows re-settled
+/// and re-projected at each boundary; fixed-duration transfers priced at
+/// the dispatch-time rate), compute windows multiply per-device op costs
+/// at dispatch, and stalls pin device clocks forward. An empty plan is
+/// bit-identical to [`simulate_schedule_iters_network`] on every mode —
+/// the engine then attaches no fault state at all. The caller is expected
+/// to have run [`FaultPlan::validate`]; the plan-aware `crate::sim`
+/// entry points do.
+pub fn simulate_schedule_iters_faulted(
+    s: &Schedule,
+    costs: &CostModel,
+    iters: usize,
+    mode: Contention,
+    network: NetworkImpl,
+    faults: &FaultPlan,
+) -> Result<MultiIterTrace, SimError> {
+    let tables = StreamTables::build(s);
+    simulate_streams_faulted(s, costs, iters, mode, network, &tables, Some(faults))
+}
+
 /// The innermost entry point: run pre-lowered streams. The contended
 /// sweep's `StreamCache` calls this directly with a cached
 /// [`StreamTables`], skipping the per-run message-key interning; `tables`
@@ -1265,6 +1643,20 @@ pub(crate) fn simulate_streams_lowered(
     network: NetworkImpl,
     tables: &StreamTables,
 ) -> Result<MultiIterTrace, SimError> {
+    simulate_streams_faulted(s, costs, iters, mode, network, tables, None)
+}
+
+/// [`simulate_streams_lowered`] with an optional fault plan — the one
+/// place an [`Engine`] is constructed.
+pub(crate) fn simulate_streams_faulted(
+    s: &Schedule,
+    costs: &CostModel,
+    iters: usize,
+    mode: Contention,
+    network: NetworkImpl,
+    tables: &StreamTables,
+    faults: Option<&FaultPlan>,
+) -> Result<MultiIterTrace, SimError> {
     assert!(iters >= 1, "need at least one iteration");
     assert!(
         !s.device_ops.is_empty(),
@@ -1275,7 +1667,7 @@ pub(crate) fn simulate_streams_lowered(
         s.device_ops.iter().map(Vec::len).collect::<Vec<_>>(),
         "stream tables built from a different schedule"
     );
-    Engine::new(s, costs, tables, iters, mode, network).run()
+    Engine::new(s, costs, tables, iters, mode, network, faults).run()
 }
 
 /// The pre-event-queue executor: an O(D × total_ops) round-robin spin loop,

@@ -69,10 +69,10 @@
 use super::engine::{simulate_streams_lowered, StreamTables};
 use super::{
     assemble_result, memory_footprint, memory_footprint_from_counts, run_streams, simulate,
-    CompiledDag, Contention, CostModel, DagWeights, Engine, LinkTopology, NetworkImpl, SimConfig,
-    SimResult,
+    simulate_faulted, CompiledDag, Contention, CostModel, DagWeights, Engine, LinkTopology,
+    NetworkImpl, SimConfig, SimResult,
 };
-use crate::config::{ClusterConfig, ModelConfig, ParallelConfig};
+use crate::config::{ClusterConfig, FaultPlan, ModelConfig, ParallelConfig};
 use crate::schedule::{self, Schedule, ScheduleConfig, ScheduleKind, SyncPolicy};
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -1049,6 +1049,122 @@ pub fn grid_search_serial(
     Ok(points)
 }
 
+/// One point of a resilience sweep: a parallel layout run under the
+/// seeded fault trace of the given intensity.
+#[derive(Debug, Clone)]
+pub struct ResiliencePoint {
+    pub parallel: ParallelConfig,
+    pub intensity: f64,
+    /// The expanded trace the point replayed (empty at intensity 0).
+    pub plan: FaultPlan,
+    pub result: SimResult,
+}
+
+/// Sweep `layouts x intensities` under seeded fault traces: every point
+/// replays `FaultPlan::random(seed, intensity, horizon, d)` — the *same*
+/// trace for every layout sharing a D, so families are compared under
+/// identical weather. Points fan out over scoped worker threads with an
+/// atomic work-stealing cursor but are collected in canonical
+/// (layout-major, intensity-minor) order, so the output is bit-identical
+/// across thread counts; [`resilience_sweep_serial`] pins it.
+pub fn resilience_sweep(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    layouts: &[ParallelConfig],
+    intensities: &[f64],
+    seed: u64,
+    horizon: f64,
+) -> Result<Vec<ResiliencePoint>> {
+    let cands = resilience_candidates(layouts, intensities, seed, horizon)?;
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(cands.len().max(1));
+    if threads <= 1 || cands.len() <= 1 {
+        return cands
+            .into_iter()
+            .map(|(parallel, intensity, plan)| {
+                resilience_point(model, cluster, parallel, intensity, plan)
+            })
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut indexed: Vec<(usize, Result<ResiliencePoint>)> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let next = &next;
+            let cands = &cands;
+            handles.push(scope.spawn(move || {
+                let mut found = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cands.len() {
+                        break;
+                    }
+                    let (parallel, intensity, plan) = cands[i].clone();
+                    found.push((i, resilience_point(model, cluster, parallel, intensity, plan)));
+                }
+                found
+            }));
+        }
+        let mut all = Vec::new();
+        for h in handles {
+            all.extend(h.join().expect("resilience-sweep worker panicked"));
+        }
+        all
+    });
+    indexed.sort_by_key(|&(i, _)| i);
+    indexed.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Single-threaded [`resilience_sweep`] — the determinism oracle the
+/// threaded path must match bit for bit.
+pub fn resilience_sweep_serial(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    layouts: &[ParallelConfig],
+    intensities: &[f64],
+    seed: u64,
+    horizon: f64,
+) -> Result<Vec<ResiliencePoint>> {
+    resilience_candidates(layouts, intensities, seed, horizon)?
+        .into_iter()
+        .map(|(parallel, intensity, plan)| {
+            resilience_point(model, cluster, parallel, intensity, plan)
+        })
+        .collect()
+}
+
+/// Expand the candidate list with its fault traces up front (layout-major,
+/// intensity-minor — the canonical output order).
+fn resilience_candidates(
+    layouts: &[ParallelConfig],
+    intensities: &[f64],
+    seed: u64,
+    horizon: f64,
+) -> Result<Vec<(ParallelConfig, f64, FaultPlan)>> {
+    let mut cands = Vec::with_capacity(layouts.len() * intensities.len());
+    for &parallel in layouts {
+        for &intensity in intensities {
+            let plan = FaultPlan::random(seed, intensity, horizon, parallel.d)?;
+            cands.push((parallel, intensity, plan));
+        }
+    }
+    Ok(cands)
+}
+
+fn resilience_point(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    parallel: ParallelConfig,
+    intensity: f64,
+    plan: FaultPlan,
+) -> Result<ResiliencePoint> {
+    let cfg = SimConfig::new(*model, parallel, *cluster);
+    let result = simulate_faulted(&cfg, &plan)?;
+    Ok(ResiliencePoint { parallel, intensity, plan, result })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1067,6 +1183,39 @@ mod tests {
         for p in &pts {
             assert_eq!(p.parallel.total_devices(), 32);
             assert_eq!(p.parallel.minibatch_size(), 128);
+        }
+    }
+
+    #[test]
+    fn resilience_sweep_is_thread_count_invariant_and_monotone() {
+        let layouts = [
+            ParallelConfig::new(ScheduleKind::BitPipe, 1, 4, 4, 4),
+            ParallelConfig::new(ScheduleKind::Dapple, 1, 4, 4, 4),
+        ];
+        let intensities = [0.0, 0.5, 1.0];
+        let cluster = ClusterConfig::paper_testbed(4);
+        let par =
+            resilience_sweep(&BERT_64, &cluster, &layouts, &intensities, 7, 4.0).unwrap();
+        let ser =
+            resilience_sweep_serial(&BERT_64, &cluster, &layouts, &intensities, 7, 4.0).unwrap();
+        assert_eq!(par.len(), ser.len());
+        assert_eq!(par.len(), layouts.len() * intensities.len());
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.result.iter_time.to_bits(), b.result.iter_time.to_bits());
+            assert_eq!(a.plan, b.plan);
+        }
+        // Intensity 0 expands to an empty trace; higher intensity never
+        // speeds a layout up (per-layout slices are intensity-ascending).
+        for chunk in par.chunks(intensities.len()) {
+            assert!(chunk[0].plan.is_empty());
+            for w in chunk.windows(2) {
+                assert!(
+                    w[1].result.iter_time >= w[0].result.iter_time - 1e-12,
+                    "intensity {} faster than {}",
+                    w[1].intensity,
+                    w[0].intensity
+                );
+            }
         }
     }
 

@@ -70,10 +70,11 @@ mod memory;
 pub use cost::{BatchPricing, CostModel, LinkTopology, P2pEdge, RingHop};
 pub use dag::{CompiledDag, DagUnsupported, DagWeights, EdgeArena, ParkReason};
 pub use engine::{
-    simulate_schedule, simulate_schedule_contended, simulate_schedule_iters,
-    simulate_schedule_iters_contended, simulate_schedule_iters_network,
-    simulate_schedule_iters_with, simulate_schedule_network, simulate_schedule_with, Contention,
-    DeviceTrace, MultiIterTrace, NetworkImpl, SimError, SimTrace,
+    simulate_schedule, simulate_schedule_contended, simulate_schedule_faulted,
+    simulate_schedule_iters, simulate_schedule_iters_contended, simulate_schedule_iters_faulted,
+    simulate_schedule_iters_network, simulate_schedule_iters_with, simulate_schedule_network,
+    simulate_schedule_with, Contention, DeviceTrace, MultiIterTrace, NetworkImpl, SimError,
+    SimTrace,
 };
 /// Retired executor, compiled for differential tests only (unit tests,
 /// or integration tests via the `reference-sim` dev-feature).
@@ -82,12 +83,12 @@ pub use engine::simulate_schedule_reference;
 pub use gridsearch::{
     grid_search, grid_search_batched, grid_search_cached, grid_search_contended_cached,
     grid_search_contended_serial, grid_search_on_cluster, grid_search_opts,
-    grid_search_opts_baseline, grid_search_serial, DagCache, GridPoint, GridSpace, StreamCache,
-    RECOST_LANES,
+    grid_search_opts_baseline, grid_search_serial, resilience_sweep, resilience_sweep_serial,
+    DagCache, GridPoint, GridSpace, ResiliencePoint, StreamCache, RECOST_LANES,
 };
 pub use memory::{memory_footprint, memory_footprint_from_counts, MemoryFootprint};
 
-use crate::config::{ClusterConfig, ModelConfig, ParallelConfig};
+use crate::config::{ClusterConfig, FaultPlan, ModelConfig, ParallelConfig};
 use crate::metrics::IterStats;
 use crate::schedule::{self, Schedule};
 use anyhow::{bail, ensure, Result};
@@ -328,6 +329,83 @@ pub fn simulate_iters(cfg: &SimConfig, iters: usize, warmup: usize) -> Result<Mu
     })
 }
 
+/// Build the schedule for `cfg` and simulate one iteration while
+/// replaying `faults` (a [`FaultPlan`] of link-degradation windows,
+/// device slow-downs, and stalls). An empty plan takes exactly the
+/// [`simulate`] path — same backend resolution, bit-identical results. A
+/// non-empty plan requires the event backend: [`Engine::Auto`] routes
+/// there silently, [`Engine::Dag`] is rejected with a typed error (the
+/// compiled DAG prices a fixed weight table and cannot replay
+/// time-varying rates).
+pub fn simulate_faulted(cfg: &SimConfig, faults: &FaultPlan) -> Result<SimResult> {
+    if faults.is_empty() {
+        return simulate(cfg);
+    }
+    cfg.parallel.validate()?;
+    cfg.cluster.validate()?;
+    cfg.model.validate()?;
+    if cfg.engine == Engine::Dag {
+        bail!("the DAG backend cannot replay fault plans; use the event engine");
+    }
+    let sched: Schedule = schedule::build(&cfg.parallel.schedule())?;
+    faults.validate(sched.n_devices())?;
+    let costs = CostModel::new(&cfg.model, &cfg.parallel, &cfg.cluster);
+    let mode = if cfg.contention { Contention::Full } else { Contention::Off };
+    let trace =
+        engine::simulate_schedule_iters_faulted(&sched, &costs, 1, mode, cfg.network, faults)?;
+    let memory = memory_footprint(&sched, &cfg.model, &cfg.parallel);
+    Ok(assemble_result(
+        cfg.parallel.minibatch_size(),
+        sched.n_devices(),
+        &trace.devices,
+        trace.makespan,
+        memory,
+    ))
+}
+
+/// Multi-iteration variant of [`simulate_faulted`]: the fault clock is
+/// global to the run (a window at t=2.0 lands in whichever iteration is
+/// in flight then), so per-iteration times expose *which* iterations a
+/// fault disturbs.
+pub fn simulate_iters_faulted(
+    cfg: &SimConfig,
+    iters: usize,
+    warmup: usize,
+    faults: &FaultPlan,
+) -> Result<MultiIterResult> {
+    if faults.is_empty() {
+        return simulate_iters(cfg, iters, warmup);
+    }
+    ensure!(iters >= 1, "need at least one iteration (got {iters})");
+    ensure!(
+        warmup < iters,
+        "warmup ({warmup}) must leave at least one recorded iteration (iters {iters})"
+    );
+    cfg.parallel.validate()?;
+    cfg.cluster.validate()?;
+    cfg.model.validate()?;
+    if cfg.engine == Engine::Dag {
+        bail!("the DAG backend cannot replay fault plans; use the event engine");
+    }
+    let sched: Schedule = schedule::build(&cfg.parallel.schedule())?;
+    faults.validate(sched.n_devices())?;
+    let costs = CostModel::new(&cfg.model, &cfg.parallel, &cfg.cluster);
+    let mode = if cfg.contention { Contention::Full } else { Contention::Off };
+    let trace =
+        engine::simulate_schedule_iters_faulted(&sched, &costs, iters, mode, cfg.network, faults)?;
+    let iter_times = trace.iter_times();
+    let steady = IterStats::from_secs(&iter_times[warmup..]);
+    let steady_throughput = steady.throughput(cfg.parallel.minibatch_size());
+    Ok(MultiIterResult {
+        iters,
+        warmup,
+        iter_times,
+        steady,
+        steady_throughput,
+        total_time: trace.makespan,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -499,6 +577,43 @@ mod tests {
         assert!(simulate_iters(&bad, 2, 0).is_err());
         // Auto + contention silently routes to the event engine.
         assert!(simulate(&cfg.with_contention(true)).is_ok());
+    }
+
+    #[test]
+    fn dag_engine_rejects_fault_plans() {
+        let cfg = SimConfig::new(
+            BERT_64,
+            ParallelConfig::new(ScheduleKind::BitPipe, 1, 4, 4, 4),
+            ClusterConfig::paper_testbed(4),
+        );
+        let plan = FaultPlan::parse("dev:0:stall@0.5+0.1").unwrap();
+        let bad = cfg.with_engine(Engine::Dag);
+        assert!(simulate_faulted(&bad, &plan).is_err());
+        assert!(simulate_iters_faulted(&bad, 2, 0, &plan).is_err());
+        // Auto + faults silently routes to the event engine.
+        assert!(simulate_faulted(&cfg, &plan).is_ok());
+        // An empty plan keeps the DAG fast path (and its results).
+        assert!(simulate_faulted(&bad, &FaultPlan::empty()).is_ok());
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical_and_faults_never_speed_up() {
+        let cfg = SimConfig::new(
+            BERT_64,
+            ParallelConfig::new(ScheduleKind::BitPipe, 1, 8, 4, 8),
+            ClusterConfig::paper_testbed(8),
+        );
+        let base = simulate(&cfg).unwrap();
+        let empty = simulate_faulted(&cfg, &FaultPlan::empty()).unwrap();
+        assert_eq!(base.iter_time.to_bits(), empty.iter_time.to_bits());
+        let plan = FaultPlan::parse("link:ib:0.25@0.0..10.0,dev:3:slow:2.0@0.0..10.0").unwrap();
+        let hurt = simulate_faulted(&cfg, &plan).unwrap();
+        assert!(
+            hurt.iter_time >= base.iter_time,
+            "faulted {} < healthy {}",
+            hurt.iter_time,
+            base.iter_time
+        );
     }
 
     #[test]

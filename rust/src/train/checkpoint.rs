@@ -19,7 +19,7 @@ use super::optim::{Adam, AdamConfig};
 use crate::config::{parse_kv, KvExt};
 use anyhow::{ensure, Context, Result};
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// In-memory checkpoint: per model stage, (params, adam m, adam v).
 #[derive(Debug, Clone, Default)]
@@ -55,9 +55,19 @@ impl Checkpoint {
         Some((s.params.clone(), adam))
     }
 
+    /// Publish the checkpoint to `dir` atomically: the complete snapshot
+    /// is staged in a scratch sibling directory and swapped into place,
+    /// so a reader (or a restart after a crash mid-save) only ever
+    /// observes a fully written checkpoint — never a torn iteration
+    /// mixing old and new stage files. A previous snapshot at `dir`
+    /// survives any failure before the final swap.
     pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
         let dir = dir.as_ref();
-        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        let tmp = scratch_path(dir, "tmp");
+        let old = scratch_path(dir, "old");
+        let _ = std::fs::remove_dir_all(&tmp);
+        let _ = std::fs::remove_dir_all(&old);
+        std::fs::create_dir_all(&tmp).with_context(|| format!("creating {tmp:?}"))?;
         let mut meta = format!(
             "iteration={}\nadam_step={}\nn_stages={}\n",
             self.iteration,
@@ -68,12 +78,21 @@ impl Checkpoint {
         stages.sort_unstable();
         for k in stages {
             let s = &self.stages[&k];
-            write_f32(dir.join(format!("stage{k}.params.bin")), &s.params)?;
-            write_f32(dir.join(format!("stage{k}.m.bin")), &s.m)?;
-            write_f32(dir.join(format!("stage{k}.v.bin")), &s.v)?;
+            write_f32(tmp.join(format!("stage{k}.params.bin")), &s.params)?;
+            write_f32(tmp.join(format!("stage{k}.m.bin")), &s.m)?;
+            write_f32(tmp.join(format!("stage{k}.v.bin")), &s.v)?;
             meta.push_str(&format!("stage.{k}={}\n", s.params.len()));
         }
-        std::fs::write(dir.join("meta.txt"), meta)?;
+        // meta.txt last even inside the scratch dir: a snapshot without
+        // it is unambiguously incomplete.
+        std::fs::write(tmp.join("meta.txt"), meta)?;
+        if dir.exists() {
+            std::fs::rename(dir, &old)
+                .with_context(|| format!("retiring previous checkpoint {dir:?}"))?;
+        }
+        std::fs::rename(&tmp, dir)
+            .with_context(|| format!("publishing checkpoint to {dir:?}"))?;
+        let _ = std::fs::remove_dir_all(&old);
         Ok(())
     }
 
@@ -107,6 +126,16 @@ impl Checkpoint {
         ensure!(ckpt.stages.len() == want, "expected {want} stages, found {}", ckpt.stages.len());
         Ok(ckpt)
     }
+}
+
+/// Scratch sibling of `dir`: `ckpt` -> `ckpt.tmp` / `ckpt.old`.
+fn scratch_path(dir: &Path, suffix: &str) -> PathBuf {
+    let mut name = dir
+        .file_name()
+        .map(|s| s.to_os_string())
+        .unwrap_or_else(|| std::ffi::OsString::from("ckpt"));
+    name.push(format!(".{suffix}"));
+    dir.with_file_name(name)
 }
 
 fn write_f32(path: impl AsRef<Path>, data: &[f32]) -> Result<()> {
@@ -182,6 +211,31 @@ mod tests {
             adam_b.step(&mut p3, g);
         }
         assert_eq!(p1, p3, "resume diverged from uninterrupted run");
+    }
+
+    #[test]
+    fn save_is_atomic_swap() {
+        let dir = tmpdir("atomic");
+        let adam = Adam::new(AdamConfig::default(), 2);
+        let mut ckpt = Checkpoint { iteration: 1, ..Default::default() };
+        ckpt.put(0, vec![1.0, 2.0], &adam);
+        ckpt.save(&dir).unwrap();
+        // Overwriting re-publishes in place and leaves no scratch dirs.
+        ckpt.iteration = 2;
+        ckpt.put(0, vec![3.0, 4.0], &adam);
+        ckpt.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.iteration, 2);
+        assert_eq!(back.get(0, AdamConfig::default()).unwrap().0, vec![3.0, 4.0]);
+        assert!(!scratch_path(&dir, "tmp").exists(), "scratch dir left behind");
+        assert!(!scratch_path(&dir, "old").exists(), "retired dir left behind");
+        // A torn scratch dir from a crashed save never shadows the
+        // published snapshot and is cleaned up by the next save.
+        std::fs::create_dir_all(scratch_path(&dir, "tmp")).unwrap();
+        std::fs::write(scratch_path(&dir, "tmp").join("meta.txt"), "garbage").unwrap();
+        ckpt.save(&dir).unwrap();
+        assert!(Checkpoint::load(&dir).is_ok());
+        assert!(!scratch_path(&dir, "tmp").exists());
     }
 
     #[test]

@@ -27,7 +27,7 @@ pub mod data;
 pub mod optim;
 
 use crate::collective::{exchange_start, exchange_wait};
-use crate::comm::{Fabric, Tag};
+use crate::comm::{CommError, Fabric, Tag};
 use crate::metrics::Counters;
 use crate::runtime::{to_f32_vec, Executable, Runtime};
 use crate::schedule::{
@@ -76,8 +76,15 @@ pub struct TrainConfig {
     pub log_every: usize,
     /// Save a checkpoint here after the final iteration (None = off).
     pub save_to: Option<PathBuf>,
+    /// Also publish a complete snapshot to `save_to` every k iterations
+    /// (0 = only at the end). Snapshots are atomic — an interrupted run
+    /// always leaves a loadable checkpoint behind.
+    pub save_every: usize,
     /// Resume parameters + optimizer state from this checkpoint.
     pub resume_from: Option<PathBuf>,
+    /// Test hook: device `dev` fails at the start of iteration `iter`,
+    /// exercising the poison/fail-fast path end to end.
+    pub inject_fail: Option<(usize, usize)>,
     /// P2P receive timeout: how long a worker waits on the fabric before a
     /// schedule deadlock is reported as an error. Tests shrink this to a
     /// few seconds so a deadlock fails fast instead of hanging 30 s.
@@ -100,7 +107,9 @@ impl TrainConfig {
             seed: 42,
             log_every: 0,
             save_to: None,
+            save_every: 0,
             resume_from: None,
+            inject_fail: None,
             recv_timeout: crate::comm::RECV_TIMEOUT,
         }
     }
@@ -155,6 +164,94 @@ struct ChunkState {
 enum Stash {
     Tokens(Vec<i32>),
     Act(Vec<f32>),
+}
+
+/// Poisons the fabric on drop unless disarmed: a worker that exits by
+/// panic *or* error return wakes every peer blocked on `recv` promptly
+/// ([`CommError::Poisoned`]) instead of leaving them to burn the full
+/// receive timeout.
+struct PoisonGuard {
+    fabric: Fabric,
+    dev: usize,
+    armed: bool,
+}
+
+impl PoisonGuard {
+    fn new(fabric: Fabric, dev: usize) -> Self {
+        PoisonGuard { fabric, dev, armed: true }
+    }
+    fn disarm(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for PoisonGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            self.fabric.poison(self.dev);
+        }
+    }
+}
+
+/// Collects one complete parameter/optimizer snapshot per save boundary
+/// from every worker and publishes it — atomically, via
+/// [`checkpoint::Checkpoint::save`] — once the last worker has
+/// contributed. Mid-run checkpoints therefore never mix iterations: each
+/// worker contributes its own chunks exactly at its own iteration
+/// boundary, and nothing is written until the snapshot is whole.
+struct CheckpointSink {
+    dir: PathBuf,
+    n_workers: usize,
+    /// iteration -> (accumulating snapshot, workers contributed).
+    pending: Mutex<HashMap<usize, (checkpoint::Checkpoint, usize)>>,
+    /// Highest iteration already published (free-running workers can
+    /// complete an older boundary after a newer one; never regress).
+    published: Mutex<usize>,
+}
+
+impl CheckpointSink {
+    fn new(dir: PathBuf, n_workers: usize) -> Self {
+        CheckpointSink {
+            dir,
+            n_workers,
+            pending: Mutex::new(HashMap::new()),
+            published: Mutex::new(0),
+        }
+    }
+
+    /// Record one worker's chunks as of completed (global) iteration
+    /// `iteration`; the contribution completing the snapshot publishes it.
+    fn contribute(
+        &self,
+        iteration: usize,
+        chunks: &HashMap<(PipeId, StageId), ChunkState>,
+    ) -> Result<()> {
+        let ready = {
+            let mut pending = self.pending.lock().unwrap();
+            let entry = pending
+                .entry(iteration)
+                .or_insert_with(|| (checkpoint::Checkpoint { iteration, ..Default::default() }, 0));
+            for ((_, stage), chunk) in chunks {
+                entry.0.put(*stage, chunk.params.clone(), &chunk.adam);
+            }
+            entry.1 += 1;
+            if entry.1 == self.n_workers {
+                pending.remove(&iteration).map(|(snap, _)| snap)
+            } else {
+                None
+            }
+        };
+        if let Some(snap) = ready {
+            let mut published = self.published.lock().unwrap();
+            if iteration > *published {
+                snap.save(&self.dir).with_context(|| {
+                    format!("publishing mid-run checkpoint to {:?}", self.dir)
+                })?;
+                *published = iteration;
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Run a real training job. Spawns `cfg.d` worker threads, each executing
@@ -212,6 +309,10 @@ pub fn run(cfg: &TrainConfig) -> Result<TrainReport> {
     let base_iter = resume.as_ref().map_or(0, |c| c.iteration);
     let final_state: Arc<Mutex<checkpoint::Checkpoint>> =
         Arc::new(Mutex::new(checkpoint::Checkpoint::default()));
+    let sink: Option<Arc<CheckpointSink>> = match (&cfg.save_to, cfg.save_every) {
+        (Some(dir), k) if k > 0 => Some(Arc::new(CheckpointSink::new(dir.clone(), cfg.d))),
+        _ => None,
+    };
     let start = Instant::now();
 
     let peak_stash = std::thread::scope(|scope| -> Result<Vec<usize>> {
@@ -226,7 +327,12 @@ pub fn run(cfg: &TrainConfig) -> Result<TrainReport> {
             let dataset = dataset.clone();
             let resume = resume.clone();
             let final_state = final_state.clone();
+            let sink = sink.clone();
             handles.push(scope.spawn(move || -> Result<usize> {
+                // Any exit without disarming — a panic or an error return
+                // — poisons the fabric so peers fail fast instead of
+                // waiting out their receive timeout on a dead sender.
+                let guard = PoisonGuard::new(fabric.clone(), dev);
                 let mut w = Worker::new(
                     dev,
                     cfg,
@@ -239,6 +345,9 @@ pub fn run(cfg: &TrainConfig) -> Result<TrainReport> {
                 )?;
                 w.base_iter = base_iter;
                 for iter in 0..cfg.steps {
+                    if cfg.inject_fail == Some((dev, iter)) {
+                        bail!("injected failure on device {dev} at iteration {iter} (test hook)");
+                    }
                     let t0 = Instant::now();
                     w.run_iteration(iter)
                         .with_context(|| format!("device {dev}, iteration {iter}"))?;
@@ -264,6 +373,11 @@ pub fn run(cfg: &TrainConfig) -> Result<TrainReport> {
                             );
                         }
                     }
+                    if let Some(sink) = &sink {
+                        if (iter + 1) % cfg.save_every == 0 && iter + 1 < cfg.steps {
+                            sink.contribute(base_iter + iter + 1, &w.chunks)?;
+                        }
+                    }
                     let _ = iter;
                 }
                 if cfg.save_to.is_some() {
@@ -272,12 +386,40 @@ pub fn run(cfg: &TrainConfig) -> Result<TrainReport> {
                         out.put(*stage, chunk.params.clone(), &chunk.adam);
                     }
                 }
+                guard.disarm();
                 Ok(w.peak_stash)
             }));
         }
+        // Surface the root cause, not the collateral: a dead worker
+        // poisons the fabric, so every peer reports Poisoned — prefer the
+        // one error that is *not* a poison echo.
         let mut peaks = Vec::new();
+        let mut root: Option<anyhow::Error> = None;
+        let mut collateral: Option<anyhow::Error> = None;
         for h in handles {
-            peaks.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
+            match h.join() {
+                Err(_) => {
+                    if root.is_none() {
+                        root = Some(anyhow::anyhow!("worker panicked"));
+                    }
+                }
+                Ok(Ok(p)) => peaks.push(p),
+                Ok(Err(e)) => {
+                    let poisoned = e.chain().any(|c| {
+                        matches!(c.downcast_ref::<CommError>(), Some(CommError::Poisoned { .. }))
+                    });
+                    if poisoned {
+                        if collateral.is_none() {
+                            collateral = Some(e);
+                        }
+                    } else if root.is_none() {
+                        root = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = root.or(collateral) {
+            return Err(e);
         }
         Ok(peaks)
     })?;

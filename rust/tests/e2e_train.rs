@@ -152,6 +152,63 @@ fn checkpoint_resume_is_bit_exact() {
 }
 
 #[test]
+fn worker_death_fails_fast_not_on_timeout() {
+    // When one worker dies, its PoisonGuard poisons the fabric and every
+    // peer blocked in recv aborts immediately — the run must fail well
+    // under the recv timeout, and the reported error must be the root
+    // cause (the dead worker), not a peer's collateral Poisoned error.
+    let Some(mut cfg) = base_cfg(ScheduleKind::BitPipe, 4, 4, 3) else { return };
+    cfg.recv_timeout = std::time::Duration::from_secs(30);
+    cfg.inject_fail = Some((2, 1)); // device 2 dies entering iteration 1
+    let start = std::time::Instant::now();
+    let err = run(&cfg).expect_err("run with a dead worker must fail");
+    let elapsed = start.elapsed();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("injected failure"),
+        "expected the root-cause error, got: {msg}"
+    );
+    assert!(
+        elapsed < std::time::Duration::from_secs(10),
+        "fail-fast took {elapsed:?} — peers waited toward the 30 s timeout"
+    );
+}
+
+#[test]
+fn recovery_from_mid_run_checkpoint_is_bit_exact() {
+    // Kill a worker mid-run; the periodic checkpoint published before the
+    // crash must be complete (atomic swap) and resuming from it must
+    // finish identically to the uninterrupted run.
+    let Some(mut cfg_full) = base_cfg(ScheduleKind::BitPipe, 4, 4, 4) else { return };
+    cfg_full.adam.lr = 2e-3;
+    let full = run(&cfg_full).unwrap();
+
+    let dir = std::env::temp_dir().join("bitpipe_e2e_recovery");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg_crash = cfg_full.clone();
+    cfg_crash.save_to = Some(dir.clone());
+    cfg_crash.save_every = 2;
+    cfg_crash.inject_fail = Some((0, 3)); // dies after the iter-2 snapshot
+    run(&cfg_crash).expect_err("injected crash must surface");
+
+    // The snapshot on disk is the complete iteration-2 state.
+    let ckpt = bitpipe::train::checkpoint::Checkpoint::load(&dir).unwrap();
+    assert_eq!(ckpt.iteration, 2, "published snapshot is not the iter-2 boundary");
+
+    let mut cfg_resume = cfg_full.clone();
+    cfg_resume.steps = 2;
+    cfg_resume.resume_from = Some(dir.clone());
+    let tail = run(&cfg_resume).unwrap();
+    for (i, (a, b)) in full.losses[2..].iter().zip(&tail.losses).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-6,
+            "iter {}: uninterrupted {a:.6} vs recovered {b:.6}",
+            i + 2
+        );
+    }
+}
+
+#[test]
 fn eager_and_lazy_sync_same_numerics() {
     use bitpipe::schedule::SyncPolicy;
     let Some(cfg_e) = base_cfg(ScheduleKind::BitPipe, 4, 4, 2) else { return };

@@ -1,0 +1,278 @@
+//! Fault-injection battery: the three guarantees the fault subsystem
+//! makes (`rust/src/sim/engine.rs` § Fault injection).
+//!
+//! 1. **Empty-plan identity** — replaying an empty [`FaultPlan`] is
+//!    bit-identical to the plain engine on every mode and settlement
+//!    strategy (the engine attaches no fault state at all), so the golden
+//!    makespans and every pre-PR ordering stand untouched.
+//! 2. **Determinism** — a fixed plan (explicit or seeded) produces
+//!    bitwise-identical traces across repeated runs and across thread
+//!    counts: traces are expanded before the run and the event order is
+//!    total.
+//! 3. **Monotonicity** — faults only ever slow things down: faulted
+//!    makespan >= healthy makespan across the full family x D x N ladder
+//!    (mirroring `contention.rs`), and the seeded generator's
+//!    prefix-monotone intensity ladder never speeds an uncontended run up.
+
+use bitpipe::config::{
+    ClusterConfig, FaultEvent, FaultPlan, FaultTarget, LinkKind, ParallelConfig, BERT_64,
+};
+use bitpipe::schedule::{build, ScheduleConfig, ScheduleKind};
+use bitpipe::sim::{
+    simulate_schedule_iters_faulted, simulate_schedule_iters_network, Contention, CostModel,
+    MultiIterTrace, NetworkImpl,
+};
+
+fn assert_traces_identical(tag: &str, a: &MultiIterTrace, b: &MultiIterTrace) {
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{tag}: makespan");
+    for (x, y) in a.iter_finish.iter().zip(&b.iter_finish) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: iteration boundary");
+    }
+    for (dev, (x, y)) in a.devices.iter().zip(&b.devices).enumerate() {
+        assert_eq!(x.finish.to_bits(), y.finish.to_bits(), "{tag}: dev {dev} finish");
+        assert_eq!(
+            x.compute_busy.to_bits(),
+            y.compute_busy.to_bits(),
+            "{tag}: dev {dev} compute_busy"
+        );
+        assert_eq!(
+            x.recv_blocked.to_bits(),
+            y.recv_blocked.to_bits(),
+            "{tag}: dev {dev} recv_blocked"
+        );
+    }
+}
+
+/// An explicit plan scaled into a run of makespan `m`: a flapping IB
+/// window, one slowed device, one mid-run stall — every fault shape, all
+/// overlapping actual execution.
+fn plan_within(m: f64, d: usize) -> FaultPlan {
+    FaultPlan::from_events(vec![
+        FaultEvent::LinkDegrade {
+            target: FaultTarget::LinkClass(LinkKind::InfiniBand),
+            mult: 0.25,
+            t_start: 0.1 * m,
+            t_end: 0.7 * m,
+        },
+        FaultEvent::DeviceSlow { dev: d - 1, mult: 1.5, t_start: 0.0, t_end: 0.5 * m },
+        FaultEvent::DeviceStall { dev: 0, t: 0.3 * m, dur: 0.2 * m },
+    ])
+}
+
+#[test]
+fn empty_plan_is_bit_identical_on_every_mode() {
+    let empty = FaultPlan::empty();
+    for kind in ScheduleKind::ALL {
+        for d in [4usize, 8] {
+            for n in [8usize, 16] {
+                if n < d {
+                    continue;
+                }
+                let s = build(&ScheduleConfig::new(kind, d, n)).unwrap();
+                let p = ParallelConfig::new(kind, 1, d, 4, n);
+                let costs = CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(d));
+                for (mode, net) in [
+                    (Contention::Off, NetworkImpl::Incremental),
+                    (Contention::P2pOnly, NetworkImpl::Incremental),
+                    (Contention::Full, NetworkImpl::Incremental),
+                    (Contention::Full, NetworkImpl::Global),
+                ] {
+                    let base = simulate_schedule_iters_network(&s, &costs, 2, mode, net).unwrap();
+                    let faulted =
+                        simulate_schedule_iters_faulted(&s, &costs, 2, mode, net, &empty).unwrap();
+                    let tag = format!("{kind} D={d} N={n} {mode:?}/{net:?}");
+                    assert_traces_identical(&tag, &base, &faulted);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn explicit_plan_is_deterministic_across_runs_and_threads() {
+    let (kind, d, n) = (ScheduleKind::BitPipe, 8usize, 16usize);
+    let s = build(&ScheduleConfig::new(kind, d, n)).unwrap();
+    let p = ParallelConfig::new(kind, 1, d, 4, n);
+    let costs = CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(d));
+    let healthy =
+        simulate_schedule_iters_network(&s, &costs, 2, Contention::Off, NetworkImpl::default())
+            .unwrap();
+    let plan = plan_within(healthy.makespan, d);
+
+    for (mode, net) in [
+        (Contention::Off, NetworkImpl::Incremental),
+        (Contention::Full, NetworkImpl::Incremental),
+        (Contention::Full, NetworkImpl::Global),
+    ] {
+        let reference =
+            simulate_schedule_iters_faulted(&s, &costs, 2, mode, net, &plan).unwrap();
+        // Repeated runs in this thread.
+        for run in 0..3 {
+            let again = simulate_schedule_iters_faulted(&s, &costs, 2, mode, net, &plan).unwrap();
+            assert_traces_identical(&format!("{mode:?}/{net:?} rerun {run}"), &reference, &again);
+        }
+        // Concurrent runs on fresh threads, each rebuilding everything
+        // from scratch — the bits may not depend on thread identity,
+        // scheduling, or allocator state.
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let plan = plan.clone();
+                std::thread::spawn(move || {
+                    let s = build(&ScheduleConfig::new(kind, d, n)).unwrap();
+                    let p = ParallelConfig::new(kind, 1, d, 4, n);
+                    let costs = CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(d));
+                    simulate_schedule_iters_faulted(&s, &costs, 2, mode, net, &plan)
+                        .unwrap()
+                        .makespan
+                        .to_bits()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(
+                h.join().unwrap(),
+                reference.makespan.to_bits(),
+                "{mode:?}/{net:?}: thread run diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn seeded_traces_are_reproducible_and_prefix_monotone() {
+    for seed in [0u64, 7, 123456789] {
+        let a = FaultPlan::random(seed, 0.7, 4.0, 8).unwrap();
+        let b = FaultPlan::random(seed, 0.7, 4.0, 8).unwrap();
+        assert_eq!(a, b, "seed {seed}: generator not reproducible");
+        // A lower intensity draws a prefix of the same candidates.
+        let lo = FaultPlan::random(seed, 0.3, 4.0, 8).unwrap();
+        assert!(lo.events.len() <= a.events.len());
+    }
+    assert!(FaultPlan::random(1, 0.0, 4.0, 8).unwrap().is_empty());
+    // Replaying the same seeded trace is bit-deterministic end to end.
+    let (kind, d, n) = (ScheduleKind::ZeroBubble, 4usize, 8usize);
+    let s = build(&ScheduleConfig::new(kind, d, n)).unwrap();
+    let p = ParallelConfig::new(kind, 1, d, 4, n);
+    let costs = CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(d));
+    let plan = FaultPlan::random(99, 0.8, 1.0, d).unwrap();
+    let r1 = simulate_schedule_iters_faulted(
+        &s,
+        &costs,
+        2,
+        Contention::Full,
+        NetworkImpl::Incremental,
+        &plan,
+    )
+    .unwrap();
+    let r2 = simulate_schedule_iters_faulted(
+        &s,
+        &costs,
+        2,
+        Contention::Full,
+        NetworkImpl::Incremental,
+        &plan,
+    )
+    .unwrap();
+    assert_traces_identical("seeded replay", &r1, &r2);
+}
+
+#[test]
+fn faulted_makespan_never_beats_healthy_across_family_ladder() {
+    for kind in ScheduleKind::ALL {
+        for d in [4usize, 8] {
+            for n in [d, 2 * d] {
+                let s = build(&ScheduleConfig::new(kind, d, n)).unwrap();
+                let p = ParallelConfig::new(kind, 1, d, 4, n);
+                let costs = CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(d));
+                for (mode, net) in [
+                    (Contention::Off, NetworkImpl::Incremental),
+                    (Contention::Full, NetworkImpl::Incremental),
+                ] {
+                    let healthy =
+                        simulate_schedule_iters_network(&s, &costs, 1, mode, net).unwrap();
+                    let plan = plan_within(healthy.makespan, d);
+                    let hurt =
+                        simulate_schedule_iters_faulted(&s, &costs, 1, mode, net, &plan).unwrap();
+                    assert!(
+                        hurt.makespan >= healthy.makespan * (1.0 - 1e-12),
+                        "{kind} D={d} N={n} {mode:?}: faulted {} < healthy {}",
+                        hurt.makespan,
+                        healthy.makespan
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn seeded_intensity_ladder_is_monotone_uncontended() {
+    for kind in [ScheduleKind::Dapple, ScheduleKind::BitPipe, ScheduleKind::ZeroBubble] {
+        let (d, n) = (4usize, 8usize);
+        let s = build(&ScheduleConfig::new(kind, d, n)).unwrap();
+        let p = ParallelConfig::new(kind, 1, d, 4, n);
+        let costs = CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(d));
+        let horizon = simulate_schedule_iters_network(
+            &s,
+            &costs,
+            1,
+            Contention::Off,
+            NetworkImpl::default(),
+        )
+        .unwrap()
+        .makespan;
+        let mut prev = f64::NEG_INFINITY;
+        for intensity in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let plan = FaultPlan::random(9, intensity, horizon, d).unwrap();
+            let r = simulate_schedule_iters_faulted(
+                &s,
+                &costs,
+                1,
+                Contention::Off,
+                NetworkImpl::default(),
+                &plan,
+            )
+            .unwrap();
+            assert!(
+                r.makespan >= prev - 1e-12,
+                "{kind}: intensity {intensity} makespan {} < previous {prev}",
+                r.makespan
+            );
+            prev = r.makespan;
+        }
+    }
+}
+
+#[test]
+fn stall_on_idle_device_is_free_and_plans_validate() {
+    // A stall entirely before a device's first dispatch (or after its
+    // last) costs nothing: the clock pin maxes against `now`.
+    let (kind, d, n) = (ScheduleKind::Dapple, 4usize, 4usize);
+    let s = build(&ScheduleConfig::new(kind, d, n)).unwrap();
+    let p = ParallelConfig::new(kind, 1, d, 4, n);
+    let costs = CostModel::new(&BERT_64, &p, &ClusterConfig::paper_testbed(d));
+    let healthy =
+        simulate_schedule_iters_network(&s, &costs, 1, Contention::Off, NetworkImpl::default())
+            .unwrap();
+    // Device d-1 (last stage) starts late: a tiny stall at t=0 is absorbed.
+    let free = FaultPlan::from_events(vec![FaultEvent::DeviceStall {
+        dev: d - 1,
+        t: 0.0,
+        dur: 1e-6,
+    }]);
+    let r = simulate_schedule_iters_faulted(
+        &s,
+        &costs,
+        1,
+        Contention::Off,
+        NetworkImpl::default(),
+        &free,
+    )
+    .unwrap();
+    assert_eq!(r.makespan.to_bits(), healthy.makespan.to_bits(), "absorbed stall re-timed run");
+
+    // Validation rejects speed-ups and out-of-range devices.
+    assert!(FaultPlan::parse("link:ib:1.5@0.0..1.0").unwrap().validate(d).is_err());
+    assert!(FaultPlan::parse("dev:0:slow:0.5@0.0..1.0").unwrap().validate(d).is_err());
+    assert!(FaultPlan::parse("dev:9:stall@0.5+0.1").unwrap().validate(4).is_err());
+}
